@@ -1,0 +1,55 @@
+//! §3.4 ablation: why the IdCache cannot be a Bloom filter.
+//!
+//! The paper rejects Bloom filters for the identity-mapping set because a
+//! false positive returns data from the *wrong device address* — a silent
+//! correctness violation, not a performance miss. This driver quantifies
+//! that: it builds the identity set of a Trimma system at several capacity
+//! ratios, inserts it into a Bloom filter with the same SRAM budget as the
+//! iRC IdCache (16 kB), and counts how many *moved* (non-identity) blocks
+//! the filter would misclassify as identity.
+//!
+//! ```sh
+//! cargo run --release --example bloom_ablation
+//! ```
+
+use trimma::metadata::bloom::BloomIdFilter;
+use trimma::types::Rng64;
+
+fn main() {
+    println!("== Bloom-filter-as-IdCache ablation (paper §3.4) ==\n");
+    println!(
+        "{:<8} {:>14} {:>12} {:>14} {:>18}",
+        "ratio", "identity_set", "fpr", "moved_blocks", "wrong-data reads"
+    );
+    for ratio in [8u64, 16, 32, 64] {
+        let fast_blocks = (16u64 << 20) / 256;
+        let slow_blocks = fast_blocks * ratio;
+        // Typical steady state: ~2x fast-blocks entries are non-identity
+        // (forward + inverted); the rest of the slow tier is identity.
+        let moved = 2 * fast_blocks;
+        let identity = slow_blocks - fast_blocks;
+
+        // iRC IdCache budget in Table 1: 256 sets x 16 ways x 4 B ~ 16 kB.
+        let mut filter = BloomIdFilter::new(16 << 10, 4);
+        let mut rng = Rng64::new(ratio);
+        for _ in 0..identity {
+            filter.insert(rng.next_u64() | 1);
+        }
+        // Probe with keys disjoint from the inserted set (even keys).
+        let fpr = filter.measured_fpr((0..100_000u64).map(|i| i * 2));
+        let wrong = (moved as f64 * fpr) as u64;
+        println!(
+            "{:<8} {:>14} {:>11.1}% {:>14} {:>18}",
+            format!("{ratio}:1"),
+            identity,
+            fpr * 100.0,
+            moved,
+            wrong
+        );
+    }
+    println!(
+        "\nEvery 'wrong-data read' is a silent correctness violation — reads\n\
+         served from a stale address. The sector-cache IdCache never false-\n\
+         positives (explicit tags), which is why Trimma uses it instead."
+    );
+}

@@ -1,0 +1,28 @@
+//! Regenerate any paper figure from the library API (the CLI's
+//! `trimma sweep` exposes the same thing; this example shows the
+//! programmatic route).
+//!
+//! ```sh
+//! cargo run --release --example figures -- fig9 0.1
+//! ```
+
+use trimma::coordinator::figures;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fig = args.first().map(String::as_str).unwrap_or("fig9");
+    let scale: f64 = args.get(1).map(|s| s.parse().expect("scale")).unwrap_or(0.1);
+    println!("regenerating {fig} at scale {scale} ...");
+    match figures::run_figure(fig, scale, 0) {
+        Some(tables) => {
+            for t in tables {
+                println!("{}", t.markdown());
+            }
+            println!("(CSV written under results/)");
+        }
+        None => {
+            eprintln!("unknown figure '{fig}'. known: {:?}", figures::ALL_FIGURES);
+            std::process::exit(2);
+        }
+    }
+}

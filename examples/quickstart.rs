@@ -1,0 +1,33 @@
+//! Quickstart: build a Trimma-C system on HBM3+DDR5, run PageRank, and
+//! print the headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::sim::Simulation;
+use trimma::workloads;
+
+fn main() {
+    // A preset mirroring the paper's Table 1 (scaled capacities, 32:1).
+    let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+    cfg.workload.accesses_per_core = 200_000;
+    cfg.workload.warmup_per_core = 50_000;
+
+    let wl = workloads::by_name("gap_pr", &cfg).expect("workload");
+    println!("running gap_pr on {} ...", cfg.name);
+    let report = Simulation::new(&cfg, wl).run();
+
+    let s = &report.stats;
+    println!("performance (IPC proxy): {:.4}", report.performance());
+    println!("fast-mem serve rate:     {:.1}%", s.fast_serve_rate() * 100.0);
+    println!("remap-cache hit rate:    {:.1}%", s.rc_hit_rate() * 100.0);
+    println!(
+        "metadata resident:       {:.1}% of reserved ({} slots donated as cache)",
+        s.metadata_occupancy() * 100.0,
+        s.donated_slots
+    );
+    let (m, f, sl) = s.amat_breakdown();
+    println!("AMAT (meta/fast/slow):   {m:.1} / {f:.1} / {sl:.1} cycles");
+}

@@ -1,0 +1,64 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/).
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+
+    lowered = jax.jit(model.trace_batch).lower(*model.example_args())
+    p = out_dir / "trace_gen.hlo.txt"
+    p.write_text(to_hlo_text(lowered))
+    written.append(p)
+
+    lowered = jax.jit(model.hotness).lower(*model.hotness_example_args())
+    p = out_dir / "hotness.hlo.txt"
+    p.write_text(to_hlo_text(lowered))
+    written.append(p)
+
+    # Shape manifest for the rust loader (hand-parsed: no serde offline).
+    manifest = out_dir / "manifest.txt"
+    manifest.write_text(
+        "trace_gen streams={s} steps={t} regions=4\n"
+        "hotness buckets={b}\n".format(
+            s=model.STREAMS, t=model.STEPS, b=model.HOT_BUCKETS
+        )
+    )
+    written.append(manifest)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    for p in build_artifacts(pathlib.Path(args.out)):
+        print(f"wrote {p} ({p.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracle for the trace-generation kernel.
+
+This is the correctness ground truth: the Pallas kernel in
+``trace_gen.py`` must reproduce these outputs exactly (all-integer fields
+bit-for-bit; the zipf rank uses one f32 ``pow`` and matches because both
+paths lower to the same XLA op).
+
+The algorithm is the stateless counter-based generator of
+``rust/src/workloads/synth.rs`` — see that module's docs for the design.
+"""
+
+import jax.numpy as jnp
+
+# Number of (padded) region slots every profile is encoded into.
+MAX_REGIONS = 4
+
+
+def lowbias32(x):
+    """The low-bias 32-bit integer hash (u32 in, u32 out)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def trace_gen_ref(
+    streams,      # u32[S]   stream ids
+    step0,        # u32[1]   base step of this batch
+    slice_base,   # u32[S]   per-stream slice base, in 64 B lines
+    cum_w,        # f32[R]   cumulative region weights (increasing, last=1)
+    base_line,    # u32[R]   region base, in lines
+    lines,        # u32[R]   region size, in lines
+    runs,         # u32[R]   region size, in runs (lines / run_len)
+    wruns,        # u32[R]   per-epoch working-set size, in runs
+    alpha,        # f32[R]   zipf exponent 1/(1-theta)
+    seq,          # u32[R]   1 = streaming sweep, 0 = zipf runs
+    params,       # u32[6]   [run_len, write_threshold, gap_mod,
+                  #           n_regions, epoch_runs, 0]
+    steps,        # static: batch length T
+):
+    """Generate a (S, T) tile of accesses.
+
+    Returns (addr_line u32[S,T], is_write u32[S,T], gap u32[S,T]).
+    """
+    run_len = params[0]
+    write_thresh = params[1]
+    gap_mod = jnp.maximum(params[2], jnp.uint32(1))
+
+    s = streams[:, None].astype(jnp.uint32)                      # (S,1)
+    t = step0[0] + jnp.arange(steps, dtype=jnp.uint32)[None, :]  # (1,T)
+
+    run_id = t // run_len
+    pos = t % run_len
+
+    stream_key = lowbias32(s * jnp.uint32(0x9E3779B9) + jnp.uint32(1))
+    h1 = lowbias32(stream_key ^ lowbias32(run_id))
+    h2 = lowbias32(h1 ^ jnp.uint32(0x9E3779B9))
+    h3 = lowbias32(h2 ^ jnp.uint32(0x85EBCA6B))
+
+    # Region pick: first index with u_r < cum_w (== count of cum_w <= u_r).
+    u_r = h1.astype(jnp.float32) / jnp.float32(4294967296.0)
+    n_regions = params[3].astype(jnp.int32)
+    ge = (u_r[..., None] >= cum_w[None, None, :]).astype(jnp.int32)
+    ri = jnp.minimum(ge.sum(-1), n_regions - 1)                  # (S,T)
+
+    g_base = base_line[ri]
+    g_lines = lines[ri]
+    g_runs = runs[ri]
+    g_wruns = wruns[ri]
+    g_alpha = alpha[ri]
+    g_seq = seq[ri]
+
+    # Streaming sweep line.
+    seq_line = (run_id * run_len + pos) % g_lines
+    # Zipf (continuous pareto) rank over the epoch's working set, then a
+    # stateless hash scatter over the whole region: the epoch salt shifts
+    # the working set periodically (phased reuse), the hash spreads hot
+    # runs across the address space (collisions merge popularity mass and
+    # preserve the skew).
+    u = (h2 >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(16777216.0)
+    wrank = (g_wruns.astype(jnp.float32) * jnp.power(u, g_alpha)).astype(jnp.uint32)
+    epoch = run_id // jnp.maximum(params[4], jnp.uint32(1))
+    salt = lowbias32(
+        epoch
+        ^ (ri.astype(jnp.uint32) * jnp.uint32(0x01000193))
+        ^ jnp.uint32(0x5EED5EED)
+    )
+    scattered = lowbias32(wrank ^ salt) % g_runs
+    zipf_line = (scattered * run_len + pos) % g_lines
+
+    line = jnp.where(g_seq != 0, seq_line, zipf_line)
+    addr_line = slice_base[:, None] + g_base + line
+
+    is_write = ((h3 & jnp.uint32(0xFFFF)) < write_thresh).astype(jnp.uint32)
+    gap = (h3 >> jnp.uint32(16)) % gap_mod
+    return addr_line, is_write, gap

@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: the trace-generation hot spot.
+
+The whole (streams x steps) tile is evaluated in one kernel invocation —
+the generator is stateless per (stream, step), so there is no sequential
+dependence to serialize on.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the per-element pipeline is
+pure VPU work (integer hash rounds + one f32 ``pow``); the small region
+tables (4 entries each) live in VMEM alongside the (S, T) tile. The grid
+tiles the step axis in TILE_T-sized chunks so arbitrarily long batches
+stream through VMEM. ``interpret=True`` is mandatory on this CPU-only
+image — real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin
+cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Step-axis tile: 8 * 128-lane friendly.
+TILE_T = 1024
+
+
+def _kernel(
+    streams_ref,
+    step0_ref,
+    slice_base_ref,
+    cum_w_ref,
+    base_line_ref,
+    lines_ref,
+    runs_ref,
+    wruns_ref,
+    alpha_ref,
+    seq_ref,
+    params_ref,
+    addr_ref,
+    write_ref,
+    gap_ref,
+):
+    """One (S, TILE_T) tile of the generator."""
+    tile = pl.program_id(0)
+    run_len = params_ref[0]
+    write_thresh = params_ref[1]
+    gap_mod = jnp.maximum(params_ref[2], jnp.uint32(1))
+    n_regions = params_ref[3].astype(jnp.int32)
+
+    s = streams_ref[...][:, None]  # (S,1)
+    t0 = step0_ref[0] + jnp.uint32(tile * TILE_T)
+    t = t0 + jax.lax.broadcasted_iota(jnp.uint32, (1, TILE_T), 1)
+
+    run_id = t // run_len
+    pos = t % run_len
+
+    stream_key = ref.lowbias32(s * jnp.uint32(0x9E3779B9) + jnp.uint32(1))
+    h1 = ref.lowbias32(stream_key ^ ref.lowbias32(run_id))
+    h2 = ref.lowbias32(h1 ^ jnp.uint32(0x9E3779B9))
+    h3 = ref.lowbias32(h2 ^ jnp.uint32(0x85EBCA6B))
+
+    u_r = h1.astype(jnp.float32) / jnp.float32(4294967296.0)
+    cum_w = cum_w_ref[...]
+    ge = (u_r[..., None] >= cum_w[None, None, :]).astype(jnp.int32)
+    ri = jnp.minimum(ge.sum(-1), n_regions - 1)
+
+    g_base = base_line_ref[...][ri]
+    g_lines = lines_ref[...][ri]
+    g_runs = runs_ref[...][ri]
+    g_wruns = wruns_ref[...][ri]
+    g_alpha = alpha_ref[...][ri]
+    g_seq = seq_ref[...][ri]
+
+    seq_line = (run_id * run_len + pos) % g_lines
+    u = (h2 >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(16777216.0)
+    wrank = (g_wruns.astype(jnp.float32) * jnp.power(u, g_alpha)).astype(jnp.uint32)
+    epoch = run_id // jnp.maximum(params_ref[4], jnp.uint32(1))
+    salt = ref.lowbias32(
+        epoch
+        ^ (ri.astype(jnp.uint32) * jnp.uint32(0x01000193))
+        ^ jnp.uint32(0x5EED5EED)
+    )
+    scattered = ref.lowbias32(wrank ^ salt) % g_runs
+    zipf_line = (scattered * run_len + pos) % g_lines
+
+    line = jnp.where(g_seq != 0, seq_line, zipf_line)
+    addr_ref[...] = slice_base_ref[...][:, None] + g_base + line
+    write_ref[...] = ((h3 & jnp.uint32(0xFFFF)) < write_thresh).astype(jnp.uint32)
+    gap_ref[...] = (h3 >> jnp.uint32(16)) % gap_mod
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def trace_gen(
+    streams, step0, slice_base, cum_w, base_line, lines, runs, wruns, alpha,
+    seq, params, *, steps,
+):
+    """Pallas-backed trace generation; same contract as ref.trace_gen_ref."""
+    if steps % TILE_T != 0:
+        raise ValueError(f"steps must be a multiple of {TILE_T}")
+    n_streams = streams.shape[0]
+    grid = (steps // TILE_T,)
+    tile = (n_streams, TILE_T)
+    out_shape = [jax.ShapeDtypeStruct((n_streams, steps), jnp.uint32)] * 3
+
+    small = lambda n: pl.BlockSpec((n,), lambda i: (0,))  # noqa: E731
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            small(n_streams),          # streams
+            small(1),                  # step0
+            small(n_streams),          # slice_base
+            small(ref.MAX_REGIONS),    # cum_w
+            small(ref.MAX_REGIONS),    # base_line
+            small(ref.MAX_REGIONS),    # lines
+            small(ref.MAX_REGIONS),    # runs
+            small(ref.MAX_REGIONS),    # wruns
+            small(ref.MAX_REGIONS),    # alpha
+            small(ref.MAX_REGIONS),    # seq
+            small(6),                  # params
+        ],
+        out_specs=[pl.BlockSpec(tile, lambda i: (0, i)) for _ in range(3)],
+        out_shape=out_shape,
+        interpret=True,
+    )(streams, step0, slice_base, cum_w, base_line, lines, runs, wruns,
+      alpha, seq, params)

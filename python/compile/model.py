@@ -1,0 +1,79 @@
+"""Layer-2 JAX compute graphs, built on the Layer-1 Pallas kernel.
+
+Two graphs are AOT-lowered (see ``aot.py``):
+
+* ``trace_batch`` — the batched trace generator the rust simulator calls
+  at runtime through PJRT (``rust/src/workloads/pjrt.rs``). One call
+  produces a (streams x steps) tile of (address-line, is-write, gap)
+  triples.
+* ``hotness`` — a per-bucket access histogram + exponentially-decayed
+  hotness update over a generated tile: the analysis graph behind the
+  CLI's workload-calibration report (``trimma analyze``). It demonstrates
+  the L2 graph *composing* the L1 kernel with further jnp compute inside
+  one lowered module (single fusion domain, no host round-trip).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import trace_gen as tg
+
+# Fixed AOT shapes: 16 streams (cores), 4096 steps per batch.
+STREAMS = 16
+STEPS = 4096
+HOT_BUCKETS = 1024
+
+
+def trace_batch(streams, step0, slice_base, cum_w, base_line, lines, runs,
+                wruns, alpha, seq, params):
+    """The runtime trace batch: 3 x u32[STREAMS, STEPS]."""
+    return tg.trace_gen(
+        streams, step0, slice_base, cum_w, base_line, lines, runs, wruns,
+        alpha, seq, params, steps=STEPS,
+    )
+
+
+def hotness(streams, step0, slice_base, cum_w, base_line, lines, runs,
+            wruns, alpha, seq, params, hot_in, decay):
+    """Generate a tile and fold it into a decayed hotness histogram.
+
+    hot_in: f32[HOT_BUCKETS]; decay: f32[1].
+    Returns (hot_out f32[HOT_BUCKETS], write_frac f32[1], mean_gap f32[1]).
+    """
+    addr_line, is_write, gap = trace_batch(
+        streams, step0, slice_base, cum_w, base_line, lines, runs, wruns,
+        alpha, seq, params,
+    )
+    buckets = (addr_line % jnp.uint32(HOT_BUCKETS)).reshape(-1)
+    hist = jnp.zeros((HOT_BUCKETS,), jnp.float32).at[buckets].add(1.0)
+    hot_out = hot_in * decay[0] + hist
+    write_frac = is_write.astype(jnp.float32).mean()[None]
+    mean_gap = gap.astype(jnp.float32).mean()[None]
+    return hot_out, write_frac, mean_gap
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of trace_batch."""
+    u32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.uint32)  # noqa: E731
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    r = 4  # MAX_REGIONS
+    return (
+        u32(STREAMS),   # streams
+        u32(1),         # step0
+        u32(STREAMS),   # slice_base
+        f32(r),         # cum_w
+        u32(r),         # base_line
+        u32(r),         # lines
+        u32(r),         # runs
+        u32(r),         # wruns
+        f32(r),         # alpha
+        u32(r),         # seq
+        u32(6),         # params
+    )
+
+
+def hotness_example_args():
+    args = list(example_args())
+    args.append(jax.ShapeDtypeStruct((HOT_BUCKETS,), jnp.float32))  # hot_in
+    args.append(jax.ShapeDtypeStruct((1,), jnp.float32))            # decay
+    return tuple(args)

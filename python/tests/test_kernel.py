@@ -1,0 +1,172 @@
+"""Layer-1 correctness: the Pallas kernel vs. the pure-jnp oracle.
+
+The generator is all-integer except one f32 ``pow``; kernel and oracle
+must agree exactly (same XLA ops underneath). Hypothesis sweeps the
+parameter space: region geometry, run lengths, thresholds, stream counts.
+"""
+
+import hypothesis as hyp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.trace_gen import TILE_T, trace_gen
+
+
+def mk_args(
+    n_regions=2,
+    run_len=4,
+    write_frac=0.3,
+    gap=20,
+    streams=8,
+    lines_scale=10_000,
+    thetas=(0.0, 0.9, 0.5, 0.7),
+    seqs=(1, 0, 0, 1),
+):
+    """Build padded region tables the way rust's TraceGen does."""
+    r = ref.MAX_REGIONS
+    cum_w = np.ones(r, np.float32)
+    cum_w[:n_regions] = (np.arange(n_regions) + 1) / n_regions
+    lines = np.full(r, run_len, np.uint32)
+    base = np.zeros(r, np.uint32)
+    off = 0
+    for i in range(n_regions):
+        ln = max(lines_scale * (i + 1) // n_regions // run_len, 1) * run_len
+        lines[i] = ln
+        base[i] = off
+        off += ln
+    runs = np.maximum(lines // run_len, 1).astype(np.uint32)
+    wruns = np.maximum(runs // 4, 1).astype(np.uint32)  # 25% working set
+    alpha = np.array(
+        [1.0 / (1.0 - t) if t < 1.0 else 64.0 for t in thetas], np.float32
+    )
+    seq = np.array(seqs, np.uint32)
+    epoch_runs = int(max(8 * wruns.max(), 1))
+    params = np.array(
+        [run_len, int(write_frac * 65536), max(2 * gap, 1), n_regions,
+         epoch_runs, 0],
+        np.uint32,
+    )
+    return (
+        np.arange(streams, dtype=np.uint32),
+        np.zeros(1, np.uint32),
+        np.zeros(streams, np.uint32),
+        cum_w,
+        base,
+        lines,
+        runs,
+        wruns,
+        alpha,
+        seq,
+        params,
+    )
+
+
+def run_both(args, steps=TILE_T):
+    got = trace_gen(*[jnp.asarray(a) for a in args], steps=steps)
+    want = ref.trace_gen_ref(*[jnp.asarray(a) for a in args], steps=steps)
+    return got, want
+
+
+def test_kernel_matches_ref_default():
+    got, want = run_both(mk_args())
+    for g, w, name in zip(got, want, ["addr", "write", "gap"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_kernel_multi_tile_grid():
+    got, want = run_both(mk_args(), steps=4 * TILE_T)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_nonzero_step0_continues_stream():
+    args = list(mk_args())
+    a0 = trace_gen(*[jnp.asarray(a) for a in args], steps=TILE_T)
+    args[1] = np.array([TILE_T], np.uint32)
+    a1 = trace_gen(*[jnp.asarray(a) for a in args], steps=TILE_T)
+    full_args = list(mk_args())
+    full = trace_gen(*[jnp.asarray(a) for a in full_args], steps=2 * TILE_T)
+    np.testing.assert_array_equal(np.asarray(full[0][:, :TILE_T]), np.asarray(a0[0]))
+    np.testing.assert_array_equal(np.asarray(full[0][:, TILE_T:]), np.asarray(a1[0]))
+
+
+def test_addresses_stay_in_regions():
+    args = mk_args()
+    got, _ = run_both(args)
+    addr = np.asarray(got[0])
+    total_lines = int(args[4][-1]) if args[4][-1] else None
+    span = int(args[4][1] + args[5][1])  # last region base + lines
+    assert addr.max() < span
+    del total_lines
+
+
+def test_write_fraction_matches_threshold():
+    got, _ = run_both(mk_args(write_frac=0.25))
+    w = np.asarray(got[1])
+    frac = w.mean()
+    assert abs(frac - 0.25) < 0.02, frac
+
+
+def test_gap_range():
+    got, _ = run_both(mk_args(gap=16))
+    g = np.asarray(got[2])
+    assert g.max() < 32
+    assert abs(g.mean() - 15.5) < 1.0
+
+
+def test_zipf_region_skew():
+    # Single zipf region, theta=0.9: the hot working set dominates even
+    # though the hash scatter spreads it across the region — the most
+    # popular 10% of *distinct* lines must absorb most accesses.
+    got, _ = run_both(
+        mk_args(n_regions=1, thetas=(0.9, 0, 0, 0), seqs=(0, 0, 0, 0))
+    )
+    addr = np.asarray(got[0]).reshape(-1)
+    _, counts = np.unique(addr, return_counts=True)
+    counts.sort()
+    top = counts[-max(len(counts) // 10, 1):].sum()
+    frac = top / counts.sum()
+    assert frac > 0.5, frac
+
+
+@hyp.settings(max_examples=25, deadline=None)
+@hyp.given(
+    n_regions=st.integers(1, 4),
+    run_len=st.sampled_from([1, 2, 4, 16, 64]),
+    write_frac=st.floats(0.0, 1.0),
+    gap=st.integers(0, 200),
+    streams=st.sampled_from([1, 4, 16]),
+    lines_scale=st.integers(64, 1_000_000),
+    theta=st.floats(0.0, 0.99),
+)
+def test_kernel_matches_ref_hypothesis(
+    n_regions, run_len, write_frac, gap, streams, lines_scale, theta
+):
+    args = mk_args(
+        n_regions=n_regions,
+        run_len=run_len,
+        write_frac=write_frac,
+        gap=gap,
+        streams=streams,
+        lines_scale=lines_scale,
+        thetas=(theta, 0.5, 0.0, 0.9),
+        seqs=(0, 1, 1, 0),
+    )
+    got, want = run_both(args)
+    for g, w, name in zip(got, want, ["addr", "write", "gap"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_lowbias32_reference_values():
+    # Must match rust's pinned constants (workloads/synth.rs).
+    vals = np.asarray(ref.lowbias32(np.array([0, 1, 0xDEADBEEF], np.uint32)))
+    assert vals.tolist() == [0, 1753845952, 3861431939]
+
+
+def test_steps_must_be_tile_multiple():
+    args = mk_args()
+    with pytest.raises(ValueError):
+        trace_gen(*[jnp.asarray(a) for a in args], steps=TILE_T + 1)

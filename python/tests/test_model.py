@@ -1,0 +1,87 @@
+"""Layer-2 graph tests: shapes, composition, and AOT lowering."""
+
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from tests.test_kernel import mk_args
+
+
+def full_args():
+    return [jnp.asarray(a) for a in mk_args(streams=model.STREAMS)]
+
+
+def test_trace_batch_shapes():
+    out = model.trace_batch(*full_args())
+    assert len(out) == 3
+    for o in out:
+        assert o.shape == (model.STREAMS, model.STEPS)
+        assert o.dtype == jnp.uint32
+
+
+def test_hotness_accumulates_and_decays():
+    args = full_args()
+    hot0 = jnp.zeros((model.HOT_BUCKETS,), jnp.float32)
+    decay = jnp.ones((1,), jnp.float32)
+    hot1, wf, mg = model.hotness(*args, hot0, decay)
+    assert hot1.shape == (model.HOT_BUCKETS,)
+    # One access per (stream, step) lands in exactly one bucket.
+    np.testing.assert_allclose(
+        np.asarray(hot1).sum(), model.STREAMS * model.STEPS, rtol=1e-6
+    )
+    assert 0.0 <= float(wf[0]) <= 1.0
+    assert float(mg[0]) >= 0.0
+    # Decay halves the history before adding the new tile.
+    hot2, _, _ = model.hotness(*args, hot1, jnp.asarray([0.5], jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(hot2).sum(),
+        1.5 * model.STREAMS * model.STEPS,
+        rtol=1e-6,
+    )
+
+
+def test_hotness_skew_visible_in_histogram():
+    # A zipf-only profile should concentrate mass in few buckets.
+    args = [
+        jnp.asarray(a)
+        for a in mk_args(
+            streams=model.STREAMS,
+            n_regions=1,
+            thetas=(0.95, 0, 0, 0),
+            seqs=(0, 0, 0, 0),
+            lines_scale=500_000,
+        )
+    ]
+    hot0 = jnp.zeros((model.HOT_BUCKETS,), jnp.float32)
+    hot, _, _ = model.hotness(*args, hot0, jnp.ones((1,), jnp.float32))
+    h = np.sort(np.asarray(hot))[::-1]
+    top_frac = h[:64].sum() / h.sum()
+    assert top_frac > 0.5, top_frac
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path: pathlib.Path):
+    written = aot.build_artifacts(tmp_path)
+    names = {p.name for p in written}
+    assert {"trace_gen.hlo.txt", "hotness.hlo.txt", "manifest.txt"} <= names
+    hlo = (tmp_path / "trace_gen.hlo.txt").read_text()
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # No custom-calls the CPU PJRT client can't run (interpret-mode pallas
+    # lowers to plain HLO).
+    assert "custom-call" not in hlo or "mosaic" not in hlo.lower()
+
+
+def test_lowered_module_is_single_fusion_domain():
+    lowered = jax.jit(model.trace_batch).lower(*model.example_args())
+    txt = lowered.compiler_ir("stablehlo")
+    # One module, no host callbacks.
+    assert "stablehlo" in str(txt)
+    assert "callback" not in str(txt)
+
+
+if __name__ == "__main__":
+    sys.exit(0)

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating the paper's fig9 rows at a reduced
+//! scale and timing the harness. Full-scale regeneration:
+//! `trimma sweep --figure fig9` (see DESIGN.md §3).
+
+use trimma::bench_util::Bench;
+use trimma::coordinator::figures;
+
+fn main() {
+    let b = Bench::new("fig9_metadata_size");
+    for fig in "fig9".split('+') {
+        let (tables, dt) = b.once(fig, || figures::run_figure(fig, 0.05, 0).expect("known figure"));
+        println!("  ({} rows in {:.1}s)", tables.iter().map(|t| t.rows.len()).sum::<usize>(), dt);
+        for t in tables {
+            println!("{}", t.markdown());
+        }
+    }
+}

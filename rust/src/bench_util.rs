@@ -1,0 +1,77 @@
+//! Minimal benchmark harness (criterion is unavailable in this offline
+//! environment). `cargo bench` targets use [`Bench`] to get
+//! warmup + repeated timed iterations and criterion-style output:
+//!
+//! ```text
+//! irt_lookup_hit          ... 12.3 ns/iter (4096 iters x 64 reps)
+//! ```
+
+use std::time::Instant;
+
+/// One benchmark group; prints results to stdout.
+pub struct Bench {
+    name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("== bench: {name} ==");
+        Bench { name }
+    }
+
+    /// Time `f` (which should perform one logical iteration) and report
+    /// ns/iter. Runs a warmup, then enough reps to cover ~200 ms.
+    pub fn iter<R>(&self, label: &str, mut f: impl FnMut() -> R) -> f64 {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib = 0u64;
+        while t0.elapsed().as_millis() < 50 {
+            std::hint::black_box(f());
+            calib += 1;
+        }
+        let per = t0.elapsed().as_nanos() as f64 / calib as f64;
+        let reps = ((200e6 / per.max(1.0)) as u64).clamp(3, 5_000_000);
+
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        let ns = t1.elapsed().as_nanos() as f64 / reps as f64;
+        println!("{:<40} ... {:>12.1} ns/iter ({} reps)", label, ns, reps);
+        ns
+    }
+
+    /// Time one long-running operation (e.g., a whole simulation) once and
+    /// report seconds plus a caller-computed throughput metric.
+    pub fn once<R>(&self, label: &str, f: impl FnOnce() -> R) -> (R, f64) {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<40} ... {:>10.3} s", label, dt);
+        (r, dt)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iter_reports_positive_ns() {
+        let b = Bench::new("self-test");
+        let ns = b.iter("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(ns > 0.0);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let b = Bench::new("self-test");
+        let (v, dt) = b.once("compute", || 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

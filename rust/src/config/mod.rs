@@ -1,0 +1,295 @@
+//! Configuration system: every knob of the simulated machine and of the
+//! hybrid-memory design under test. Experiments are driven by the presets
+//! plus CLI overrides (this environment is offline, so no serde: configs
+//! are code-defined and dumped via `Debug`/the CLI's `dump-config`).
+//!
+//! [`presets`] contains ready-made configurations matching the paper's
+//! Table 1 (HBM3 + DDR5 and DDR5 + NVM, 32:1 capacity ratio) for each of the
+//! five evaluated design points.
+
+pub mod presets;
+
+
+use crate::types::ilog2;
+
+/// Use mode of the fast memory tier (§2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Fast tier is an OS-invisible cache of the slow tier.
+    Cache,
+    /// Both tiers are OS-visible; blocks are migrated (swapped) between them.
+    Flat,
+}
+
+/// The metadata structure that maps physical block ids to device block ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetadataScheme {
+    /// Conventional linear remap table: one 4 B entry per block over *both*
+    /// tiers, stored in the fast memory (MemPod, SILC-FM, Sim et al.).
+    Linear,
+    /// Trimma's indirection-based remap table (§3.2). `levels = 1` degrades
+    /// to the linear table; `levels = 4` mimics Tag Tables' deep slicing.
+    Irt { levels: u32 },
+    /// Cache-style tag matching with tags embedded alongside data
+    /// (Alloy Cache: direct-mapped, tag+data in one burst).
+    TagAlloy,
+    /// Cache-style tag matching with tags at the head of each DRAM row
+    /// (Loh-Hill Cache: 30-way within an 8 kB row, tag access = row hit).
+    TagLohHill,
+}
+
+/// On-chip SRAM remap-cache organization (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemapCacheKind {
+    /// No remap cache: every access walks the off-chip table.
+    None,
+    /// Conventional remap cache storing full entries (identity or not).
+    Conventional { sets: u32, ways: u32 },
+    /// Trimma's identity-mapping-aware remap cache: NonIdCache +
+    /// sector-style IdCache with one bit per block over a super-block of
+    /// `superblock_blocks` blocks.
+    Irc {
+        nonid_sets: u32,
+        nonid_ways: u32,
+        id_sets: u32,
+        id_ways: u32,
+        superblock_blocks: u32,
+    },
+}
+
+/// Data replacement policy within a set (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplacementPolicy {
+    /// FIFO over the set's slots, skipping slots currently used as metadata
+    /// (Trimma's default, with prefetched index bits).
+    Fifo,
+    /// Random candidate with resampling on metadata slots.
+    Random,
+    /// Full LRU (expensive at high associativity; for ablations).
+    Lru,
+    /// RRIP (used for the Loh-Hill baseline, +2.1% over LRU in the paper).
+    Rrip,
+    /// CLOCK (second chance): reference bits with a rotating hand — the
+    /// classic low-cost LRU approximation the paper lists as applicable.
+    Clock,
+    /// MemPod's Majority Element Algorithm: epoch-based counters pick the
+    /// hottest slow blocks to migrate in.
+    Mea,
+}
+
+/// One level of the CPU cache hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub size_bytes: u64,
+    pub ways: u32,
+    pub line_bytes: u32,
+    /// Access latency in CPU cycles (charged on hit; lookup cost on miss).
+    pub latency: u64,
+}
+
+impl CacheConfig {
+    pub fn num_sets(&self) -> u64 {
+        self.size_bytes / (self.ways as u64 * self.line_bytes as u64)
+    }
+}
+
+/// Timing model for one memory device (a tier).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemTech {
+    /// Banked DRAM with row buffers (covers HBM3 and DDR5).
+    /// Timing parameters are in CPU cycles.
+    Dram {
+        channels: u32,
+        banks_per_channel: u32,
+        /// Row-to-column delay (activate), CPU cycles.
+        t_rcd: u64,
+        /// Column access (CAS), CPU cycles.
+        t_cas: u64,
+        /// Precharge, CPU cycles.
+        t_rp: u64,
+        /// Row buffer size in bytes (8 kB typical).
+        row_bytes: u32,
+        /// Data bus throughput per channel, bytes per CPU cycle.
+        bytes_per_cycle: f64,
+    },
+    /// Constant-latency, bandwidth-limited NVM (Optane-like).
+    Nvm {
+        channels: u32,
+        banks_per_channel: u32,
+        /// Read latency, CPU cycles.
+        read_lat: u64,
+        /// Write latency, CPU cycles.
+        write_lat: u64,
+        /// Data bus throughput per channel, bytes per CPU cycle.
+        bytes_per_cycle: f64,
+    },
+}
+
+/// Configuration of the hybrid memory system (both tiers + metadata design).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridConfig {
+    pub mode: Mode,
+    pub scheme: MetadataScheme,
+    pub remap_cache: RemapCacheKind,
+    pub replacement: ReplacementPolicy,
+    /// Migration/caching granularity in bytes (256 B default).
+    pub block_bytes: u32,
+    /// Number of disjoint sets the two tiers are partitioned into.
+    /// Associativity = fast blocks per set. MemPod/Trimma-F use 4.
+    pub num_sets: u32,
+    /// Fast tier capacity in bytes (data + metadata region).
+    pub fast_bytes: u64,
+    /// Slow tier capacity in bytes.
+    pub slow_bytes: u64,
+    /// Whether freed metadata blocks are donated as extra cache slots
+    /// (Trimma's §3.3; off for the plain-iRT ablation).
+    pub use_saved_space: bool,
+    /// SRAM remap-cache latency, CPU cycles (CACTI-derived in the paper).
+    pub remap_cache_latency: u64,
+    /// In flat mode, fraction of OS-visible space placed in the fast tier
+    /// by first-touch allocation (the rest of fast capacity may be cache).
+    pub flat_fast_fraction: f64,
+    /// Sub-blocked fills (SILC-FM/Hybrid2/Baryon-style): fetch only the
+    /// demanded 64 B sub-blocks of a cached block instead of the whole
+    /// block, trading fill bandwidth for extra sub-block misses.
+    pub subblock: bool,
+}
+
+impl HybridConfig {
+    pub fn fast_blocks(&self) -> u64 {
+        self.fast_bytes / self.block_bytes as u64
+    }
+    pub fn slow_blocks(&self) -> u64 {
+        self.slow_bytes / self.block_bytes as u64
+    }
+    pub fn block_offset_bits(&self) -> u32 {
+        ilog2(self.block_bytes as u64)
+    }
+    /// Slow-to-fast capacity ratio.
+    pub fn capacity_ratio(&self) -> u64 {
+        self.slow_bytes / self.fast_bytes
+    }
+}
+
+/// Workload sizing/scaling knobs shared by all generators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadConfig {
+    /// Number of cores / streams (paper: 16).
+    pub cores: u32,
+    /// Memory accesses simulated per core (post-warmup).
+    pub accesses_per_core: u64,
+    /// Warmup accesses per core (stats reset afterwards).
+    pub warmup_per_core: u64,
+    /// RNG seed base.
+    pub seed: u64,
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    /// Human-readable label, e.g. "trimma-c/hbm3+ddr5".
+    pub name: String,
+    pub cpu_freq_ghz: f64,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    pub fast_mem: MemTech,
+    pub slow_mem: MemTech,
+    pub hybrid: HybridConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl SystemConfig {
+    /// Convert nanoseconds to CPU cycles under this config's clock.
+    pub fn ns_to_cycles(&self, ns: f64) -> u64 {
+        (ns * self.cpu_freq_ghz).round() as u64
+    }
+
+    /// Validate internal consistency; returns a description of the first
+    /// violated invariant.
+    pub fn validate(&self) -> Result<(), String> {
+        let h = &self.hybrid;
+        if !h.block_bytes.is_power_of_two() {
+            return Err(format!("block_bytes {} not a power of two", h.block_bytes));
+        }
+        if h.fast_bytes % h.block_bytes as u64 != 0 || h.slow_bytes % h.block_bytes as u64 != 0 {
+            return Err("tier capacities must be block-aligned".into());
+        }
+        if h.slow_bytes < h.fast_bytes {
+            return Err("slow tier smaller than fast tier".into());
+        }
+        if !h.num_sets.is_power_of_two() {
+            return Err(format!("num_sets {} not a power of two", h.num_sets));
+        }
+        if h.fast_blocks() % h.num_sets as u64 != 0 || h.slow_blocks() % h.num_sets as u64 != 0 {
+            return Err("blocks must divide evenly across sets".into());
+        }
+        if let MetadataScheme::Irt { levels } = h.scheme {
+            if !(1..=4).contains(&levels) {
+                return Err(format!("iRT levels {levels} out of range 1..=4"));
+            }
+        }
+        if matches!(h.scheme, MetadataScheme::TagAlloy) && h.mode != Mode::Cache {
+            return Err("Alloy tag matching only supports cache mode".into());
+        }
+        if matches!(h.scheme, MetadataScheme::TagLohHill) && h.mode != Mode::Cache {
+            return Err("Loh-Hill tag matching only supports cache mode".into());
+        }
+        Ok(())
+    }
+
+    /// Human-readable multi-line dump (the CLI's `dump-config`).
+    pub fn describe(&self) -> String {
+        format!("{self:#?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::{self, DesignPoint};
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for dp in DesignPoint::ALL {
+            let cfg = presets::hbm3_ddr5(*dp);
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            let cfg = presets::ddr5_nvm(*dp);
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn describe_mentions_key_fields() {
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        let s = cfg.describe();
+        assert!(s.contains("Irt"));
+        assert!(s.contains("fast_bytes"));
+    }
+
+    #[test]
+    fn capacity_ratio_default_is_32() {
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaFlat);
+        assert_eq!(cfg.hybrid.capacity_ratio(), 32);
+    }
+
+    #[test]
+    fn validate_rejects_bad_block() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.block_bytes = 300;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_alloy_flat() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        cfg.hybrid.mode = Mode::Flat;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn ns_conversion() {
+        let cfg = presets::ddr5_nvm(DesignPoint::TrimmaCache);
+        assert_eq!(cfg.ns_to_cycles(77.0), 246); // NVM read at 3.2 GHz
+    }
+}

@@ -1,0 +1,313 @@
+//! Ready-made system configurations mirroring the paper's Table 1.
+//!
+//! Capacities are scaled down ~1000x from the paper's 20 GB / 640 MB
+//! (see DESIGN.md §4): the default fast tier is 16 MiB and the slow tier
+//! 512 MiB, preserving the 32:1 slow-to-fast ratio that drives all of the
+//! metadata-overhead arithmetic (a linear table still costs
+//! `(32+1) * 4/256 = 52%` of the fast tier). Workload footprints are scaled
+//! by the same factor so they fill the same fraction of memory.
+
+use super::*;
+
+/// The design points evaluated in the paper (Fig. 7) plus the auxiliary
+/// points needed by Fig. 1 and the ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignPoint {
+    /// Alloy Cache: direct-mapped DRAM cache, tag+data in one burst,
+    /// perfect memory-access predictor (cache-mode baseline #1).
+    AlloyCache,
+    /// Loh-Hill Cache: 30-way within an 8 kB row, tags-in-row, perfect
+    /// MissMap, RRIP replacement (cache-mode baseline #2).
+    LohHill,
+    /// Trimma in cache mode: iRT (2-level) + iRC + saved-space caching.
+    TrimmaCache,
+    /// MemPod: flat mode, 4 pods, linear remap table + conventional remap
+    /// cache, MEA epoch migration (flat-mode baseline).
+    MemPod,
+    /// Trimma in flat mode: iRT (2-level) + iRC + saved-space caching.
+    TrimmaFlat,
+    /// Cache-mode design with a linear remap table + conventional remap
+    /// cache (the "linear table" series of Fig. 1).
+    LinearCache,
+    /// Metadata-free oracle: lookups cost nothing and no fast-memory
+    /// capacity is spent on tables (the "Ideal" series of Fig. 1).
+    Ideal,
+}
+
+impl DesignPoint {
+    pub const ALL: &'static [DesignPoint] = &[
+        DesignPoint::AlloyCache,
+        DesignPoint::LohHill,
+        DesignPoint::TrimmaCache,
+        DesignPoint::MemPod,
+        DesignPoint::TrimmaFlat,
+        DesignPoint::LinearCache,
+        DesignPoint::Ideal,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DesignPoint::AlloyCache => "alloy",
+            DesignPoint::LohHill => "loh-hill",
+            DesignPoint::TrimmaCache => "trimma-c",
+            DesignPoint::MemPod => "mempod",
+            DesignPoint::TrimmaFlat => "trimma-f",
+            DesignPoint::LinearCache => "linear-c",
+            DesignPoint::Ideal => "ideal",
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        match self {
+            DesignPoint::MemPod | DesignPoint::TrimmaFlat => Mode::Flat,
+            _ => Mode::Cache,
+        }
+    }
+}
+
+/// Default scaled fast-tier capacity (16 MiB).
+pub const FAST_BYTES: u64 = 16 << 20;
+/// Default scaled slow-tier capacity (512 MiB), ratio 32:1.
+pub const SLOW_BYTES: u64 = 512 << 20;
+/// Default migration block size (256 B, paper default).
+pub const BLOCK_BYTES: u32 = 256;
+
+/// The conventional remap cache of Table 1: 2048 sets x 8 ways, 3 cycles.
+pub fn conventional_rc() -> RemapCacheKind {
+    RemapCacheKind::Conventional { sets: 2048, ways: 8 }
+}
+
+/// Trimma's iRC of Table 1: NonIdCache 2048x6 + IdCache 256x16 over 32-block
+/// (8 kB) super-blocks; same total SRAM as the conventional 2048x8 cache.
+pub fn irc_rc() -> RemapCacheKind {
+    RemapCacheKind::Irc {
+        nonid_sets: 2048,
+        nonid_ways: 6,
+        id_sets: 256,
+        id_ways: 16,
+        superblock_blocks: 32,
+    }
+}
+
+/// CPU cache hierarchy, scaled down with the memory capacities (DESIGN.md
+/// §4): the paper's 32 MB LLC is ~0.16% of its 20 GB footprint; with the
+/// slow tier scaled to 512 MiB we keep the same proportion (1 MiB LLC,
+/// 128 KiB L2, 16 KiB L1D) so the hybrid memory sees the same *kind* of
+/// post-LLC traffic. Latencies stay at Table 1's cycle counts.
+fn caches() -> (CacheConfig, CacheConfig, CacheConfig) {
+    let l1d = CacheConfig { size_bytes: 16 << 10, ways: 8, line_bytes: 64, latency: 4 };
+    let l2 = CacheConfig { size_bytes: 128 << 10, ways: 8, line_bytes: 64, latency: 14 };
+    let llc = CacheConfig { size_bytes: 1 << 20, ways: 16, line_bytes: 64, latency: 60 };
+    (l1d, l2, llc)
+}
+
+/// HBM3: 1600 MHz, 16 channels, RCD-CAS-RP 48-48-48 (CPU cycles @3.2 GHz).
+pub fn hbm3() -> MemTech {
+    MemTech::Dram {
+        channels: 16,
+        banks_per_channel: 16,
+        t_rcd: 48,
+        t_cas: 48,
+        t_rp: 48,
+        row_bytes: 8192,
+        bytes_per_cycle: 16.0, // ~51 GB/s per channel at 3.2 GHz
+    }
+}
+
+/// DDR5-4800, RCD-CAS-RP 40-40-40 (CPU cycles @3.2 GHz).
+pub fn ddr5(channels: u32) -> MemTech {
+    MemTech::Dram {
+        channels,
+        banks_per_channel: 32, // 2 ranks x 16 banks
+        t_rcd: 40,
+        t_cas: 40,
+        t_rp: 40,
+        row_bytes: 8192,
+        bytes_per_cycle: 12.0, // ~38 GB/s per channel at 3.2 GHz
+    }
+}
+
+/// Optane-like NVM: RD 77 ns, WR 231 ns, 2 channels x 8 banks.
+pub fn nvm() -> MemTech {
+    MemTech::Nvm {
+        channels: 2,
+        banks_per_channel: 8,
+        read_lat: 246,  // 77 ns @ 3.2 GHz
+        write_lat: 739, // 231 ns @ 3.2 GHz
+        bytes_per_cycle: 2.0, // ~6.4 GB/s per channel
+    }
+}
+
+fn hybrid_for(dp: DesignPoint, fast_bytes: u64, slow_bytes: u64, block: u32) -> HybridConfig {
+    let fast_blocks = fast_bytes / block as u64;
+    let (scheme, remap_cache, replacement, num_sets, use_saved_space) = match dp {
+        DesignPoint::AlloyCache => (
+            MetadataScheme::TagAlloy,
+            RemapCacheKind::None,
+            ReplacementPolicy::Fifo, // direct-mapped: replacement is trivial
+            // direct-mapped: one fast block per set
+            fast_blocks as u32,
+            false,
+        ),
+        DesignPoint::LohHill => (
+            MetadataScheme::TagLohHill,
+            RemapCacheKind::None,
+            ReplacementPolicy::Rrip,
+            // one set per 8 kB row (30 data + 2 tag blocks at 256 B)
+            (fast_bytes / 8192) as u32,
+            false,
+        ),
+        DesignPoint::TrimmaCache => (
+            MetadataScheme::Irt { levels: 2 },
+            irc_rc(),
+            ReplacementPolicy::Fifo,
+            // high associativity: 1024 data ways per set
+            (fast_blocks / 1024).max(1) as u32,
+            true,
+        ),
+        DesignPoint::MemPod => (
+            MetadataScheme::Linear,
+            conventional_rc(),
+            ReplacementPolicy::Mea,
+            4, // 4 pods
+            false,
+        ),
+        DesignPoint::TrimmaFlat => (
+            MetadataScheme::Irt { levels: 2 },
+            irc_rc(),
+            ReplacementPolicy::Fifo,
+            4, // match MemPod's pod count for apples-to-apples
+            true,
+        ),
+        DesignPoint::LinearCache => (
+            MetadataScheme::Linear,
+            conventional_rc(),
+            ReplacementPolicy::Fifo,
+            (fast_blocks / 1024).max(1) as u32,
+            false,
+        ),
+        DesignPoint::Ideal => (
+            MetadataScheme::Linear, // unused: lookups are free
+            RemapCacheKind::None,
+            ReplacementPolicy::Fifo,
+            (fast_blocks / 1024).max(1) as u32,
+            false,
+        ),
+    };
+    HybridConfig {
+        mode: dp.mode(),
+        scheme,
+        remap_cache,
+        replacement,
+        block_bytes: block,
+        num_sets,
+        fast_bytes,
+        slow_bytes,
+        use_saved_space,
+        remap_cache_latency: 3,
+        flat_fast_fraction: 1.0,
+        subblock: false,
+    }
+}
+
+fn base(name: String, fast_mem: MemTech, slow_mem: MemTech, hybrid: HybridConfig) -> SystemConfig {
+    let (l1d, l2, llc) = caches();
+    SystemConfig {
+        name,
+        cpu_freq_ghz: 3.2,
+        l1d,
+        l2,
+        llc,
+        fast_mem,
+        slow_mem,
+        hybrid,
+        workload: WorkloadConfig {
+            cores: 16,
+            accesses_per_core: 1_500_000,
+            warmup_per_core: 300_000,
+            seed: 0xD1CE,
+        },
+    }
+}
+
+/// HBM3 (fast) + DDR5 (slow), the paper's first technology combination.
+pub fn hbm3_ddr5(dp: DesignPoint) -> SystemConfig {
+    base(
+        format!("{}/hbm3+ddr5", dp.label()),
+        hbm3(),
+        ddr5(1),
+        hybrid_for(dp, FAST_BYTES, SLOW_BYTES, BLOCK_BYTES),
+    )
+}
+
+/// DDR5 (fast) + NVM (slow), the paper's second technology combination.
+pub fn ddr5_nvm(dp: DesignPoint) -> SystemConfig {
+    base(
+        format!("{}/ddr5+nvm", dp.label()),
+        ddr5(2),
+        nvm(),
+        hybrid_for(dp, FAST_BYTES, SLOW_BYTES, BLOCK_BYTES),
+    )
+}
+
+/// Rescale a preset to a different slow-to-fast capacity ratio (Fig. 12a).
+/// Fast capacity is fixed; the slow tier grows/shrinks.
+pub fn with_capacity_ratio(mut cfg: SystemConfig, ratio: u64) -> SystemConfig {
+    cfg.hybrid.slow_bytes = cfg.hybrid.fast_bytes * ratio;
+    cfg.name = format!("{}@r{}", cfg.name, ratio);
+    cfg
+}
+
+/// Enable sub-blocked fills (the Baryon/Hybrid2 extension; ablation).
+pub fn with_subblocking(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.hybrid.subblock = true;
+    cfg.name = format!("{}+sub", cfg.name);
+    cfg
+}
+
+/// Rescale a preset to a different migration block size (Fig. 12b).
+pub fn with_block_bytes(mut cfg: SystemConfig, block: u32) -> SystemConfig {
+    cfg.hybrid.block_bytes = block;
+    // Keep per-set data ways constant where possible.
+    let fast_blocks = (cfg.hybrid.fast_bytes / block as u64) as u32;
+    cfg.hybrid.num_sets = cfg.hybrid.num_sets.min(fast_blocks).max(1);
+    cfg.name = format!("{}@b{}", cfg.name, block);
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_table_cost_matches_paper_math() {
+        // (32 + 1) * 4 / 256 = 51.6% of the fast tier at ratio 32:1.
+        let cfg = hbm3_ddr5(DesignPoint::MemPod);
+        let h = cfg.hybrid;
+        let entries = h.fast_blocks() + h.slow_blocks();
+        let table_bytes = entries * 4;
+        let frac = table_bytes as f64 / h.fast_bytes as f64;
+        assert!((frac - 0.5156).abs() < 0.001, "frac = {frac}");
+    }
+
+    #[test]
+    fn alloy_is_direct_mapped() {
+        let cfg = hbm3_ddr5(DesignPoint::AlloyCache);
+        assert_eq!(cfg.hybrid.num_sets as u64, cfg.hybrid.fast_blocks());
+    }
+
+    #[test]
+    fn ratio_rescale() {
+        let cfg = with_capacity_ratio(hbm3_ddr5(DesignPoint::TrimmaCache), 64);
+        assert_eq!(cfg.hybrid.capacity_ratio(), 64);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn block_rescale_valid() {
+        for b in [64u32, 256, 1024, 4096] {
+            let cfg = with_block_bytes(hbm3_ddr5(DesignPoint::TrimmaCache), b);
+            cfg.validate().unwrap_or_else(|e| panic!("block {b}: {e}"));
+        }
+    }
+}

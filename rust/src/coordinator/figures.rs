@@ -1,0 +1,553 @@
+//! Per-figure sweeps: each function regenerates one figure/table of the
+//! paper's evaluation (see DESIGN.md §3 for the index) and returns result
+//! [`Table`]s whose rows mirror the series the paper plots.
+//!
+//! `scale` multiplies the simulated access counts (1.0 = full runs,
+//! 0.1 = the CLI's `--quick`).
+
+use super::{fmt, geomean, pct, run_jobs, Job, JobKind, Table};
+use crate::config::presets::{self, DesignPoint};
+use crate::config::{RemapCacheKind, SystemConfig};
+use crate::sim::SimReport;
+use crate::workloads::SUITE;
+
+/// Representative subset for the sensitivity sweeps (Figs. 12-13), chosen
+/// to span streaming (lbm), pointer-chasing (mcf), big-footprint (xz),
+/// graph (pr, tc), and key-value (ycsb_a) behaviour.
+pub const SENSITIVITY_SUBSET: &[&str] =
+    &["505.mcf_r", "519.lbm_r", "557.xz_r", "gap_pr", "gap_tc", "ycsb_a"];
+
+/// All figure ids, in paper order.
+pub const ALL_FIGURES: &[&str] = &[
+    "fig1", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12a",
+    "fig12b", "fig13a", "fig13b",
+];
+
+fn scaled(mut cfg: SystemConfig, scale: f64) -> SystemConfig {
+    cfg.workload.accesses_per_core =
+        ((cfg.workload.accesses_per_core as f64 * scale) as u64).max(2_000);
+    cfg.workload.warmup_per_core =
+        ((cfg.workload.warmup_per_core as f64 * scale) as u64).max(500);
+    cfg
+}
+
+/// Memory technology combination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tech {
+    Hbm3Ddr5,
+    Ddr5Nvm,
+}
+
+fn preset(tech: Tech, dp: DesignPoint) -> SystemConfig {
+    match tech {
+        Tech::Hbm3Ddr5 => presets::hbm3_ddr5(dp),
+        Tech::Ddr5Nvm => presets::ddr5_nvm(dp),
+    }
+}
+
+/// Run one figure by id. Returns its tables (already saved as CSV).
+pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<Vec<Table>> {
+    let tables = match id {
+        "fig1" => fig1(scale, threads),
+        "fig7a" => fig7(Tech::Hbm3Ddr5, "fig7a", scale, threads),
+        "fig7b" => fig7(Tech::Ddr5Nvm, "fig7b", scale, threads),
+        "fig8" => fig8(scale, threads),
+        "fig9" => fig9(scale, threads),
+        "fig10" => fig10(scale, threads),
+        "fig11" => fig11(scale, threads),
+        "fig12a" => fig12a(scale, threads),
+        "fig12b" => fig12b(scale, threads),
+        "fig13a" => fig13a(scale, threads),
+        "fig13b" => fig13b(scale, threads),
+        _ => return None,
+    };
+    for t in &tables {
+        let name = t
+            .title
+            .split_whitespace()
+            .next()
+            .unwrap_or("table")
+            .trim_end_matches(':')
+            .to_lowercase();
+        let _ = t.save_csv(&name);
+    }
+    Some(tables)
+}
+
+// ---------------------------------------------------------------- fig 1
+
+/// Fig. 1: PageRank performance vs. associativity for Ideal, tag matching,
+/// linear table, and Trimma — normalized to Ideal at associativity 1.
+pub fn fig1(scale: f64, threads: usize) -> Vec<Table> {
+    let assocs = [1u64, 4, 16, 64, 256, 1024];
+    let wl = "gap_pr";
+    let mut jobs = Vec::new();
+    for &a in &assocs {
+        for (series, dp, kind) in [
+            ("ideal", DesignPoint::Ideal, JobKind::Ideal),
+            ("tag", DesignPoint::AlloyCache, JobKind::TagMatch),
+            ("linear", DesignPoint::LinearCache, JobKind::Normal),
+            ("trimma", DesignPoint::TrimmaCache, JobKind::Normal),
+        ] {
+            let mut cfg = scaled(preset(Tech::Hbm3Ddr5, dp), scale);
+            let fast_blocks = cfg.hybrid.fast_blocks();
+            cfg.hybrid.num_sets = (fast_blocks / a).max(1) as u32;
+            jobs.push(Job {
+                label: format!("{series}@{a}"),
+                cfg,
+                workload: wl.into(),
+                kind,
+            });
+        }
+    }
+    let reps = run_jobs(&jobs, threads);
+    let base = reps[0].performance(); // ideal @ assoc 1
+    let mut t = Table::new(
+        "fig1: PageRank speedup vs associativity (norm. ideal@1)",
+        &["assoc", "ideal", "tag_matching", "linear_table", "trimma"],
+    );
+    for (i, &a) in assocs.iter().enumerate() {
+        let r = &reps[i * 4..(i + 1) * 4];
+        t.row(vec![
+            a.to_string(),
+            fmt(r[0].performance() / base),
+            fmt(r[1].performance() / base),
+            fmt(r[2].performance() / base),
+            fmt(r[3].performance() / base),
+        ]);
+    }
+    vec![t]
+}
+
+// ---------------------------------------------------------------- fig 7
+
+fn suite_jobs(tech: Tech, dps: &[DesignPoint], scale: f64) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for wl in SUITE {
+        for &dp in dps {
+            jobs.push(Job::new(
+                format!("{}:{}", dp.label(), wl),
+                scaled(preset(tech, dp), scale),
+                wl,
+            ));
+        }
+    }
+    jobs
+}
+
+/// Fig. 7: overall performance, all workloads. Cache designs normalized to
+/// Alloy; flat designs normalized to MemPod.
+pub fn fig7(tech: Tech, name: &str, scale: f64, threads: usize) -> Vec<Table> {
+    let dps = [
+        DesignPoint::AlloyCache,
+        DesignPoint::LohHill,
+        DesignPoint::TrimmaCache,
+        DesignPoint::MemPod,
+        DesignPoint::TrimmaFlat,
+    ];
+    let jobs = suite_jobs(tech, &dps, scale);
+    let reps = run_jobs(&jobs, threads);
+    let mut t = Table::new(
+        format!("{name}: speedups ({})", match tech {
+            Tech::Hbm3Ddr5 => "HBM3+DDR5",
+            Tech::Ddr5Nvm => "DDR5+NVM",
+        }),
+        &["workload", "alloy", "loh-hill", "trimma-c", "mempod", "trimma-f"],
+    );
+    let (mut sc_l, mut sc_t, mut sf_t) = (vec![], vec![], vec![]);
+    for (w, chunk) in SUITE.iter().zip(reps.chunks(dps.len())) {
+        let alloy = chunk[0].performance();
+        let mempod = chunk[3].performance();
+        let lh = chunk[1].performance() / alloy;
+        let tc = chunk[2].performance() / alloy;
+        let tf = chunk[4].performance() / mempod;
+        sc_l.push(lh);
+        sc_t.push(tc);
+        sf_t.push(tf);
+        t.row(vec![
+            w.to_string(),
+            "1.000".into(),
+            fmt(lh),
+            fmt(tc),
+            "1.000".into(),
+            fmt(tf),
+        ]);
+    }
+    t.row(vec![
+        "geomean".into(),
+        "1.000".into(),
+        fmt(geomean(&sc_l)),
+        fmt(geomean(&sc_t)),
+        "1.000".into(),
+        fmt(geomean(&sf_t)),
+    ]);
+    vec![t]
+}
+
+// ---------------------------------------------------------------- fig 8
+
+/// Fig. 8: memory access latency breakdown (metadata / fast / slow), per
+/// design, averaged over the suite, on HBM3+DDR5.
+pub fn fig8(scale: f64, threads: usize) -> Vec<Table> {
+    let dps = [
+        DesignPoint::AlloyCache,
+        DesignPoint::LohHill,
+        DesignPoint::TrimmaCache,
+        DesignPoint::MemPod,
+        DesignPoint::TrimmaFlat,
+    ];
+    let jobs = suite_jobs(Tech::Hbm3Ddr5, &dps, scale);
+    let reps = run_jobs(&jobs, threads);
+    let mut t = Table::new(
+        "fig8: AMAT breakdown, cycles/access (HBM3+DDR5)",
+        &["workload", "design", "metadata", "fast_data", "slow_data"],
+    );
+    let mut sums = vec![(0.0, 0.0, 0.0); dps.len()];
+    for (w, chunk) in SUITE.iter().zip(reps.chunks(dps.len())) {
+        for (d, rep) in dps.iter().zip(chunk) {
+            let (m, f, s) = rep.stats.amat_breakdown();
+            let e = &mut sums[dps.iter().position(|x| x == d).unwrap()];
+            e.0 += m;
+            e.1 += f;
+            e.2 += s;
+            t.row(vec![w.to_string(), d.label().into(), fmt(m), fmt(f), fmt(s)]);
+        }
+    }
+    let n = SUITE.len() as f64;
+    for (d, (m, f, s)) in dps.iter().zip(&sums) {
+        t.row(vec![
+            "MEAN".into(),
+            d.label().into(),
+            fmt(m / n),
+            fmt(f / n),
+            fmt(s / n),
+        ]);
+    }
+    vec![t]
+}
+
+// ------------------------------------------------------------ figs 9/10
+
+fn flat_pair(scale: f64, threads: usize) -> (Vec<SimReport>, Vec<SimReport>) {
+    let jobs_m = suite_jobs(Tech::Hbm3Ddr5, &[DesignPoint::MemPod], scale);
+    let jobs_t = suite_jobs(Tech::Hbm3Ddr5, &[DesignPoint::TrimmaFlat], scale);
+    let all: Vec<Job> = jobs_m.into_iter().chain(jobs_t).collect();
+    let mut reps = run_jobs(&all, threads);
+    let t = reps.split_off(SUITE.len());
+    (reps, t)
+}
+
+/// Fig. 9: metadata size at end of run — Trimma iRT vs MemPod linear table,
+/// as a fraction of the fast tier.
+pub fn fig9(scale: f64, threads: usize) -> Vec<Table> {
+    let (mempod, trimma) = flat_pair(scale, threads);
+    let mut t = Table::new(
+        "fig9: metadata size (fraction of fast memory)",
+        &["workload", "linear(mempod)", "irt(trimma)", "saving"],
+    );
+    let mut savings = vec![];
+    for ((w, m), tr) in SUITE.iter().zip(&mempod).zip(&trimma) {
+        let fast = 16.0 * 1024.0 * 1024.0;
+        let lin = m.stats.metadata_bytes_used as f64 / fast;
+        let irt = tr.stats.metadata_bytes_used as f64 / fast;
+        let saving = 1.0 - irt / lin.max(1e-12);
+        savings.push(saving);
+        t.row(vec![w.to_string(), pct(lin), pct(irt), pct(saving)]);
+    }
+    t.row(vec![
+        "MEAN".into(),
+        "-".into(),
+        "-".into(),
+        pct(savings.iter().sum::<f64>() / savings.len() as f64),
+    ]);
+    vec![t]
+}
+
+/// Fig. 10: fast-memory serve rate (a) and bandwidth bloat factor (b).
+pub fn fig10(scale: f64, threads: usize) -> Vec<Table> {
+    let (mempod, trimma) = flat_pair(scale, threads);
+    let mut a = Table::new(
+        "fig10a: fast memory serve rate",
+        &["workload", "mempod", "trimma-f", "delta"],
+    );
+    let mut b = Table::new(
+        "fig10b: bandwidth bloat factor (lower is better)",
+        &["workload", "mempod", "trimma-f"],
+    );
+    let (mut dsum, mut n) = (0.0, 0);
+    for ((w, m), tr) in SUITE.iter().zip(&mempod).zip(&trimma) {
+        let sm = m.stats.fast_serve_rate();
+        let st = tr.stats.fast_serve_rate();
+        dsum += st - sm;
+        n += 1;
+        a.row(vec![w.to_string(), pct(sm), pct(st), pct(st - sm)]);
+        b.row(vec![
+            w.to_string(),
+            fmt(m.stats.bandwidth_bloat()),
+            fmt(tr.stats.bandwidth_bloat()),
+        ]);
+    }
+    a.row(vec!["MEAN".into(), "-".into(), "-".into(), pct(dsum / n as f64)]);
+    vec![a, b]
+}
+
+// ---------------------------------------------------------------- fig 11
+
+/// Fig. 11: conventional remap cache vs iRC on Trimma-F — performance and
+/// remap-cache hit rates.
+pub fn fig11(scale: f64, threads: usize) -> Vec<Table> {
+    let mk = |rc: RemapCacheKind, tag: &str, wl: &&str| {
+        let mut cfg = scaled(preset(Tech::Hbm3Ddr5, DesignPoint::TrimmaFlat), scale);
+        cfg.hybrid.remap_cache = rc;
+        Job::new(format!("{tag}:{wl}"), cfg, wl)
+    };
+    let mut jobs = Vec::new();
+    for wl in SUITE {
+        jobs.push(mk(presets::conventional_rc(), "conv", wl));
+        jobs.push(mk(presets::irc_rc(), "irc", wl));
+    }
+    let reps = run_jobs(&jobs, threads);
+    let mut t = Table::new(
+        "fig11: conventional RC vs iRC (Trimma-F, HBM3+DDR5)",
+        &["workload", "speedup", "conv_hit", "irc_hit", "conv_id_hit", "irc_id_hit"],
+    );
+    let (mut sp, mut ch, mut ih) = (vec![], vec![], vec![]);
+    for (w, pair) in SUITE.iter().zip(reps.chunks(2)) {
+        let (c, i) = (&pair[0], &pair[1]);
+        let s = i.performance() / c.performance();
+        sp.push(s);
+        ch.push(c.stats.rc_hit_rate());
+        ih.push(i.stats.rc_hit_rate());
+        t.row(vec![
+            w.to_string(),
+            fmt(s),
+            pct(c.stats.rc_hit_rate()),
+            pct(i.stats.rc_hit_rate()),
+            pct(c.stats.rc_id_hit_rate()),
+            pct(i.stats.rc_id_hit_rate()),
+        ]);
+    }
+    t.row(vec![
+        "MEAN".into(),
+        fmt(geomean(&sp)),
+        pct(ch.iter().sum::<f64>() / ch.len() as f64),
+        pct(ih.iter().sum::<f64>() / ih.len() as f64),
+        "-".into(),
+        "-".into(),
+    ]);
+    vec![t]
+}
+
+// --------------------------------------------------------------- fig 12
+
+/// Fig. 12a: Trimma speedup vs slow-to-fast capacity ratio.
+pub fn fig12a(scale: f64, threads: usize) -> Vec<Table> {
+    let ratios = [8u64, 16, 32, 64];
+    let mut jobs = Vec::new();
+    for &r in &ratios {
+        for wl in SENSITIVITY_SUBSET {
+            for dp in [
+                DesignPoint::MemPod,
+                DesignPoint::TrimmaFlat,
+                DesignPoint::LinearCache,
+                DesignPoint::TrimmaCache,
+            ] {
+                let cfg = presets::with_capacity_ratio(
+                    scaled(preset(Tech::Hbm3Ddr5, dp), scale),
+                    r,
+                );
+                jobs.push(Job::new(format!("{}@{r}:{wl}", dp.label()), cfg, wl));
+            }
+        }
+    }
+    let reps = run_jobs(&jobs, threads);
+    let mut t = Table::new(
+        "fig12a: Trimma speedup vs capacity ratio (geomean)",
+        &["ratio", "trimma-f_vs_mempod", "trimma-c_vs_linear"],
+    );
+    let per_ratio = SENSITIVITY_SUBSET.len() * 4;
+    for (i, &r) in ratios.iter().enumerate() {
+        let chunk = &reps[i * per_ratio..(i + 1) * per_ratio];
+        let mut flat = vec![];
+        let mut cache = vec![];
+        for q in chunk.chunks(4) {
+            flat.push(q[1].performance() / q[0].performance());
+            cache.push(q[3].performance() / q[2].performance());
+        }
+        t.row(vec![
+            format!("{r}:1"),
+            fmt(geomean(&flat)),
+            fmt(geomean(&cache)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 12b: performance vs migration block size, normalized to 256 B.
+pub fn fig12b(scale: f64, threads: usize) -> Vec<Table> {
+    let blocks = [64u32, 256, 1024, 4096];
+    let mut jobs = Vec::new();
+    for &b in &blocks {
+        for wl in SENSITIVITY_SUBSET {
+            let cfg = presets::with_block_bytes(
+                scaled(preset(Tech::Hbm3Ddr5, DesignPoint::TrimmaCache), scale),
+                b,
+            );
+            jobs.push(Job::new(format!("b{b}:{wl}"), cfg, wl));
+        }
+    }
+    let reps = run_jobs(&jobs, threads);
+    let n = SENSITIVITY_SUBSET.len();
+    let perf: Vec<f64> = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            geomean(
+                &reps[i * n..(i + 1) * n]
+                    .iter()
+                    .map(|r| r.performance())
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let base = perf[1]; // 256 B
+    let mut t = Table::new(
+        "fig12b: performance vs block size (norm. 256B, geomean)",
+        &["block_bytes", "relative_perf"],
+    );
+    for (b, p) in blocks.iter().zip(&perf) {
+        t.row(vec![b.to_string(), fmt(p / base)]);
+    }
+    vec![t]
+}
+
+// --------------------------------------------------------------- fig 13
+
+/// Fig. 13a: iRT level count ablation (1 = linear, 2 = Trimma, 4 = Tag
+/// Tables-like), normalized to 2-level.
+pub fn fig13a(scale: f64, threads: usize) -> Vec<Table> {
+    let levels = [1u32, 2, 4];
+    let mut jobs = Vec::new();
+    for &lv in &levels {
+        for wl in SENSITIVITY_SUBSET {
+            let mut cfg = scaled(preset(Tech::Hbm3Ddr5, DesignPoint::TrimmaCache), scale);
+            cfg.hybrid.scheme = crate::config::MetadataScheme::Irt { levels: lv };
+            jobs.push(Job::new(format!("irt{lv}:{wl}"), cfg, wl));
+        }
+    }
+    let reps = run_jobs(&jobs, threads);
+    let n = SENSITIVITY_SUBSET.len();
+    let perf: Vec<f64> = levels
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            geomean(
+                &reps[i * n..(i + 1) * n]
+                    .iter()
+                    .map(|r| r.performance())
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let mut t = Table::new(
+        "fig13a: iRT level ablation (norm. 2-level, geomean)",
+        &["levels", "relative_perf"],
+    );
+    for (lv, p) in levels.iter().zip(&perf) {
+        t.row(vec![lv.to_string(), fmt(p / perf[1])]);
+    }
+    vec![t]
+}
+
+/// iRC partition for a given fraction of SRAM spent on the IdCache,
+/// holding total capacity at the conventional 2048x8 budget.
+pub fn irc_partition(id_frac: f64) -> RemapCacheKind {
+    if id_frac <= 0.0 {
+        return presets::conventional_rc();
+    }
+    // 16384 entries total; IdCache lines cost one entry's SRAM each.
+    let id_lines = (16384.0 * id_frac) as u32;
+    let id_ways = 16u32;
+    let id_sets = (id_lines / id_ways).next_power_of_two().max(1) / 2 * 2;
+    let id_sets = id_sets.max(1);
+    let nonid_ways = (((16384.0 * (1.0 - id_frac)) as u32) / 2048).max(1);
+    RemapCacheKind::Irc {
+        nonid_sets: 2048,
+        nonid_ways,
+        id_sets,
+        id_ways,
+        superblock_blocks: 32,
+    }
+}
+
+/// Fig. 13b: iRC capacity split between NonIdCache and IdCache.
+pub fn fig13b(scale: f64, threads: usize) -> Vec<Table> {
+    let fracs = [0.0, 0.125, 0.25, 0.5, 0.75];
+    let mut jobs = Vec::new();
+    for &f in &fracs {
+        for wl in SENSITIVITY_SUBSET {
+            let mut cfg = scaled(preset(Tech::Hbm3Ddr5, DesignPoint::TrimmaFlat), scale);
+            cfg.hybrid.remap_cache = irc_partition(f);
+            jobs.push(Job::new(format!("id{f}:{wl}"), cfg, wl));
+        }
+    }
+    let reps = run_jobs(&jobs, threads);
+    let n = SENSITIVITY_SUBSET.len();
+    let mut t = Table::new(
+        "fig13b: iRC IdCache capacity fraction (norm. 25%, geomean)",
+        &["id_frac", "relative_perf", "rc_hit_rate"],
+    );
+    let perf: Vec<f64> = fracs
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            geomean(
+                &reps[i * n..(i + 1) * n]
+                    .iter()
+                    .map(|r| r.performance())
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let base = perf[2]; // 25%
+    for (i, &f) in fracs.iter().enumerate() {
+        let hits: f64 = reps[i * n..(i + 1) * n]
+            .iter()
+            .map(|r| r.stats.rc_hit_rate())
+            .sum::<f64>()
+            / n as f64;
+        t.row(vec![pct(f), fmt(perf[i] / base), pct(hits)]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_known() {
+        for id in ALL_FIGURES {
+            // Existence check only (scale tiny smoke runs live in
+            // rust/tests/end_to_end.rs; running all figures here would be
+            // too slow for unit tests).
+            assert!(matches!(
+                *id,
+                "fig1" | "fig7a" | "fig7b" | "fig8" | "fig9" | "fig10" | "fig11"
+                    | "fig12a" | "fig12b" | "fig13a" | "fig13b"
+            ));
+        }
+        assert!(run_figure("nope", 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn irc_partition_budget() {
+        assert_eq!(irc_partition(0.0), presets::conventional_rc());
+        if let RemapCacheKind::Irc { nonid_ways, id_sets, id_ways, .. } = irc_partition(0.25) {
+            assert_eq!(nonid_ways, 6);
+            assert!(id_sets * id_ways <= 4096 + 2048);
+        } else {
+            panic!("expected irc");
+        }
+    }
+}

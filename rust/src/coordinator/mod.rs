@@ -1,0 +1,215 @@
+//! Experiment coordinator: parallel simulation jobs, result tables, and
+//! the per-figure sweeps that regenerate the paper's evaluation
+//! ([`figures`]).
+//!
+//! Jobs fan out over `std::thread` workers (one simulation per job; each
+//! worker constructs its own workload/controller, so nothing non-`Send`
+//! crosses threads). Results come back as [`crate::sim::SimReport`]s and
+//! are formatted into [`Table`]s (markdown to stdout, CSV under
+//! `results/`).
+
+pub mod figures;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::SystemConfig;
+use crate::hybrid::{build_controller, tagmatch::TagMatchController, Controller};
+use crate::sim::{SimReport, Simulation};
+use crate::workloads;
+
+/// Which controller a job uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// The configured design point.
+    Normal,
+    /// The metadata-free oracle (Fig. 1 "Ideal").
+    Ideal,
+    /// Generic a-way tag matching (Fig. 1 "tag matching").
+    TagMatch,
+}
+
+/// One simulation to run.
+#[derive(Clone)]
+pub struct Job {
+    pub label: String,
+    pub cfg: SystemConfig,
+    pub workload: String,
+    pub kind: JobKind,
+}
+
+impl Job {
+    pub fn new(label: impl Into<String>, cfg: SystemConfig, workload: &str) -> Self {
+        Job { label: label.into(), cfg, workload: workload.to_string(), kind: JobKind::Normal }
+    }
+}
+
+/// Run one job to completion.
+pub fn run_job(job: &Job) -> SimReport {
+    let wl = workloads::by_name(&job.workload, &job.cfg)
+        .unwrap_or_else(|| panic!("unknown workload {}", job.workload));
+    let ctrl: Box<dyn Controller> = match job.kind {
+        JobKind::Normal => build_controller(&job.cfg, false),
+        JobKind::Ideal => build_controller(&job.cfg, true),
+        JobKind::TagMatch => Box::new(TagMatchController::new(&job.cfg)),
+    };
+    let mut sim = Simulation::with_controller(&job.cfg, wl, ctrl);
+    sim.run()
+}
+
+/// Run jobs in parallel across up to `threads` workers (0 = all cores).
+/// Results are returned in job order.
+pub fn run_jobs(jobs: &[Job], threads: usize) -> Vec<SimReport> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(jobs.len().max(1));
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; jobs.len()]);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let rep = run_job(&jobs[i]);
+                results.lock().unwrap()[i] = Some(rep);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job completed"))
+        .collect()
+}
+
+/// A result table: markdown for the terminal, CSV for `results/`.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "{}", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        out += &format!("| {} |\n", self.columns.join(" | "));
+        out += &format!("|{}\n", "---|".repeat(self.columns.len()));
+        for r in &self.rows {
+            out += &format!("| {} |\n", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = self.columns.join(",") + "\n";
+        for r in &self.rows {
+            out += &(r.join(",") + "\n");
+        }
+        out
+    }
+
+    /// Write CSV under `results/<name>.csv` (directory created if needed).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+}
+
+/// Format helpers used across figures.
+pub fn fmt(v: f64) -> String {
+    format!("{v:.3}")
+}
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    fn tiny(dp: DesignPoint) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(dp);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg.workload.cores = 4;
+        cfg.workload.accesses_per_core = 1500;
+        cfg.workload.warmup_per_core = 500;
+        cfg
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let jobs: Vec<Job> = ["gap_pr", "ycsb_b"]
+            .iter()
+            .map(|w| Job::new(*w, tiny(DesignPoint::TrimmaCache), w))
+            .collect();
+        let par = run_jobs(&jobs, 2);
+        let ser: Vec<_> = jobs.iter().map(run_job).collect();
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.stats.max_core_cycles, s.stats.max_core_cycles);
+        }
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert!(t.markdown().contains("| 1 | 2 |"));
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn tagmatch_job_kind_runs() {
+        let mut cfg = tiny(DesignPoint::AlloyCache);
+        cfg.hybrid.num_sets = ((cfg.hybrid.fast_bytes / 256) / 64) as u32; // 64-way
+        let job = Job {
+            label: "tag64".into(),
+            cfg,
+            workload: "gap_pr".into(),
+            kind: JobKind::TagMatch,
+        };
+        let rep = run_job(&job);
+        assert!(rep.stats.metadata_cycles > 0);
+    }
+}

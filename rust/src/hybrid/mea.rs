@@ -1,0 +1,124 @@
+//! MemPod's Majority Element Algorithm (MEA) activity tracker
+//! (Prodromou et al., HPCA'17).
+//!
+//! Per pod (set), a small array of `(candidate, count)` pairs tracks the
+//! hottest slow-tier blocks using the classic Misra-Gries majority-element
+//! scheme: a hit increments, an empty/zero slot adopts the new candidate,
+//! otherwise *all* counters decrement. At every epoch boundary the blocks
+//! still holding counters are (by the MEA guarantee) the most frequently
+//! accessed of the epoch and get migrated into the fast tier.
+
+/// MEA tracker for one set/pod.
+#[derive(Debug, Clone)]
+pub struct MeaTracker {
+    entries: Vec<(u64, u32)>, // (per-set phys idx, count)
+    accesses_this_epoch: u64,
+    epoch_len: u64,
+}
+
+impl MeaTracker {
+    /// `counters`: number of tracked candidates (MemPod uses 32 per pod).
+    /// `epoch_len`: accesses per epoch before a migration round.
+    pub fn new(counters: usize, epoch_len: u64) -> Self {
+        MeaTracker {
+            entries: vec![(u64::MAX, 0); counters],
+            accesses_this_epoch: 0,
+            epoch_len,
+        }
+    }
+
+    /// Record a slow-tier access. Returns `true` if an epoch boundary was
+    /// reached (caller should then drain candidates and migrate).
+    pub fn record(&mut self, idx: u64) -> bool {
+        self.accesses_this_epoch += 1;
+        let mut decrement_all = true;
+        for e in self.entries.iter_mut() {
+            if e.0 == idx {
+                e.1 += 1;
+                decrement_all = false;
+                break;
+            }
+        }
+        if decrement_all {
+            // Adopt a free (zero-count) slot if any.
+            if let Some(e) = self.entries.iter_mut().find(|e| e.1 == 0) {
+                *e = (idx, 1);
+                decrement_all = false;
+            }
+        }
+        if decrement_all {
+            for e in self.entries.iter_mut() {
+                e.1 = e.1.saturating_sub(1);
+            }
+        }
+        if self.accesses_this_epoch >= self.epoch_len {
+            self.accesses_this_epoch = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Candidates surviving the epoch with count >= `threshold`, hottest
+    /// first. Counters reset for the next epoch.
+    pub fn drain_hot(&mut self, threshold: u32) -> Vec<u64> {
+        let mut hot: Vec<(u64, u32)> = self
+            .entries
+            .iter()
+            .filter(|e| e.0 != u64::MAX && e.1 >= threshold)
+            .copied()
+            .collect();
+        hot.sort_by(|a, b| b.1.cmp(&a.1));
+        for e in self.entries.iter_mut() {
+            *e = (u64::MAX, 0);
+        }
+        hot.into_iter().map(|e| e.0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_block_survives_epoch() {
+        let mut m = MeaTracker::new(4, 100);
+        for i in 0..99u64 {
+            // Block 7 every other access; noise otherwise.
+            m.record(if i % 2 == 0 { 7 } else { 1000 + i });
+        }
+        assert!(m.record(7)); // 100th access: epoch boundary
+        let hot = m.drain_hot(2);
+        assert_eq!(hot.first(), Some(&7));
+    }
+
+    #[test]
+    fn uniform_noise_yields_no_hot_blocks() {
+        let mut m = MeaTracker::new(4, 64);
+        for i in 0..63u64 {
+            m.record(i * 13);
+        }
+        m.record(9999);
+        let hot = m.drain_hot(3);
+        assert!(hot.is_empty(), "{hot:?}");
+    }
+
+    #[test]
+    fn drain_resets_counters() {
+        let mut m = MeaTracker::new(2, 10);
+        for _ in 0..10 {
+            m.record(5);
+        }
+        assert_eq!(m.drain_hot(1), vec![5]);
+        assert!(m.drain_hot(1).is_empty());
+    }
+
+    #[test]
+    fn epoch_boundary_cadence() {
+        let mut m = MeaTracker::new(2, 3);
+        assert!(!m.record(1));
+        assert!(!m.record(1));
+        assert!(m.record(1));
+        assert!(!m.record(1));
+    }
+}

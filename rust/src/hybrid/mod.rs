@@ -1,0 +1,77 @@
+//! Hybrid memory controllers: the access flow of paper Fig. 3 over the two
+//! memory tiers, for every evaluated design point.
+//!
+//! * [`remap`] — the general remap-table engine behind Trimma-C, Trimma-F,
+//!   the linear-table cache design, MemPod, and the metadata-free Ideal
+//!   oracle. Handles cache and flat modes, demand caching, MEA epoch
+//!   migration, saved-metadata-space caching, and all table/remap-cache
+//!   bookkeeping.
+//! * [`alloy`] — Alloy Cache (Qureshi & Loh, MICRO'12): direct-mapped,
+//!   tag-and-data in one burst, perfect memory-access predictor.
+//! * [`lohhill`] — Loh-Hill Cache (MICRO'11): 30-way within an 8 kB row,
+//!   tags-in-row, perfect MissMap, RRIP replacement.
+//! * [`mea`] — MemPod's Majority Element Algorithm counters.
+//!
+//! All controllers implement [`Controller`]: the simulation engine feeds
+//! them LLC-miss accesses in `(set, per-set index)` physical form and gets
+//! back the demand latency; everything else (migration, metadata updates)
+//! happens off the critical path but still occupies device banks.
+
+pub mod alloy;
+pub mod lohhill;
+pub mod mea;
+pub mod remap;
+pub mod tagmatch;
+
+use crate::config::{MetadataScheme, Mode, SystemConfig};
+use crate::metadata::SetLayout;
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle};
+
+/// A hybrid-memory controller under test.
+pub trait Controller {
+    /// One demand access (an LLC miss or LLC dirty writeback) to physical
+    /// `(set, idx)`, 64 B line `line` within the block, arriving at cycle
+    /// `now`. Returns the demand latency in cycles (metadata lookup + data
+    /// access; fills/migrations excluded).
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle;
+
+    /// Snapshot end-of-run gauges (metadata size, donated slots) into stats.
+    fn finalize(&mut self);
+
+    /// Reset statistics (end of warmup). Structural state is kept.
+    fn reset_stats(&mut self);
+
+    fn stats(&self) -> &Stats;
+
+    fn layout(&self) -> &SetLayout;
+}
+
+/// Build the controller for a system configuration. `ideal = true` builds
+/// the metadata-free oracle of Fig. 1 regardless of `cfg.hybrid.scheme`.
+pub fn build_controller(cfg: &SystemConfig, ideal: bool) -> Box<dyn Controller> {
+    match (ideal, cfg.hybrid.scheme, cfg.hybrid.mode) {
+        (true, _, _) => Box::new(remap::RemapController::new(cfg, true)),
+        (_, MetadataScheme::TagAlloy, Mode::Cache) => Box::new(alloy::AlloyController::new(cfg)),
+        (_, MetadataScheme::TagLohHill, Mode::Cache) => {
+            Box::new(lohhill::LohHillController::new(cfg))
+        }
+        _ => Box::new(remap::RemapController::new(cfg, false)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    #[test]
+    fn factory_builds_every_preset() {
+        for dp in DesignPoint::ALL {
+            let cfg = presets::hbm3_ddr5(*dp);
+            let ideal = *dp == DesignPoint::Ideal;
+            let c = build_controller(&cfg, ideal);
+            assert_eq!(c.stats().mem_accesses, 0);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Generic a-way tag-matching controller — the "tag matching" series of
+//! paper Fig. 1.
+//!
+//! Tags live in the fast memory next to the data (no dedicated region, as
+//! in Alloy/Loh-Hill), but at associativity `a` a lookup must fetch
+//! `ceil(a * 4 B / 64 B)` tag bursts before the data access — the cost that
+//! makes cache-style tag matching collapse at high associativities (§2.2):
+//! "for designs with associativities higher than 16, multiple metadata
+//! lookups are needed".
+
+use crate::config::SystemConfig;
+use crate::hybrid::Controller;
+use crate::mem::MemDevice;
+use crate::metadata::SetLayout;
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle};
+
+const LINE_BYTES: u32 = 64;
+const TAG_BYTES: u64 = 4;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct WayState {
+    phys: u32,
+    dirty: bool,
+    valid: bool,
+}
+
+/// a-way set-associative tag-matching DRAM cache, FIFO replacement.
+pub struct TagMatchController {
+    layout: SetLayout,
+    fast: MemDevice,
+    slow: MemDevice,
+    ways: Vec<WayState>,
+    fifo: Vec<u32>,
+    assoc: usize,
+    stats: Stats,
+    block_bytes: u32,
+    /// Tag bursts per lookup: ceil(assoc * 4 / 64).
+    tag_bursts: u32,
+}
+
+impl TagMatchController {
+    /// `cfg.hybrid.num_sets` must already encode the desired associativity
+    /// (`fast_blocks / assoc`).
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let layout = SetLayout::for_config(&cfg.hybrid, true); // no region
+        let assoc = layout.fast_per_set as usize;
+        TagMatchController {
+            layout,
+            fast: MemDevice::new(cfg.fast_mem),
+            slow: MemDevice::new(cfg.slow_mem),
+            ways: vec![WayState::default(); layout.num_sets as usize * assoc],
+            fifo: vec![0; layout.num_sets as usize],
+            assoc,
+            stats: Stats::default(),
+            block_bytes: cfg.hybrid.block_bytes,
+            tag_bursts: ((assoc as u64 * TAG_BYTES).div_ceil(LINE_BYTES as u64)) as u32,
+        }
+    }
+
+    /// Serial chain of tag-burst reads (row hits after the first).
+    fn probe_tags(&mut self, set: u32, now: Cycle) -> Cycle {
+        let mut t = now;
+        let base = self.layout.device_byte_addr(set, 0);
+        for i in 0..self.tag_bursts {
+            let r = self.fast.access(
+                base + (i as u64 * LINE_BYTES as u64) % (self.block_bytes as u64),
+                LINE_BYTES,
+                AccessKind::Read,
+                t,
+            );
+            t = r.done;
+            self.stats.metadata_traffic_bytes += LINE_BYTES as u64;
+            self.stats.fast_traffic_bytes += LINE_BYTES as u64;
+        }
+        self.stats.metadata_cycles += t - now;
+        t
+    }
+}
+
+impl Controller for TagMatchController {
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        let _ = line; // whole-block designs ignore the sub-block offset
+        self.stats.mem_accesses += 1;
+        match kind {
+            AccessKind::Read => self.stats.mem_reads += 1,
+            AccessKind::Write => self.stats.mem_writes += 1,
+        }
+        self.stats.useful_bytes += LINE_BYTES as u64;
+
+        // Tags must be checked before knowing hit/miss.
+        let after_tags = self.probe_tags(set, now);
+
+        let base = set as usize * self.assoc;
+        let hit = self.ways[base..base + self.assoc]
+            .iter()
+            .position(|w| w.valid && w.phys as u64 == idx);
+        if let Some(w) = hit {
+            let addr = self.layout.device_byte_addr(set, w as u64);
+            let r = self.fast.access(addr, LINE_BYTES, kind, after_tags);
+            self.stats.fast_served += 1;
+            self.stats.fast_traffic_bytes += LINE_BYTES as u64;
+            self.stats.fast_data_cycles += r.done - after_tags;
+            self.ways[base + w].dirty |= kind.is_write();
+            r.done - now
+        } else {
+            let addr = self.layout.device_byte_addr(set, idx);
+            let r = self.slow.access(addr, LINE_BYTES, kind, after_tags);
+            self.stats.slow_served += 1;
+            self.stats.slow_traffic_bytes += LINE_BYTES as u64;
+            self.stats.slow_data_cycles += r.done - after_tags;
+            // FIFO fill.
+            let bb = self.block_bytes;
+            let w = self.fifo[set as usize] as usize % self.assoc;
+            self.fifo[set as usize] = (w as u32 + 1) % self.assoc as u32;
+            let victim = self.ways[base + w];
+            if victim.valid {
+                self.stats.evictions += 1;
+                if victim.dirty {
+                    let home = self.layout.device_byte_addr(set, victim.phys as u64);
+                    self.fast.access(self.layout.device_byte_addr(set, w as u64), bb, AccessKind::Read, r.done);
+                    self.slow.access(home, bb, AccessKind::Write, r.done);
+                    self.stats.writeback_bytes += bb as u64;
+                    self.stats.migration_bytes += bb as u64;
+                    self.stats.fast_traffic_bytes += bb as u64;
+                    self.stats.slow_traffic_bytes += bb as u64;
+                }
+            }
+            self.slow.access(self.layout.device_byte_addr(set, idx), bb, AccessKind::Read, r.done);
+            self.fast.access(self.layout.device_byte_addr(set, w as u64), bb, AccessKind::Write, r.done);
+            self.stats.migration_bytes += bb as u64;
+            self.stats.fast_traffic_bytes += bb as u64;
+            self.stats.slow_traffic_bytes += bb as u64;
+            self.stats.fills += 1;
+            self.ways[base + w] = WayState { phys: idx as u32, dirty: kind.is_write(), valid: true };
+            r.done - now
+        }
+    }
+
+    fn finalize(&mut self) {
+        self.stats.metadata_bytes_used = 0; // tags embedded with data
+        self.stats.metadata_bytes_reserved = 0;
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = Stats::default();
+    }
+
+    fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    fn layout(&self) -> &SetLayout {
+        &self.layout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    fn cfg(assoc: u32) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        cfg.hybrid.fast_bytes = 256 << 10;
+        cfg.hybrid.slow_bytes = 8 << 20;
+        cfg.hybrid.num_sets = ((cfg.hybrid.fast_bytes / 256) / assoc as u64) as u32;
+        cfg
+    }
+
+    #[test]
+    fn tag_burst_count_scales_with_assoc() {
+        assert_eq!(TagMatchController::new(&cfg(1)).tag_bursts, 1);
+        assert_eq!(TagMatchController::new(&cfg(16)).tag_bursts, 1);
+        assert_eq!(TagMatchController::new(&cfg(64)).tag_bursts, 4);
+        assert_eq!(TagMatchController::new(&cfg(1024)).tag_bursts, 64);
+    }
+
+    #[test]
+    fn high_assoc_pays_more_metadata_latency() {
+        let run = |assoc| {
+            let c = cfg(assoc);
+            let mut ctl = TagMatchController::new(&c);
+            let idx = ctl.layout.fast_per_set + 7;
+            ctl.access(0, idx, 0, AccessKind::Read, 0);
+            ctl.access(0, idx, 0, AccessKind::Read, 100_000);
+            ctl.stats.metadata_cycles
+        };
+        assert!(run(1024) > 4 * run(16));
+    }
+
+    #[test]
+    fn hit_after_fill_within_assoc() {
+        let c = cfg(16);
+        let mut ctl = TagMatchController::new(&c);
+        let f = ctl.layout.fast_per_set;
+        let mut t = 0;
+        for n in 0..16 {
+            ctl.access(0, f + n, 0, AccessKind::Read, t);
+            t += 3000;
+        }
+        for n in 0..16 {
+            ctl.access(0, f + n, 0, AccessKind::Read, t);
+            t += 3000;
+        }
+        assert_eq!(ctl.stats.fast_served, 16);
+        assert_eq!(ctl.stats.evictions, 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! # trimma — a reproduction of *Trimma: Trimming Metadata Storage and
+//! Latency for Hybrid Memory Systems* (PACT '24).
+//!
+//! This crate is a full hybrid-memory-system simulation framework built
+//! around the paper's two contributions:
+//!
+//! * [`metadata::irt`] — the **indirection-based remap table** (iRT): a
+//!   hardware-managed, per-set radix tree that only stores remap entries for
+//!   blocks that actually moved, and donates the saved fast-memory blocks as
+//!   extra DRAM-cache capacity.
+//! * [`metadata::irc`] — the **identity-mapping-aware remap cache** (iRC): an
+//!   on-chip remap cache split into a conventional `NonIdCache` and a
+//!   sector-cache-style `IdCache` holding 1-bit-per-block identity vectors.
+//!
+//! Around those we rebuild every substrate the paper's evaluation depends
+//! on: DRAM/HBM/NVM device timing ([`mem`]), a CPU cache hierarchy
+//! ([`cachesim`]), cache-mode and flat-mode hybrid memory controllers plus
+//! the Alloy-Cache, Loh-Hill-Cache, and MemPod baselines ([`hybrid`]),
+//! calibrated synthetic workload generators standing in for SPEC CPU 2017 /
+//! GAP / silo / memcached ([`workloads`]), a 16-core trace-driven simulation
+//! engine ([`sim`]), and an experiment coordinator that regenerates every
+//! figure in the paper ([`coordinator`]).
+//!
+//! The AOT-compiled JAX/Pallas trace generator is loaded through
+//! [`runtime`] (PJRT CPU client); Python never runs at simulation time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use trimma::config::presets;
+//! use trimma::sim::Simulation;
+//!
+//! let cfg = presets::hbm3_ddr5(presets::DesignPoint::TrimmaCache);
+//! let mut sim = Simulation::new(&cfg, trimma::workloads::by_name("gap_pr", &cfg).unwrap());
+//! let report = sim.run();
+//! println!("IPC-proxy perf: {:.4}", report.performance());
+//! ```
+
+pub mod bench_util;
+pub mod cachesim;
+pub mod config;
+pub mod coordinator;
+pub mod hybrid;
+pub mod mem;
+pub mod metadata;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod types;
+pub mod workloads;
+
+pub use config::SystemConfig;

@@ -1,0 +1,249 @@
+//! `trimma` CLI — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! trimma list                               available workloads / presets
+//! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
+//!            [--accesses N] [--ideal] [--ratio R] [--block B]
+//! trimma sweep --figure fig7a [--quick] [--threads N]
+//! trimma sweep --all [--quick]
+//! trimma analyze --workload gap_pr          hotness analysis via the AOT
+//!                                           artifact (PJRT; no python)
+//! trimma dump-config --design trimma-c [--mem hbm3+ddr5]
+//! ```
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::SystemConfig;
+use trimma::coordinator::{figures, fmt, pct, run_job, Job, JobKind};
+
+const USAGE: &str = "\
+trimma — Trimma (PACT'24) hybrid-memory metadata simulator
+
+  trimma list                               workloads / designs / figures
+  trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
+             [--accesses N] [--cores N] [--ideal] [--ratio R] [--block B]
+  trimma sweep --figure fig7a [--quick] [--threads N]
+  trimma sweep --all [--quick]
+  trimma compare --designs trimma-c,alloy --workload gap_pr
+  trimma analyze --workload gap_pr          AOT hotness artifact via PJRT
+  trimma dump-config --design trimma-c [--mem hbm3+ddr5]";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let has = |flag: &str| args.iter().any(|a| a == flag);
+
+    match cmd {
+        "list" => list(),
+        "run" => run(&get, &has),
+        "compare" => compare(&get),
+        "sweep" => sweep(&get, &has),
+        "analyze" => analyze(&get),
+        "dump-config" => {
+            let cfg = build_cfg(&get);
+            println!("{}", cfg.describe());
+        }
+        _ => println!("{USAGE}"),
+    }
+}
+
+fn design_of(name: &str) -> DesignPoint {
+    match name {
+        "alloy" => DesignPoint::AlloyCache,
+        "loh-hill" => DesignPoint::LohHill,
+        "trimma-c" => DesignPoint::TrimmaCache,
+        "mempod" => DesignPoint::MemPod,
+        "trimma-f" => DesignPoint::TrimmaFlat,
+        "linear-c" => DesignPoint::LinearCache,
+        "ideal" => DesignPoint::Ideal,
+        other => {
+            eprintln!("unknown design '{other}' (see `trimma list`)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_cfg(get: &dyn Fn(&str) -> Option<String>) -> SystemConfig {
+    let dp = design_of(&get("--design").unwrap_or_else(|| "trimma-c".into()));
+    let mem = get("--mem").unwrap_or_else(|| "hbm3+ddr5".into());
+    let mut cfg = match mem.as_str() {
+        "hbm3+ddr5" => presets::hbm3_ddr5(dp),
+        "ddr5+nvm" => presets::ddr5_nvm(dp),
+        other => {
+            eprintln!("unknown memory combo '{other}' (hbm3+ddr5 | ddr5+nvm)");
+            std::process::exit(2);
+        }
+    };
+    if let Some(r) = get("--ratio") {
+        cfg = presets::with_capacity_ratio(cfg, r.parse().expect("--ratio"));
+    }
+    if let Some(b) = get("--block") {
+        cfg = presets::with_block_bytes(cfg, b.parse().expect("--block"));
+    }
+    if let Some(n) = get("--accesses") {
+        cfg.workload.accesses_per_core = n.parse().expect("--accesses");
+    }
+    if let Some(n) = get("--cores") {
+        cfg.workload.cores = n.parse().expect("--cores");
+    }
+    cfg.validate().unwrap_or_else(|e| {
+        eprintln!("invalid config: {e}");
+        std::process::exit(2);
+    });
+    cfg
+}
+
+fn list() {
+    println!("designs:   alloy loh-hill trimma-c mempod trimma-f linear-c ideal");
+    println!("memories:  hbm3+ddr5 ddr5+nvm");
+    println!("figures:   {}", figures::ALL_FIGURES.join(" "));
+    println!("workloads:");
+    for w in trimma::workloads::SUITE {
+        println!("  {w}");
+    }
+}
+
+fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
+    let cfg = build_cfg(get);
+    let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
+    let kind = if has("--ideal") { JobKind::Ideal } else { JobKind::Normal };
+    let job = Job { label: format!("{}:{}", cfg.name, wl), cfg, workload: wl, kind };
+    let t0 = std::time::Instant::now();
+    let rep = run_job(&job);
+    let dt = t0.elapsed();
+    let s = &rep.stats;
+    println!("== {} / {} ==", job.cfg.name, rep.name);
+    println!("performance (IPC proxy):   {}", fmt(rep.performance()));
+    println!("fast-mem serve rate:       {}", pct(s.fast_serve_rate()));
+    println!("bandwidth bloat factor:    {}", fmt(s.bandwidth_bloat()));
+    println!("remap cache hit rate:      {}", pct(s.rc_hit_rate()));
+    let (m, f, sl) = s.amat_breakdown();
+    println!("AMAT cycles (meta/fast/slow): {} / {} / {}", fmt(m), fmt(f), fmt(sl));
+    println!("metadata bytes used:       {}", s.metadata_bytes_used);
+    println!("metadata bytes reserved:   {}", s.metadata_bytes_reserved);
+    println!("donated cache slots:       {}", s.donated_slots);
+    println!("mem accesses:              {}", s.mem_accesses);
+    let em = if get("--mem").as_deref() == Some("ddr5+nvm") {
+        trimma::stats::energy::EnergyModel::ddr5_nvm()
+    } else {
+        trimma::stats::energy::EnergyModel::hbm3_ddr5()
+    };
+    let e = trimma::stats::energy::estimate(s, &em);
+    println!(
+        "energy (fast/slow/sram uJ): {:.1} / {:.1} / {:.1}  ({:.0} pJ/useful byte)",
+        e.fast_uj, e.slow_uj, e.sram_uj, e.pj_per_useful_byte(s)
+    );
+    println!(
+        "sim wall time: {:.2}s ({:.1} M instrs/s)",
+        dt.as_secs_f64(),
+        (s.instructions as f64 / 1e6) / dt.as_secs_f64().max(1e-9)
+    );
+}
+
+fn sweep(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
+    let scale = if has("--quick") { 0.1 } else { 1.0 };
+    let threads: usize = get("--threads").map(|t| t.parse().expect("--threads")).unwrap_or(0);
+    let figs: Vec<String> = if has("--all") {
+        figures::ALL_FIGURES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![get("--figure").unwrap_or_else(|| {
+            eprintln!("need --figure <id> or --all");
+            std::process::exit(2);
+        })]
+    };
+    for f in figs {
+        let t0 = std::time::Instant::now();
+        match figures::run_figure(&f, scale, threads) {
+            Some(tables) => {
+                for t in tables {
+                    println!("{}", t.markdown());
+                }
+                eprintln!("[{f}] done in {:.1}s (CSV under results/)", t0.elapsed().as_secs_f64());
+            }
+            None => eprintln!("unknown figure '{f}' (see `trimma list`)"),
+        }
+    }
+}
+
+/// Side-by-side design comparison on one workload.
+fn compare(get: &dyn Fn(&str) -> Option<String>) {
+    let designs = get("--designs").unwrap_or_else(|| "alloy,trimma-c".into());
+    let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
+    let mut rows = Vec::new();
+    for d in designs.split(',') {
+        let mut cfg = build_cfg(&|f: &str| {
+            if f == "--design" { Some(d.trim().to_string()) } else { get(f) }
+        });
+        if let Some(n) = get("--accesses") {
+            cfg.workload.accesses_per_core = n.parse().expect("--accesses");
+        }
+        let job = Job {
+            label: format!("{d}:{wl}"),
+            cfg,
+            workload: wl.clone(),
+            kind: if d.trim() == "ideal" { JobKind::Ideal } else { JobKind::Normal },
+        };
+        rows.push((d.trim().to_string(), run_job(&job)));
+    }
+    let base = rows[0].1.performance();
+    println!(
+        "{:<10} {:>9} {:>11} {:>9} {:>9} {:>12}",
+        "design", "speedup", "serve_rate", "rc_hit", "bloat", "meta_bytes"
+    );
+    for (d, r) in &rows {
+        let s = &r.stats;
+        println!(
+            "{:<10} {:>8.3}x {:>10.1}% {:>8.1}% {:>9.2} {:>12}",
+            d,
+            r.performance() / base,
+            s.fast_serve_rate() * 100.0,
+            s.rc_hit_rate() * 100.0,
+            s.bandwidth_bloat(),
+            s.metadata_bytes_used
+        );
+    }
+}
+
+/// Workload hotness analysis through the AOT `hotness` artifact — the
+/// L2 analysis graph running via PJRT, no python involved.
+fn analyze(get: &dyn Fn(&str) -> Option<String>) {
+    use trimma::runtime::{artifacts_dir, Runtime, HOT_BUCKETS, STEPS};
+    use trimma::workloads::suite;
+    use trimma::workloads::synth::TraceGen;
+
+    let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
+    let profile = suite::profile(&wl).unwrap_or_else(|| {
+        eprintln!("unknown workload '{wl}'");
+        std::process::exit(2);
+    });
+    let rt = Runtime::cpu().expect("PJRT client");
+    let hx = rt.hotness(&artifacts_dir()).expect("hotness artifact (make artifacts)");
+    let gen = TraceGen::new(profile, 512 << 20, 16);
+    let streams: Vec<u32> = (0..16).collect();
+    let (tables, slice) = gen.to_region_tables(&streams);
+    let mut hot = vec![0f32; HOT_BUCKETS];
+    let (mut wf_acc, mut mg_acc) = (0.0, 0.0);
+    let batches = 8u32;
+    for k in 0..batches {
+        let (h, wf, mg) = hx
+            .run(&streams, k * STEPS as u32, &slice, &tables, &hot, 0.9)
+            .expect("hotness batch");
+        hot = h;
+        wf_acc += wf as f64;
+        mg_acc += mg as f64;
+    }
+    let mut sorted = hot.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f32 = hot.iter().sum();
+    let top64: f32 = sorted.iter().take(64).sum();
+    println!("== workload analysis: {wl} (AOT hotness artifact, {batches} batches) ==");
+    println!("platform:            {}", rt.platform());
+    println!("footprint:           {} MiB", gen.footprint() >> 20);
+    println!("write fraction:      {}", pct(wf_acc / batches as f64));
+    println!("mean gap (instrs):   {:.1}", mg_acc / batches as f64);
+    println!("hotness concentration (top 64/1024 buckets): {}", pct((top64 / total) as f64));
+}

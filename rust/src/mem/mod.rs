@@ -1,0 +1,248 @@
+//! Memory device timing models: banked DRAM with row buffers (HBM3, DDR5)
+//! and constant-latency bandwidth-limited NVM (Optane-like).
+//!
+//! The model is cycle-accounting rather than fully event-driven: every bank
+//! keeps a `next_free` time and an open row; an access arriving at cycle
+//! `now` waits for its bank, pays tCAS / tRCD+tCAS / tRP+tRCD+tCAS depending
+//! on the row-buffer state, then occupies the bank for the burst-transfer
+//! time. This is the level of fidelity first-order hybrid-memory studies
+//! need (queueing + row locality + bandwidth ceilings) at simulation speeds
+//! of tens of millions of accesses per second.
+
+use crate::config::MemTech;
+use crate::types::{AccessKind, Cycle};
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Bank {
+    next_free: Cycle,
+    /// Currently open row id, or `u64::MAX` for closed.
+    open_row: u64,
+}
+
+/// Outcome of a device access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemResult {
+    /// Cycle at which data is available (read) or accepted (write).
+    pub done: Cycle,
+    /// True if the access hit an open row (DRAM only).
+    pub row_hit: bool,
+}
+
+/// A single memory device (one tier).
+#[derive(Debug, Clone)]
+pub struct MemDevice {
+    tech: MemTech,
+    /// Precomputed 1/bytes_per_cycle: turns the per-access transfer-time
+    /// division into a multiply (hot path: ~8 device accesses per miss).
+    inv_bpc: f64,
+    /// `log2(row_bytes * channels * banks)`: row-id extraction by shift.
+    row_span_bits: u32,
+    banks: Vec<Bank>,
+    /// Per-channel data-bus free time: transfers on one channel serialize,
+    /// which is what actually bounds throughput under load (a single DDR5
+    /// channel shared by 16 cores saturates long before its banks do).
+    bus_free: Vec<Cycle>,
+    channels: u32,
+    banks_per_channel: u32,
+    /// Cumulative bytes transferred (for utilization reporting).
+    pub bytes_transferred: u64,
+    /// Cumulative accesses.
+    pub accesses: u64,
+    row_hits: u64,
+}
+
+impl MemDevice {
+    pub fn new(tech: MemTech) -> Self {
+        let (channels, banks_per_channel) = match tech {
+            MemTech::Dram { channels, banks_per_channel, .. } => (channels, banks_per_channel),
+            MemTech::Nvm { channels, banks_per_channel, .. } => (channels, banks_per_channel),
+        };
+        let bpc = match tech {
+            MemTech::Dram { bytes_per_cycle, .. } => bytes_per_cycle,
+            MemTech::Nvm { bytes_per_cycle, .. } => bytes_per_cycle,
+        };
+        let row_bytes = match tech {
+            MemTech::Dram { row_bytes, .. } => row_bytes as u64,
+            MemTech::Nvm { .. } => 4096,
+        };
+        let row_span = row_bytes * channels as u64 * banks_per_channel as u64;
+        assert!(row_span.is_power_of_two(), "row span must be a power of two");
+        MemDevice {
+            tech,
+            inv_bpc: 1.0 / bpc,
+            row_span_bits: row_span.trailing_zeros(),
+            banks: vec![Bank { next_free: 0, open_row: u64::MAX }; (channels * banks_per_channel) as usize],
+            bus_free: vec![0; channels as usize],
+            channels,
+            banks_per_channel,
+            bytes_transferred: 0,
+            accesses: 0,
+            row_hits: 0,
+        }
+    }
+
+    pub fn tech(&self) -> &MemTech {
+        &self.tech
+    }
+
+    /// Map a device byte address to (bank index, row id). Blocks interleave
+    /// across channels first (256 B granularity), then banks, so contiguous
+    /// blocks spread across channels as real controllers do.
+    #[inline]
+    fn map(&self, addr: u64) -> (usize, u64) {
+        let block = addr >> 8; // 256 B channel-interleave granularity
+        let ch = (block % self.channels as u64) as u32;
+        let within = block / self.channels as u64;
+        let bank = (within % self.banks_per_channel as u64) as u32;
+        let row = addr >> self.row_span_bits;
+        ((ch * self.banks_per_channel + bank) as usize, row)
+    }
+
+    /// Issue an access of `bytes` at `addr`, arriving at `now`.
+    /// The bank is occupied until completion; callers decide whether the
+    /// returned latency is on the critical path (demand) or not (migration,
+    /// metadata updates).
+    pub fn access(&mut self, addr: u64, bytes: u32, kind: AccessKind, now: Cycle) -> MemResult {
+        let (bank_idx, row) = self.map(addr);
+        let ch = bank_idx / self.banks_per_channel as usize;
+        let bank = &mut self.banks[bank_idx];
+        let start = now.max(bank.next_free);
+        let transfer = (bytes as f64 * self.inv_bpc).ceil() as u64;
+        let (lat, row_hit) = match self.tech {
+            MemTech::Dram { t_rcd, t_cas, t_rp, .. } => {
+                let (lat, hit) = if bank.open_row == row {
+                    (t_cas, true)
+                } else if bank.open_row == u64::MAX {
+                    (t_rcd + t_cas, false)
+                } else {
+                    (t_rp + t_rcd + t_cas, false)
+                };
+                bank.open_row = row;
+                (lat, hit)
+            }
+            MemTech::Nvm { read_lat, write_lat, .. } => {
+                let lat = match kind {
+                    AccessKind::Read => read_lat,
+                    AccessKind::Write => write_lat,
+                };
+                (lat, false)
+            }
+        };
+        // The data burst must win the (per-channel) shared bus after the
+        // array access completes; transfers on a channel serialize.
+        let bus_start = (start + lat).max(self.bus_free[ch]);
+        let done = bus_start + transfer;
+        self.bus_free[ch] = done;
+        bank.next_free = done;
+        self.bytes_transferred += bytes as u64;
+        self.accesses += 1;
+        self.row_hits += row_hit as u64;
+        MemResult { done, row_hit }
+    }
+
+    /// Row-buffer hit rate so far (always 0 for NVM).
+    pub fn row_hit_rate(&self) -> f64 {
+        if self.accesses == 0 { 0.0 } else { self.row_hits as f64 / self.accesses as f64 }
+    }
+
+    /// Earliest cycle at which the bank holding `addr` is free (peek).
+    pub fn bank_free_at(&self, addr: u64) -> Cycle {
+        let (bank_idx, _) = self.map(addr);
+        self.banks[bank_idx].next_free
+    }
+
+    /// Unloaded (no-queue) access latency in cycles for a `bytes`-sized
+    /// read with a closed row: the best case a demand access can see.
+    pub fn unloaded_latency(&self, bytes: u32) -> u64 {
+        match self.tech {
+            MemTech::Dram { t_rcd, t_cas, bytes_per_cycle, .. } => {
+                t_rcd + t_cas + (bytes as f64 / bytes_per_cycle).ceil() as u64
+            }
+            MemTech::Nvm { read_lat, bytes_per_cycle, .. } => {
+                read_lat + (bytes as f64 / bytes_per_cycle).ceil() as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn hbm() -> MemDevice {
+        MemDevice::new(presets::hbm3())
+    }
+
+    #[test]
+    fn first_access_pays_rcd_cas() {
+        let mut d = hbm();
+        let r = d.access(0, 64, AccessKind::Read, 0);
+        // 48 + 48 + ceil(64/16) = 100
+        assert_eq!(r.done, 100);
+        assert!(!r.row_hit);
+    }
+
+    #[test]
+    fn second_access_same_row_is_cas_only() {
+        let mut d = hbm();
+        d.access(0, 64, AccessKind::Read, 0);
+        let r = d.access(64, 64, AccessKind::Read, 200);
+        // Same 8 kB row, open: 48 + 4 = 52 after arrival.
+        assert_eq!(r.done, 252);
+        assert!(r.row_hit);
+    }
+
+    #[test]
+    fn row_conflict_pays_precharge() {
+        let mut d = hbm();
+        d.access(0, 64, AccessKind::Read, 0);
+        // Same bank, different row: stride by channels*banks*row_bytes.
+        let far = 16u64 * 16 * 8192;
+        let r = d.access(far, 64, AccessKind::Read, 200);
+        assert_eq!(r.done, 200 + 48 + 48 + 48 + 4);
+        assert!(!r.row_hit);
+    }
+
+    #[test]
+    fn bank_queueing_serializes() {
+        let mut d = hbm();
+        let a = d.access(0, 256, AccessKind::Read, 0);
+        // Same bank (same address), arrives while busy: must wait.
+        let b = d.access(0, 256, AccessKind::Read, 1);
+        assert!(b.done > a.done);
+        assert_eq!(b.done, a.done + 48 + 16); // row hit + transfer
+    }
+
+    #[test]
+    fn different_channels_dont_queue() {
+        let mut d = hbm();
+        let a = d.access(0, 256, AccessKind::Read, 0);
+        let b = d.access(256, 256, AccessKind::Read, 0); // next block -> next channel
+        assert_eq!(a.done, b.done);
+    }
+
+    #[test]
+    fn nvm_read_write_asymmetry() {
+        let mut d = MemDevice::new(presets::nvm());
+        let r = d.access(0, 256, AccessKind::Read, 0);
+        let w = d.access(256, 256, AccessKind::Write, 0); // other channel
+        assert_eq!(r.done, 246 + 128);
+        assert_eq!(w.done, 739 + 128);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut d = hbm();
+        d.access(0, 256, AccessKind::Read, 0);
+        d.access(512, 64, AccessKind::Write, 0);
+        assert_eq!(d.bytes_transferred, 320);
+        assert_eq!(d.accesses, 2);
+    }
+
+    #[test]
+    fn unloaded_latency_matches_first_access() {
+        let mut d = hbm();
+        assert_eq!(d.unloaded_latency(64), d.access(0, 64, AccessKind::Read, 0).done);
+    }
+}

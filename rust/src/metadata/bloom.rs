@@ -1,0 +1,150 @@
+//! Bloom-filter alternative to the IdCache — implemented to *demonstrate*
+//! the paper's §3.4 argument for rejecting it, not to use it.
+//!
+//! The paper: "due to the false positives in Bloom filters, we cannot use
+//! them to store the identity-mapping set; doing so may incorrectly
+//! classify an address with non-identity mapping into the identity-mapping
+//! set" — i.e. a false positive would silently return *stale data from the
+//! wrong device address*. [`BloomIdFilter`] counts exactly those
+//! would-be-wrong classifications so the ablation bench can quantify the
+//! correctness violation rate at iRC-equivalent SRAM budgets (see
+//! `examples/bloom_ablation` rows in EXPERIMENTS.md).
+//!
+//! The filter itself is a standard blocked Bloom filter with `K` hashes
+//! over a power-of-two bit array, with deletion unsupported (another
+//! practical reason the paper's sector-cache design wins: identity sets
+//! churn on every migration).
+
+use crate::types::BlockId;
+
+/// A blocked Bloom filter over block ids.
+#[derive(Debug, Clone)]
+pub struct BloomIdFilter {
+    bits: Vec<u64>,
+    mask: u64,
+    k: u32,
+    /// Number of inserted keys (for load/FPR estimation).
+    pub inserted: u64,
+}
+
+impl BloomIdFilter {
+    /// `budget_bytes`: SRAM budget (the iRC IdCache uses ~16 kB in
+    /// Table 1); `k`: hash functions.
+    pub fn new(budget_bytes: usize, k: u32) -> Self {
+        let nbits = (budget_bytes * 8).next_power_of_two();
+        BloomIdFilter {
+            bits: vec![0u64; nbits / 64],
+            mask: nbits as u64 - 1,
+            k,
+            inserted: 0,
+        }
+    }
+
+    #[inline]
+    fn hash(&self, key: BlockId, i: u32) -> u64 {
+        // Two independent 64-bit mixes combined (Kirsch-Mitzenmacher).
+        let h1 = key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 17;
+        let h2 = key.wrapping_mul(0xC2B2_AE3D_27D4_EB4F) >> 13 | 1;
+        h1.wrapping_add((i as u64).wrapping_mul(h2)) & self.mask
+    }
+
+    pub fn insert(&mut self, key: BlockId) {
+        for i in 0..self.k {
+            let b = self.hash(key, i);
+            self.bits[(b / 64) as usize] |= 1 << (b % 64);
+        }
+        self.inserted += 1;
+    }
+
+    /// Probabilistic membership: true means "maybe identity".
+    pub fn contains(&self, key: BlockId) -> bool {
+        (0..self.k).all(|i| {
+            let b = self.hash(key, i);
+            self.bits[(b / 64) as usize] & (1 << (b % 64)) != 0
+        })
+    }
+
+    /// Measured false-positive rate over `probes` keys known to be absent.
+    pub fn measured_fpr(&self, absent_keys: impl Iterator<Item = BlockId>) -> f64 {
+        let mut total = 0u64;
+        let mut fp = 0u64;
+        for k in absent_keys {
+            total += 1;
+            fp += self.contains(k) as u64;
+        }
+        if total == 0 { 0.0 } else { fp as f64 / total as f64 }
+    }
+
+    /// Theoretical FPR at the current load.
+    pub fn expected_fpr(&self) -> f64 {
+        let m = (self.mask + 1) as f64;
+        let n = self.inserted as f64;
+        let k = self.k as f64;
+        (1.0 - (-k * n / m).exp()).powf(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Rng64;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut f = BloomIdFilter::new(16 << 10, 4);
+        for k in (0..10_000u64).map(|i| i * 7 + 1) {
+            f.insert(k);
+        }
+        for k in (0..10_000u64).map(|i| i * 7 + 1) {
+            assert!(f.contains(k), "bloom filters never false-negative");
+        }
+    }
+
+    #[test]
+    fn false_positives_exist_at_identity_set_scale() {
+        // The identity set of a 32:1 system is ~2M blocks; a 16 kB filter
+        // is hopelessly overloaded — exactly the paper's point.
+        let mut f = BloomIdFilter::new(16 << 10, 4);
+        let mut rng = Rng64::new(42);
+        for _ in 0..2_000_000u64 {
+            f.insert(rng.next_u64() | 1);
+        }
+        let fpr = f.measured_fpr((0..10_000u64).map(|i| i * 2)); // even keys: absent
+        assert!(
+            fpr > 0.5,
+            "overloaded filter must misclassify heavily (fpr = {fpr})"
+        );
+    }
+
+    #[test]
+    fn fpr_matches_theory_at_moderate_load() {
+        let mut f = BloomIdFilter::new(64 << 10, 4);
+        let mut rng = Rng64::new(7);
+        for _ in 0..50_000u64 {
+            f.insert(rng.next_u64() | 1);
+        }
+        let measured = f.measured_fpr((0..100_000u64).map(|i| i * 2));
+        let expected = f.expected_fpr();
+        assert!(
+            (measured - expected).abs() < 0.05,
+            "measured {measured} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn every_false_positive_is_a_correctness_violation() {
+        // A block with a *non-identity* mapping that the filter claims is
+        // identity would be read from the wrong address. Count them.
+        let mut f = BloomIdFilter::new(16 << 10, 4);
+        let identity: Vec<u64> = (0..500_000u64).map(|i| i * 3 + 1).collect();
+        for &k in &identity {
+            f.insert(k);
+        }
+        let moved: Vec<u64> = (0..50_000u64).map(|i| i * 3).collect(); // disjoint
+        let violations = moved.iter().filter(|&&k| f.contains(k)).count();
+        assert!(
+            violations > 0,
+            "at realistic scale the filter returns wrong data at least once"
+        );
+    }
+}

@@ -1,0 +1,461 @@
+//! Trimma's indirection-based remap table (iRT, §3.2 / Fig. 5).
+//!
+//! A per-set radix tree, fully managed in hardware:
+//!
+//! * The whole (worst-case) tree is linearized breadth-first into a
+//!   reserved, contiguous fast-memory region, so every entry has a *fixed*
+//!   address derivable from its tag bits — walks of all levels can issue in
+//!   parallel, and allocation never moves entries.
+//! * Leaf blocks hold `block_bytes / 4` four-byte remapped block IDs.
+//!   Intermediate blocks hold one *bit* per child ("allocated?"), so a
+//!   256 B index block covers 2048 children (11-bit tag chunks). With
+//!   `levels == 4` the index fanout drops to 64 (6-bit chunks), mimicking
+//!   Tag Tables for the Fig. 13a ablation. `levels == 1` degenerates to the
+//!   linear table (every leaf permanently resident, no bit vector).
+//! * A lookup that finds an unallocated block at any level returns the
+//!   identity mapping — unmoved and unallocated data need no metadata.
+//! * Unallocated *reserved* blocks (leaf or intermediate, never the root
+//!   level) are donated to the set as extra cache slots (§3.3); allocation
+//!   takes them back with priority, evicting any data cached there.
+
+use super::layout::{irt_level_blocks, SetLayout};
+use super::{MetaEvent, IDENTITY};
+
+#[derive(Debug, Clone)]
+struct SetTree {
+    /// Dense entry array over the per-set index space; `IDENTITY` = absent.
+    entries: Vec<u32>,
+    /// Per level (0 = leaf), per block: is the block allocated?
+    /// The root level is implicitly always allocated and has no vector here.
+    alloc: Vec<Vec<bool>>,
+    /// Per level, per block: live-children count. Level 0 counts
+    /// non-identity entries in the leaf; level `l` counts allocated blocks
+    /// of level `l-1`. Maintained for the root level too (no dealloc there,
+    /// but useful for invariants).
+    counts: Vec<Vec<u32>>,
+    /// Allocated non-root blocks (drives metadata size accounting).
+    allocated_nonroot: u64,
+    /// Reserved blocks currently donatable (unallocated, with a real slot).
+    donated: u64,
+}
+
+/// The indirection-based remap table.
+#[derive(Debug, Clone)]
+pub struct IrtTable {
+    levels: u32,
+    /// Index-space size (kept for debugging/assertions).
+    #[allow(dead_code)]
+    k: u64,
+    leaf_fanout: u64,
+    index_fanout: u64,
+    /// Blocks per level (0 = leaf, last = root).
+    level_blocks: Vec<u64>,
+    /// Offset of each level's first block within the metadata region
+    /// (leaves first, then each index level, root last).
+    level_offset: Vec<u64>,
+    data_ways: u64,
+    fast_per_set: u64,
+    block_bytes: u32,
+    sets: Vec<SetTree>,
+}
+
+impl IrtTable {
+    pub fn new(layout: &SetLayout, levels: u32) -> Self {
+        assert!((1..=4).contains(&levels));
+        let k = layout.indices_per_set();
+        assert!(k < IDENTITY as u64, "index space exceeds 4 B entry range");
+        let leaf_fanout = (layout.block_bytes / 4) as u64;
+        let index_fanout = if levels == 4 { 64 } else { (layout.block_bytes as u64) * 8 };
+        let level_blocks = irt_level_blocks(k, layout.block_bytes, levels);
+        let mut level_offset = Vec::with_capacity(level_blocks.len());
+        let mut off = 0;
+        for &n in &level_blocks {
+            level_offset.push(off);
+            off += n;
+        }
+
+        let root = levels as usize - 1;
+        let mk_set = || {
+            let mut alloc = Vec::new();
+            let mut counts = Vec::new();
+            let mut donated = 0;
+            for (l, &n) in level_blocks.iter().enumerate() {
+                counts.push(vec![0u32; n as usize]);
+                if l != root {
+                    alloc.push(vec![false; n as usize]);
+                    // Donatable = unallocated blocks whose slot actually
+                    // exists in the (possibly capped) reserved region.
+                    let first_slot = layout.data_ways + level_offset[l];
+                    let fit = if first_slot >= layout.fast_per_set {
+                        0
+                    } else {
+                        (layout.fast_per_set - first_slot).min(n)
+                    };
+                    donated += fit;
+                } else {
+                    alloc.push(Vec::new()); // root: implicitly allocated
+                }
+            }
+            SetTree { entries: vec![IDENTITY; k as usize], alloc, counts, allocated_nonroot: 0, donated }
+        };
+
+        let sets = (0..layout.num_sets).map(|_| mk_set()).collect();
+        IrtTable {
+            levels,
+            k,
+            leaf_fanout,
+            index_fanout,
+            level_blocks,
+            level_offset,
+            data_ways: layout.data_ways,
+            fast_per_set: layout.fast_per_set,
+            block_bytes: layout.block_bytes,
+            sets,
+        }
+    }
+
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// Resolve `idx`: absent entry (or unallocated leaf) means identity.
+    #[inline]
+    pub fn lookup(&self, set: u32, idx: u64) -> u64 {
+        let e = self.sets[set as usize].entries[idx as usize];
+        if e == IDENTITY { idx } else { e as u64 }
+    }
+
+    /// Identity check with the leaf-allocation shortcut: an unallocated
+    /// leaf implies identity for all 64 entries it covers, without touching
+    /// the (large) entry array — the alloc bitmaps are tiny and stay in
+    /// cache, which makes the iRC super-block fill cheap.
+    #[inline]
+    pub fn is_identity(&self, set: u32, idx: u64) -> bool {
+        if self.levels > 1 {
+            let lb = (idx / self.leaf_fanout) as usize;
+            if !self.sets[set as usize].alloc[0][lb] {
+                return true;
+            }
+        }
+        self.sets[set as usize].entries[idx as usize] == IDENTITY
+    }
+
+    /// True if the leaf block covering `idx` is currently allocated.
+    #[inline]
+    pub fn leaf_allocated(&self, set: u32, idx: u64) -> bool {
+        if self.levels == 1 {
+            return true;
+        }
+        let lb = (idx / self.leaf_fanout) as usize;
+        self.sets[set as usize].alloc[0][lb]
+    }
+
+    /// Per-set fast slot of a reserved block `(level, block)`, if it exists
+    /// within the (possibly capped) region.
+    #[inline]
+    fn slot_of(&self, level: usize, block: u64) -> Option<u64> {
+        let slot = self.data_ways + self.level_offset[level] + block;
+        (slot < self.fast_per_set).then_some(slot)
+    }
+
+    /// Per-set fast slot of the leaf block covering `idx` (test helper).
+    pub fn slot_of_leaf_for(&self, _layout: &SetLayout, idx: u64) -> Option<u64> {
+        self.slot_of(0, idx / self.leaf_fanout)
+    }
+
+    /// Install `idx -> device`. Emits [`MetaEvent::BlockAllocated`] for
+    /// every reserved block the update brings to life.
+    pub fn set_mapping(&mut self, set: u32, idx: u64, device: u64, out: &mut Vec<MetaEvent>) {
+        if device == idx {
+            self.clear_mapping(set, idx, out);
+            return;
+        }
+        let (data_ways, fast_per_set) = (self.data_ways, self.fast_per_set);
+        let (leaf_fanout, index_fanout) = (self.leaf_fanout, self.index_fanout);
+        let levels = self.levels as usize;
+        let mut offsets = [0u64; 4];
+        offsets[..levels].copy_from_slice(&self.level_offset);
+        let t = &mut self.sets[set as usize];
+        let prev = t.entries[idx as usize];
+        t.entries[idx as usize] = device as u32;
+        if prev != IDENTITY {
+            return; // overwrite: counts unchanged
+        }
+        // identity -> non-identity: bump the leaf count and cascade allocs.
+        let mut b = idx / leaf_fanout;
+        for l in 0..levels {
+            t.counts[l][b as usize] += 1;
+            if t.counts[l][b as usize] > 1 || l == levels - 1 {
+                break; // block already live, or root (always live)
+            }
+            t.alloc[l][b as usize] = true;
+            t.allocated_nonroot += 1;
+            let slot = data_ways + offsets[l] + b;
+            if slot < fast_per_set {
+                t.donated -= 1;
+                out.push(MetaEvent::BlockAllocated { slot });
+            }
+            b /= index_fanout;
+        }
+    }
+
+    /// Restore `idx` to identity. Emits [`MetaEvent::BlockFreed`] for every
+    /// reserved block that becomes empty.
+    pub fn clear_mapping(&mut self, set: u32, idx: u64, out: &mut Vec<MetaEvent>) {
+        let (data_ways, fast_per_set) = (self.data_ways, self.fast_per_set);
+        let (leaf_fanout, index_fanout) = (self.leaf_fanout, self.index_fanout);
+        let levels = self.levels as usize;
+        let mut offsets = [0u64; 4];
+        offsets[..levels].copy_from_slice(&self.level_offset);
+        let t = &mut self.sets[set as usize];
+        let prev = t.entries[idx as usize];
+        if prev == IDENTITY {
+            return;
+        }
+        t.entries[idx as usize] = IDENTITY;
+        let mut b = idx / leaf_fanout;
+        for l in 0..levels {
+            t.counts[l][b as usize] -= 1;
+            if t.counts[l][b as usize] > 0 || l == levels - 1 {
+                break;
+            }
+            t.alloc[l][b as usize] = false;
+            t.allocated_nonroot -= 1;
+            let slot = data_ways + offsets[l] + b;
+            if slot < fast_per_set {
+                t.donated += 1;
+                out.push(MetaEvent::BlockFreed { slot });
+            }
+            b /= index_fanout;
+        }
+    }
+
+    /// Metadata bytes resident across all sets: allocated non-root blocks
+    /// plus the always-resident root level (levels == 1: everything).
+    pub fn metadata_bytes_used(&self) -> u64 {
+        if self.levels == 1 {
+            return self.sets.len() as u64 * self.level_blocks[0] * self.block_bytes as u64;
+        }
+        let root_blocks = *self.level_blocks.last().unwrap();
+        let total: u64 = self
+            .sets
+            .iter()
+            .map(|t| t.allocated_nonroot + root_blocks)
+            .sum();
+        total * self.block_bytes as u64
+    }
+
+    /// Is the reserved block at per-set fast slot `slot` donatable?
+    pub fn slot_is_donatable(&self, set: u32, slot: u64) -> bool {
+        if self.levels == 1 || slot < self.data_ways || slot >= self.fast_per_set {
+            return false;
+        }
+        let off = slot - self.data_ways;
+        let root = self.levels as usize - 1;
+        for l in 0..self.levels as usize {
+            let start = self.level_offset[l];
+            if off >= start && off < start + self.level_blocks[l] {
+                if l == root {
+                    return false;
+                }
+                return !self.sets[set as usize].alloc[l][(off - start) as usize];
+            }
+        }
+        false
+    }
+
+    /// Total donatable blocks across sets (Trimma's extra cache capacity).
+    pub fn donated_blocks(&self) -> u64 {
+        self.sets.iter().map(|t| t.donated).sum()
+    }
+
+    /// Allocated leaf blocks in one set (test/stat helper).
+    pub fn allocated_leaf_blocks(&self, set: u32) -> u64 {
+        if self.levels == 1 {
+            return self.level_blocks[0];
+        }
+        self.sets[set as usize].alloc[0].iter().filter(|&&a| a).count() as u64
+    }
+
+    /// Offsets (within the reserved region) of the blocks a walk for `idx`
+    /// touches, one per level — all fetched in parallel thanks to the fixed
+    /// linearized layout. Used by the controller to time DRAM accesses.
+    pub fn walk_offsets(&self, idx: u64, out: &mut Vec<u64>) {
+        out.clear();
+        let mut b = idx / self.leaf_fanout;
+        for l in 0..self.levels as usize {
+            out.push(self.level_offset[l] + b);
+            b /= self.index_fanout;
+        }
+    }
+
+    /// Reserved blocks per set (worst case, uncapped).
+    pub fn reserved_blocks_per_set(&self) -> u64 {
+        self.level_blocks.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> SetLayout {
+        SetLayout::new(4, 1 << 20, 8 << 20, 256, 600)
+    }
+
+    fn irt(levels: u32) -> IrtTable {
+        IrtTable::new(&layout(), levels)
+    }
+
+    #[test]
+    fn default_identity_everywhere() {
+        let t = irt(2);
+        for idx in [0u64, 63, 64, 9215] {
+            assert_eq!(t.lookup(0, idx), idx);
+            assert!(!t.leaf_allocated(0, idx));
+        }
+    }
+
+    #[test]
+    fn first_mapping_allocates_leaf() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 100, 5, &mut ev);
+        assert_eq!(t.lookup(0, 100), 5);
+        assert!(t.leaf_allocated(0, 100));
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], MetaEvent::BlockAllocated { .. }));
+    }
+
+    #[test]
+    fn second_mapping_same_leaf_no_event() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 100, 5, &mut ev);
+        ev.clear();
+        t.set_mapping(0, 101, 6, &mut ev); // same 64-entry leaf
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn clearing_last_entry_frees_leaf() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 100, 5, &mut ev);
+        t.set_mapping(0, 101, 6, &mut ev);
+        ev.clear();
+        t.clear_mapping(0, 100, &mut ev);
+        assert!(ev.is_empty(), "leaf still has an entry");
+        t.clear_mapping(0, 101, &mut ev);
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], MetaEvent::BlockFreed { .. }));
+        assert!(!t.leaf_allocated(0, 100));
+        assert_eq!(t.lookup(0, 101), 101);
+    }
+
+    #[test]
+    fn overwrite_does_not_double_count() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 100, 5, &mut ev);
+        ev.clear();
+        t.set_mapping(0, 100, 9, &mut ev); // overwrite
+        assert!(ev.is_empty());
+        assert_eq!(t.lookup(0, 100), 9);
+        t.clear_mapping(0, 100, &mut ev);
+        assert_eq!(ev.len(), 1); // single free
+    }
+
+    #[test]
+    fn setting_identity_value_clears() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 100, 5, &mut ev);
+        ev.clear();
+        t.set_mapping(0, 100, 100, &mut ev); // identity
+        assert_eq!(t.lookup(0, 100), 100);
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], MetaEvent::BlockFreed { .. }));
+    }
+
+    #[test]
+    fn donation_accounting() {
+        let l = layout();
+        let mut t = IrtTable::new(&l, 2);
+        let initial = t.donated_blocks();
+        assert!(initial > 0);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 0, 5, &mut ev);
+        assert_eq!(t.donated_blocks(), initial - 1);
+        t.clear_mapping(0, 0, &mut ev);
+        assert_eq!(t.donated_blocks(), initial);
+    }
+
+    #[test]
+    fn donatable_slot_queries() {
+        let l = layout();
+        let mut t = IrtTable::new(&l, 2);
+        let slot = t.slot_of_leaf_for(&l, 0).unwrap();
+        assert!(t.slot_is_donatable(0, slot));
+        let mut ev = Vec::new();
+        t.set_mapping(0, 0, 5, &mut ev);
+        assert!(!t.slot_is_donatable(0, slot));
+        // Data-area slots are never "donatable".
+        assert!(!t.slot_is_donatable(0, 0));
+    }
+
+    #[test]
+    fn metadata_size_grows_and_shrinks() {
+        let mut t = irt(2);
+        let base = t.metadata_bytes_used(); // root level only
+        let mut ev = Vec::new();
+        t.set_mapping(0, 0, 5, &mut ev);
+        t.set_mapping(0, 8_000, 6, &mut ev); // a different leaf
+        assert_eq!(t.metadata_bytes_used(), base + 2 * 256);
+        t.clear_mapping(0, 0, &mut ev);
+        assert_eq!(t.metadata_bytes_used(), base + 256);
+    }
+
+    #[test]
+    fn single_level_is_always_resident() {
+        let l = layout();
+        let t = IrtTable::new(&l, 1);
+        assert_eq!(t.donated_blocks(), 0);
+        assert!(t.leaf_allocated(0, 0));
+        let full = l.indices_per_set().div_ceil(64) * 256 * 4;
+        assert_eq!(t.metadata_bytes_used(), full);
+    }
+
+    #[test]
+    fn four_level_cascades() {
+        let mut t = irt(4);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 0, 5, &mut ev);
+        // leaf + two intermediate levels allocate (root is implicit).
+        assert_eq!(ev.len(), 3);
+        ev.clear();
+        t.clear_mapping(0, 0, &mut ev);
+        assert_eq!(ev.len(), 3);
+        assert_eq!(t.donated_blocks(), IrtTable::new(&layout(), 4).donated_blocks());
+    }
+
+    #[test]
+    fn walk_offsets_are_per_level() {
+        let t = irt(2);
+        let mut offs = Vec::new();
+        t.walk_offsets(130, &mut offs);
+        assert_eq!(offs.len(), 2);
+        assert_eq!(offs[0], 130 / 64); // leaf block
+        assert_eq!(offs[1], t.level_offset[1]); // root block 0
+    }
+
+    #[test]
+    fn independent_sets() {
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        t.set_mapping(0, 7, 3, &mut ev);
+        assert_eq!(t.lookup(1, 7), 7);
+        assert_eq!(t.allocated_leaf_blocks(1), 0);
+        assert_eq!(t.allocated_leaf_blocks(0), 1);
+    }
+}

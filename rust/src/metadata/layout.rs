@@ -1,0 +1,293 @@
+//! Set-associative partition of the two tiers (paper Fig. 4) and the
+//! unified per-set index space.
+//!
+//! Blocks interleave across sets by their low-order block-id bits, so both
+//! tiers stripe uniformly over sets. Within a set:
+//!
+//! ```text
+//! device idx:  0 .. data_ways        basic fast data area (cache/flat ways)
+//!              data_ways .. F        reserved metadata region (tables live
+//!                                    here; unallocated blocks are donated
+//!                                    as extra ways by Trimma)
+//!              F .. F+S              the set's slow-tier blocks
+//! ```
+
+use crate::config::{HybridConfig, MetadataScheme};
+use crate::types::{ilog2, BlockId};
+
+/// Geometry of the set partition. Cheap to copy; shared by tables,
+/// controllers, and workload address mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SetLayout {
+    pub num_sets: u32,
+    /// `log2(num_sets)` — set math compiles to shifts/masks (validated
+    /// power of two), which matters: these run on every simulated access.
+    pub set_bits: u32,
+    /// Fast-tier blocks per set (data area + metadata region).
+    pub fast_per_set: u64,
+    /// Slow-tier blocks per set.
+    pub slow_per_set: u64,
+    /// Reserved metadata blocks per set (capped at `fast_per_set`).
+    pub meta_per_set: u64,
+    /// Basic data ways per set: `fast_per_set - meta_per_set`.
+    pub data_ways: u64,
+    pub block_bytes: u32,
+}
+
+impl SetLayout {
+    /// Build a layout with an explicit metadata reservation per set.
+    pub fn new(
+        num_sets: u32,
+        fast_bytes: u64,
+        slow_bytes: u64,
+        block_bytes: u32,
+        meta_per_set: u64,
+    ) -> Self {
+        let fast_blocks = fast_bytes / block_bytes as u64;
+        let slow_blocks = slow_bytes / block_bytes as u64;
+        assert_eq!(fast_blocks % num_sets as u64, 0);
+        assert_eq!(slow_blocks % num_sets as u64, 0);
+        let fast_per_set = fast_blocks / num_sets as u64;
+        let slow_per_set = slow_blocks / num_sets as u64;
+        let meta_per_set = meta_per_set.min(fast_per_set);
+        assert!(num_sets.is_power_of_two());
+        SetLayout {
+            num_sets,
+            set_bits: num_sets.trailing_zeros(),
+            fast_per_set,
+            slow_per_set,
+            meta_per_set,
+            data_ways: fast_per_set - meta_per_set,
+            block_bytes,
+        }
+    }
+
+    /// Build a layout sized for a hybrid config, reserving metadata space
+    /// according to the metadata scheme (tag schemes reserve nothing:
+    /// their tags are embedded with the data, per the paper's optimistic
+    /// baseline treatment).
+    pub fn for_config(h: &HybridConfig, ideal: bool) -> Self {
+        let basic = SetLayout::new(h.num_sets, h.fast_bytes, h.slow_bytes, h.block_bytes, 0);
+        let reserved = if ideal {
+            0
+        } else {
+            match h.scheme {
+                MetadataScheme::Linear => {
+                    linear_reserved_blocks(basic.indices_per_set(), h.block_bytes)
+                }
+                MetadataScheme::Irt { levels } => {
+                    irt_reserved_blocks(basic.indices_per_set(), h.block_bytes, levels)
+                }
+                MetadataScheme::TagAlloy | MetadataScheme::TagLohHill => 0,
+            }
+        };
+        SetLayout::new(h.num_sets, h.fast_bytes, h.slow_bytes, h.block_bytes, reserved)
+    }
+
+    /// Total per-set index space: fast + slow.
+    #[inline]
+    pub fn indices_per_set(&self) -> u64 {
+        self.fast_per_set + self.slow_per_set
+    }
+
+    /// True if a per-set device index is on the fast tier.
+    #[inline]
+    pub fn is_fast_idx(&self, idx: u64) -> bool {
+        idx < self.fast_per_set
+    }
+
+    /// True if a per-set device index falls inside the metadata region.
+    #[inline]
+    pub fn is_meta_idx(&self, idx: u64) -> bool {
+        idx >= self.data_ways && idx < self.fast_per_set
+    }
+
+    /// Map a global slow-tier block to `(set, per-set index)`.
+    #[inline]
+    pub fn slow_block_to_idx(&self, block: BlockId) -> (u32, u64) {
+        let set = (block & (self.num_sets as u64 - 1)) as u32;
+        (set, self.fast_per_set + (block >> self.set_bits))
+    }
+
+    /// Map a global fast-tier block to `(set, per-set index)`.
+    #[inline]
+    pub fn fast_block_to_idx(&self, block: BlockId) -> (u32, u64) {
+        let set = (block & (self.num_sets as u64 - 1)) as u32;
+        (set, block >> self.set_bits)
+    }
+
+    /// Global fast-tier block for a per-set fast index.
+    #[inline]
+    pub fn fast_global(&self, set: u32, idx: u64) -> BlockId {
+        debug_assert!(self.is_fast_idx(idx));
+        (idx << self.set_bits) | set as u64
+    }
+
+    /// Global slow-tier block for a per-set slow index.
+    #[inline]
+    pub fn slow_global(&self, set: u32, idx: u64) -> BlockId {
+        debug_assert!(!self.is_fast_idx(idx));
+        ((idx - self.fast_per_set) << self.set_bits) | set as u64
+    }
+
+    /// Device *byte* address for a per-set index (fast tier addresses and
+    /// slow tier addresses live in separate device spaces).
+    #[inline]
+    pub fn device_byte_addr(&self, set: u32, idx: u64) -> u64 {
+        if self.is_fast_idx(idx) {
+            self.fast_global(set, idx) * self.block_bytes as u64
+        } else {
+            self.slow_global(set, idx) * self.block_bytes as u64
+        }
+    }
+
+    /// Byte address (in the fast tier) of the `n`-th reserved metadata
+    /// block of `set` — used to time table-walk DRAM accesses.
+    #[inline]
+    pub fn meta_block_addr(&self, set: u32, n: u64) -> u64 {
+        let idx = self.data_ways + (n % self.meta_per_set.max(1));
+        self.fast_global(set, idx) * self.block_bytes as u64
+    }
+
+    /// Cheap key for blocks known to be on the slow tier (hot path of the
+    /// remap caches): equals `key(slow_block_to_idx(block))`.
+    #[inline]
+    pub fn slow_key(&self, block: BlockId) -> u64 {
+        (self.fast_per_set << self.set_bits) + block
+    }
+
+    #[inline]
+    pub fn block_offset_bits(&self) -> u32 {
+        ilog2(self.block_bytes as u64)
+    }
+
+    /// Globally unique key for `(set, idx)` — used by the remap caches.
+    /// Contiguous physical blocks get contiguous keys (blocks interleave
+    /// over sets by their low bits), which is what the IdCache's
+    /// super-block grouping relies on.
+    #[inline]
+    pub fn key(&self, set: u32, idx: u64) -> u64 {
+        (idx << self.set_bits) | set as u64
+    }
+
+    /// Inverse of [`SetLayout::key`]. Returns `None` if out of range.
+    #[inline]
+    pub fn key_inverse(&self, key: u64) -> Option<(u32, u64)> {
+        let set = (key & (self.num_sets as u64 - 1)) as u32;
+        let idx = key >> self.set_bits;
+        (idx < self.indices_per_set()).then_some((set, idx))
+    }
+}
+
+/// Reserved blocks per set for a linear table: 4 B per index, rounded up to
+/// whole blocks.
+pub fn linear_reserved_blocks(indices_per_set: u64, block_bytes: u32) -> u64 {
+    (indices_per_set * 4).div_ceil(block_bytes as u64)
+}
+
+/// Per-level block counts for an iRT over `indices_per_set` entries.
+/// Level 0 holds 4 B leaf entries; upper levels hold 1-bit-per-child
+/// vectors. `levels == 4` uses the Tag-Tables-style 6-bit (64-ary) slicing;
+/// otherwise index blocks are full bit vectors (`block_bytes * 8` children).
+pub fn irt_level_blocks(indices_per_set: u64, block_bytes: u32, levels: u32) -> Vec<u64> {
+    assert!((1..=4).contains(&levels));
+    let leaf_fanout = (block_bytes / 4) as u64;
+    let index_fanout = if levels == 4 { 64 } else { (block_bytes as u64) * 8 };
+    let mut blocks = vec![indices_per_set.div_ceil(leaf_fanout)];
+    for _ in 1..levels {
+        let prev = *blocks.last().unwrap();
+        blocks.push(prev.div_ceil(index_fanout));
+    }
+    blocks
+}
+
+/// Total reserved blocks per set for an iRT (all levels, worst case).
+pub fn irt_reserved_blocks(indices_per_set: u64, block_bytes: u32, levels: u32) -> u64 {
+    irt_level_blocks(indices_per_set, block_bytes, levels).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let l = SetLayout::new(8, 1 << 20, 32 << 20, 256, 100);
+        for block in [0u64, 1, 7, 8, 12345, 130000] {
+            let (set, idx) = l.slow_block_to_idx(block);
+            assert!(!l.is_fast_idx(idx));
+            assert_eq!(l.slow_global(set, idx), block);
+        }
+        for block in [0u64, 5, 4095] {
+            let (set, idx) = l.fast_block_to_idx(block);
+            assert!(l.is_fast_idx(idx));
+            assert_eq!(l.fast_global(set, idx), block);
+        }
+    }
+
+    #[test]
+    fn meta_region_position() {
+        let l = SetLayout::new(4, 1 << 20, 8 << 20, 256, 128);
+        assert_eq!(l.fast_per_set, 1024);
+        assert_eq!(l.data_ways, 896);
+        assert!(l.is_meta_idx(896));
+        assert!(l.is_meta_idx(1023));
+        assert!(!l.is_meta_idx(895));
+        assert!(!l.is_meta_idx(1024)); // slow space
+    }
+
+    #[test]
+    fn linear_reservation_matches_paper_math() {
+        // 32:1 ratio, 256 B blocks: table = 33/32 * 4/256 of one set's
+        // index space => 51.6% of the fast blocks.
+        let l = SetLayout::new(1, 16 << 20, 512 << 20, 256, 0);
+        let r = linear_reserved_blocks(l.indices_per_set(), 256);
+        let frac = r as f64 / l.fast_per_set as f64;
+        assert!((frac - 0.5156).abs() < 0.002, "frac={frac}");
+    }
+
+    #[test]
+    fn irt_reservation_tiny_intermediate() {
+        // 2-level iRT: leaves equal the linear table, plus ~1/2048 overhead.
+        let l = SetLayout::new(1, 16 << 20, 512 << 20, 256, 0);
+        let lv = irt_level_blocks(l.indices_per_set(), 256, 2);
+        assert_eq!(lv.len(), 2);
+        let linear = linear_reserved_blocks(l.indices_per_set(), 256);
+        assert_eq!(lv[0], linear);
+        assert!(lv[1] <= linear / 2048 + 1);
+    }
+
+    #[test]
+    fn irt_four_level_uses_64ary() {
+        let lv = irt_level_blocks(1 << 20, 256, 4);
+        assert_eq!(lv[0], (1 << 20) / 64);
+        assert_eq!(lv[1], lv[0] / 64);
+        assert_eq!(lv[2], lv[1].div_ceil(64));
+        assert_eq!(lv[3], 1);
+    }
+
+    #[test]
+    fn reservation_caps_at_fast_capacity() {
+        // Extreme 512:1 ratio: linear table would exceed the fast tier.
+        let fast = 1u64 << 20;
+        let slow = 512u64 << 20;
+        let basic = SetLayout::new(1, fast, slow, 256, 0);
+        let r = linear_reserved_blocks(basic.indices_per_set(), 256);
+        let l = SetLayout::new(1, fast, slow, 256, r);
+        assert_eq!(l.meta_per_set, l.fast_per_set);
+        assert_eq!(l.data_ways, 0);
+    }
+
+    #[test]
+    fn for_config_reserves_by_scheme() {
+        use crate::config::presets::{self, DesignPoint};
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        let l = SetLayout::for_config(&cfg.hybrid, false);
+        assert!(l.meta_per_set > 0);
+        let cfg2 = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        let l2 = SetLayout::for_config(&cfg2.hybrid, false);
+        assert_eq!(l2.meta_per_set, 0);
+        let l3 = SetLayout::for_config(&cfg.hybrid, true);
+        assert_eq!(l3.meta_per_set, 0);
+    }
+}

@@ -1,0 +1,105 @@
+//! The conventional linear remap table baseline (§2.2): one 4 B entry for
+//! *every* block across both tiers, stored in the fast memory. A lookup is
+//! a single fast-memory access; the cost is the storage — at a 32:1
+//! slow-to-fast ratio the table consumes ~52% of the fast tier, and it
+//! grows linearly with the slow capacity.
+
+use super::layout::{linear_reserved_blocks, SetLayout};
+use super::IDENTITY;
+
+/// Linear remap table over the unified per-set index space.
+#[derive(Debug, Clone)]
+pub struct LinearTable {
+    /// Index-space size (kept for debugging/assertions).
+    #[allow(dead_code)]
+    k: u64,
+    /// Dense per-set entry arrays. `IDENTITY` encodes `device == phys`
+    /// internally, but unlike iRT, *storage is charged for every entry*.
+    sets: Vec<Vec<u32>>,
+    reserved_blocks_per_set: u64,
+    block_bytes: u32,
+}
+
+impl LinearTable {
+    pub fn new(layout: &SetLayout) -> Self {
+        let k = layout.indices_per_set();
+        assert!(k < IDENTITY as u64, "index space exceeds 4 B entry range");
+        LinearTable {
+            k,
+            sets: vec![vec![IDENTITY; k as usize]; layout.num_sets as usize],
+            reserved_blocks_per_set: linear_reserved_blocks(k, layout.block_bytes),
+            block_bytes: layout.block_bytes,
+        }
+    }
+
+    #[inline]
+    pub fn lookup(&self, set: u32, idx: u64) -> u64 {
+        let e = self.sets[set as usize][idx as usize];
+        if e == IDENTITY { idx } else { e as u64 }
+    }
+
+    #[inline]
+    pub fn set_mapping(&mut self, set: u32, idx: u64, device: u64) {
+        self.sets[set as usize][idx as usize] =
+            if device == idx { IDENTITY } else { device as u32 };
+    }
+
+    #[inline]
+    pub fn clear_mapping(&mut self, set: u32, idx: u64) {
+        self.sets[set as usize][idx as usize] = IDENTITY;
+    }
+
+    /// The full table is always resident: `K * 4` bytes per set (rounded to
+    /// blocks), regardless of how many mappings are identity.
+    pub fn metadata_bytes_used(&self) -> u64 {
+        self.sets.len() as u64 * self.reserved_blocks_per_set * self.block_bytes as u64
+    }
+
+    pub fn reserved_blocks_per_set(&self) -> u64 {
+        self.reserved_blocks_per_set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> SetLayout {
+        SetLayout::new(4, 1 << 20, 8 << 20, 256, 0)
+    }
+
+    #[test]
+    fn default_is_identity() {
+        let t = LinearTable::new(&layout());
+        assert_eq!(t.lookup(0, 0), 0);
+        assert_eq!(t.lookup(3, 1234), 1234);
+    }
+
+    #[test]
+    fn set_and_clear() {
+        let mut t = LinearTable::new(&layout());
+        t.set_mapping(1, 100, 7);
+        assert_eq!(t.lookup(1, 100), 7);
+        assert_eq!(t.lookup(0, 100), 100); // other set unaffected
+        t.clear_mapping(1, 100);
+        assert_eq!(t.lookup(1, 100), 100);
+    }
+
+    #[test]
+    fn storing_identity_explicitly_is_identity() {
+        let mut t = LinearTable::new(&layout());
+        t.set_mapping(0, 5, 5);
+        assert_eq!(t.lookup(0, 5), 5);
+    }
+
+    #[test]
+    fn storage_is_constant_and_full() {
+        let l = layout();
+        let mut t = LinearTable::new(&l);
+        let before = t.metadata_bytes_used();
+        assert!(before >= l.indices_per_set() * 4 * 4); // 4 sets
+        t.set_mapping(0, 1, 2);
+        t.set_mapping(2, 3, 4);
+        assert_eq!(t.metadata_bytes_used(), before);
+    }
+}

@@ -1,0 +1,225 @@
+//! Metadata structures for physical-to-device address remapping — the
+//! paper's core subject.
+//!
+//! * [`layout`] — the set-associative partition of both tiers (Fig. 4) and
+//!   the unified per-set index space shared by all tables.
+//! * [`linear`] — the conventional linear remap table baseline.
+//! * [`irt`] — Trimma's indirection-based remap table (§3.2, Fig. 5).
+//! * [`remap_cache`] — the conventional on-chip remap cache.
+//! * [`irc`] — Trimma's identity-mapping-aware remap cache (§3.4, Fig. 6).
+//!
+//! ## Unified per-set index space
+//!
+//! Within a set, device slots are numbered `0..F+S`: indices `[0, F)` are
+//! the set's fast-tier blocks (the basic data area first, then the reserved
+//! metadata region), indices `[F, F+S)` are its slow-tier blocks. A mapping
+//! is a function `phys_idx -> device_idx` over this space; *identity* means
+//! the block has not moved. Tables only ever store non-identity mappings
+//! plus, when a saved metadata slot caches a block, the forward + inverted
+//! pair (§3.3).
+
+pub mod bloom;
+pub mod irc;
+pub mod irt;
+pub mod layout;
+pub mod linear;
+pub mod remap_cache;
+
+pub use layout::SetLayout;
+
+/// Sentinel meaning "no entry: identity mapping".
+pub const IDENTITY: u32 = u32::MAX;
+
+/// Side effects of a table update that the hybrid controller must act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetaEvent {
+    /// A reserved metadata block became live (its index bit was set).
+    /// `slot` is the per-set fast device index it occupies; any data block
+    /// cached there must be evicted immediately (metadata priority, §3.3).
+    BlockAllocated { slot: u64 },
+    /// A metadata block became empty and donatable again.
+    BlockFreed { slot: u64 },
+}
+
+/// Cost of one off-chip table walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkCost {
+    /// Fast-memory accesses issued (iRT: one per level, in parallel).
+    pub accesses: u32,
+    /// Whether the accesses are parallel (fixed entry addresses) or serial.
+    pub parallel: bool,
+}
+
+/// The off-chip remap table: either the linear baseline or Trimma's iRT.
+#[derive(Debug, Clone)]
+pub enum Table {
+    Linear(linear::LinearTable),
+    Irt(irt::IrtTable),
+}
+
+impl Table {
+    /// Resolve a per-set physical index to its device index.
+    #[inline]
+    pub fn lookup(&self, set: u32, idx: u64) -> u64 {
+        match self {
+            Table::Linear(t) => t.lookup(set, idx),
+            Table::Irt(t) => t.lookup(set, idx),
+        }
+    }
+
+    /// True if `idx` currently has an identity mapping (iRT short-circuits
+    /// through its leaf-allocation bitmap).
+    #[inline]
+    pub fn is_identity(&self, set: u32, idx: u64) -> bool {
+        match self {
+            Table::Linear(t) => t.lookup(set, idx) == idx,
+            Table::Irt(t) => t.is_identity(set, idx),
+        }
+    }
+
+    /// Install `phys -> device`. Returns metadata block alloc/free events.
+    pub fn set_mapping(&mut self, set: u32, idx: u64, device: u64, out: &mut Vec<MetaEvent>) {
+        match self {
+            Table::Linear(t) => t.set_mapping(set, idx, device),
+            Table::Irt(t) => t.set_mapping(set, idx, device, out),
+        }
+    }
+
+    /// Restore `idx` to identity. Returns metadata block events.
+    pub fn clear_mapping(&mut self, set: u32, idx: u64, out: &mut Vec<MetaEvent>) {
+        match self {
+            Table::Linear(t) => t.clear_mapping(set, idx),
+            Table::Irt(t) => t.clear_mapping(set, idx, out),
+        }
+    }
+
+    pub fn walk_cost(&self) -> WalkCost {
+        match self {
+            Table::Linear(_) => WalkCost { accesses: 1, parallel: true },
+            Table::Irt(t) => WalkCost { accesses: t.levels(), parallel: true },
+        }
+    }
+
+    /// Bytes of metadata currently resident in the fast tier.
+    pub fn metadata_bytes_used(&self) -> u64 {
+        match self {
+            Table::Linear(t) => t.metadata_bytes_used(),
+            Table::Irt(t) => t.metadata_bytes_used(),
+        }
+    }
+
+    /// Whether the reserved metadata block at per-set fast slot `slot` is
+    /// currently donatable (unallocated).
+    pub fn slot_is_donatable(&self, set: u32, slot: u64) -> bool {
+        match self {
+            Table::Linear(_) => false,
+            Table::Irt(t) => t.slot_is_donatable(set, slot),
+        }
+    }
+
+    /// Count of currently donated (unallocated, reserved) blocks, all sets.
+    pub fn donated_blocks(&self) -> u64 {
+        match self {
+            Table::Linear(_) => 0,
+            Table::Irt(t) => t.donated_blocks(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    //! Property tests (hand-rolled, seeded — proptest is unavailable in
+    //! this offline environment): iRT must agree with the linear-table
+    //! oracle under arbitrary operation sequences, and its allocation
+    //! bookkeeping must exactly reflect which leaf ranges contain
+    //! non-identity entries. Each property runs over 64 random op
+    //! sequences; failures print the seed for reproduction.
+
+    use super::irt::IrtTable;
+    use super::layout::SetLayout;
+    use super::linear::LinearTable;
+    use super::*;
+    use crate::types::Rng64;
+
+    fn small_layout() -> SetLayout {
+        // 4 sets, fast 1 MiB, slow 8 MiB, 256 B blocks.
+        SetLayout::new(4, 1 << 20, 8 << 20, 256, 128)
+    }
+
+    #[test]
+    fn irt_matches_linear_oracle() {
+        for case in 0..64u64 {
+            let mut rng = Rng64::new(0xA110C ^ case);
+            let layout = small_layout();
+            let k = layout.indices_per_set();
+            let mut irt = IrtTable::new(&layout, 2);
+            let mut lin = LinearTable::new(&layout);
+            let mut ev = Vec::new();
+            let n_ops = 1 + rng.next_below(200);
+            for _ in 0..n_ops {
+                let set = rng.next_below(4) as u32;
+                let a = rng.next_below(k);
+                let b = rng.next_below(k);
+                if rng.chance(0.4) {
+                    irt.clear_mapping(set, a, &mut ev);
+                    lin.clear_mapping(set, a);
+                } else {
+                    irt.set_mapping(set, a, b, &mut ev);
+                    lin.set_mapping(set, a, b);
+                }
+                ev.clear();
+            }
+            for set in 0..4 {
+                for i in (0..k).step_by(7) {
+                    assert_eq!(
+                        irt.lookup(set, i),
+                        lin.lookup(set, i),
+                        "case {case}, set {set}, idx {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn irt_alloc_tracks_nonidentity() {
+        for case in 0..64u64 {
+            let mut rng = Rng64::new(0xB10C ^ case);
+            let layout = small_layout();
+            let k = layout.indices_per_set();
+            let mut irt = IrtTable::new(&layout, 2);
+            let mut ev = Vec::new();
+            let mut alloc_events = 0i64;
+            let n_ops = 1 + rng.next_below(300);
+            for _ in 0..n_ops {
+                let a = rng.next_below(k.min(2000));
+                let b = rng.next_below(k.min(2000));
+                if rng.chance(0.4) {
+                    irt.clear_mapping(0, a, &mut ev);
+                } else {
+                    irt.set_mapping(0, a, b, &mut ev);
+                }
+                for e in ev.drain(..) {
+                    match e {
+                        MetaEvent::BlockAllocated { .. } => alloc_events += 1,
+                        MetaEvent::BlockFreed { .. } => alloc_events -= 1,
+                    }
+                }
+            }
+            // Net allocation events equal live allocated leaf blocks (the
+            // op range touches only leaves whose slots exist).
+            let live = irt.allocated_leaf_blocks(0) as i64;
+            assert_eq!(alloc_events, live, "case {case}");
+            // Every non-identity entry lives in a non-donatable leaf slot.
+            for i in 0..k {
+                if irt.lookup(0, i) != i {
+                    let donatable = irt
+                        .slot_of_leaf_for(&layout, i)
+                        .map(|s| irt.slot_is_donatable(0, s))
+                        .unwrap_or(false);
+                    assert!(!donatable, "case {case}, idx {i}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! The conventional on-chip remap cache (§2.2): a small SRAM
+//! set-associative cache over remap-table entries, indexed by physical
+//! block id. It stores *every* kind of entry — identity mappings occupy a
+//! full entry (tag + 4 B pointer) just like non-identity ones, which is
+//! exactly the inefficiency iRC attacks.
+
+use crate::types::BlockId;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    tag: u64,
+    value: u32,
+    valid: bool,
+    last_use: u64,
+}
+
+/// Set-associative LRU cache from physical block id to a 4 B device index.
+#[derive(Debug, Clone)]
+pub struct RemapCache {
+    sets: u64,
+    ways: u32,
+    lines: Vec<Entry>,
+    tick: u64,
+    hash_index: bool,
+}
+
+impl RemapCache {
+    pub fn new(sets: u32, ways: u32) -> Self {
+        Self::with_index(sets, ways, false)
+    }
+
+    /// `hash_index = true` applies a multiplicative hash before the modulo
+    /// (used by the IdCache to spread super-block ids, after Kharbutli et
+    /// al.'s prime-based indexing).
+    pub fn with_index(sets: u32, ways: u32, hash_index: bool) -> Self {
+        assert!(sets.is_power_of_two());
+        RemapCache {
+            sets: sets as u64,
+            ways,
+            lines: vec![Entry::default(); (sets * ways) as usize],
+            tick: 0,
+            hash_index,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, key: BlockId) -> u64 {
+        let k = if self.hash_index {
+            key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16
+        } else {
+            key
+        };
+        k & (self.sets - 1)
+    }
+
+    /// Look up `key`; LRU-refreshes on hit.
+    pub fn probe(&mut self, key: BlockId) -> Option<u32> {
+        self.tick += 1;
+        let base = (self.set_of(key) * self.ways as u64) as usize;
+        for i in base..base + self.ways as usize {
+            let e = &mut self.lines[i];
+            if e.valid && e.tag == key {
+                e.last_use = self.tick;
+                return Some(e.value);
+            }
+        }
+        None
+    }
+
+    /// Insert or overwrite `key -> value`, evicting LRU if needed.
+    pub fn insert(&mut self, key: BlockId, value: u32) {
+        self.tick += 1;
+        let base = (self.set_of(key) * self.ways as u64) as usize;
+        let mut victim = base;
+        let mut victim_use = u64::MAX;
+        for i in base..base + self.ways as usize {
+            let e = &self.lines[i];
+            if e.valid && e.tag == key {
+                victim = i;
+                break;
+            }
+            let use_key = if e.valid { e.last_use } else { 0 };
+            if use_key < victim_use {
+                victim_use = use_key;
+                victim = i;
+            }
+        }
+        self.lines[victim] = Entry { tag: key, value, valid: true, last_use: self.tick };
+    }
+
+    /// Read-modify-write the value for `key` if present, without LRU
+    /// refresh. Returns the previous value.
+    pub fn modify(&mut self, key: BlockId, f: impl FnOnce(u32) -> u32) -> Option<u32> {
+        let base = (self.set_of(key) * self.ways as u64) as usize;
+        for i in base..base + self.ways as usize {
+            let e = &mut self.lines[i];
+            if e.valid && e.tag == key {
+                let prev = e.value;
+                e.value = f(prev);
+                return Some(prev);
+            }
+        }
+        None
+    }
+
+    /// Drop `key` if present. Returns true if an entry was invalidated.
+    pub fn invalidate(&mut self, key: BlockId) -> bool {
+        let base = (self.set_of(key) * self.ways as u64) as usize;
+        for i in base..base + self.ways as usize {
+            let e = &mut self.lines[i];
+            if e.valid && e.tag == key {
+                e.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Total entry capacity.
+    pub fn capacity(&self) -> u64 {
+        self.sets * self.ways as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_miss_then_hit() {
+        let mut c = RemapCache::new(4, 2);
+        assert_eq!(c.probe(10), None);
+        c.insert(10, 99);
+        assert_eq!(c.probe(10), Some(99));
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut c = RemapCache::new(4, 2);
+        // Keys 0, 4, 8 share set 0.
+        c.insert(0, 1);
+        c.insert(4, 2);
+        c.probe(0); // refresh 0
+        c.insert(8, 3); // evicts 4
+        assert_eq!(c.probe(0), Some(1));
+        assert_eq!(c.probe(4), None);
+        assert_eq!(c.probe(8), Some(3));
+    }
+
+    #[test]
+    fn insert_overwrites_in_place() {
+        let mut c = RemapCache::new(4, 2);
+        c.insert(10, 1);
+        c.insert(10, 2);
+        assert_eq!(c.probe(10), Some(2));
+        // Only one way consumed: a second key in the set still fits.
+        c.insert(14, 3);
+        assert_eq!(c.probe(10), Some(2));
+        assert_eq!(c.probe(14), Some(3));
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = RemapCache::new(4, 2);
+        c.insert(10, 1);
+        assert!(c.invalidate(10));
+        assert!(!c.invalidate(10));
+        assert_eq!(c.probe(10), None);
+    }
+
+    #[test]
+    fn modify_in_place() {
+        let mut c = RemapCache::new(4, 2);
+        c.insert(10, 0b01);
+        assert_eq!(c.modify(10, |v| v | 0b10), Some(0b01));
+        assert_eq!(c.probe(10), Some(0b11));
+        assert_eq!(c.modify(11, |v| v), None);
+    }
+
+    #[test]
+    fn hash_index_spreads_strided_keys() {
+        // Strided keys alias to one set with modulo indexing but spread
+        // under the hash index.
+        let mut plain = RemapCache::new(16, 1);
+        let mut hashed = RemapCache::with_index(16, 1, true);
+        for k in (0..16u64).map(|i| i * 16) {
+            plain.insert(k, 1);
+            hashed.insert(k, 1);
+        }
+        let plain_live = (0..16u64).map(|i| i * 16).filter(|&k| plain.probe(k).is_some()).count();
+        let hashed_live = (0..16u64).map(|i| i * 16).filter(|&k| hashed.probe(k).is_some()).count();
+        assert_eq!(plain_live, 1);
+        assert!(hashed_live > 8, "hash index should retain most: {hashed_live}");
+    }
+}

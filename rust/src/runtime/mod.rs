@@ -1,0 +1,186 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the rust hot path. Python never runs at simulation time — the
+//! artifacts under `artifacts/` are HLO *text* produced once by
+//! `python/compile/aot.py` (see that file for why text, not protos).
+//!
+//! The wrapper owns a CPU [`xla::PjRtClient`] and one compiled executable
+//! per artifact. [`TraceGenExec`] is the typed interface the workload layer
+//! uses: feed stream/region tables, get back `(addr_line, is_write, gap)`
+//! tiles.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Fixed AOT shapes (must match python/compile/model.py).
+pub const STREAMS: usize = 16;
+pub const STEPS: usize = 4096;
+pub const MAX_REGIONS: usize = 4;
+pub const HOT_BUCKETS: usize = 1024;
+
+/// Locate the artifacts directory: `$TRIMMA_ARTIFACTS`, `./artifacts`, or
+/// the repo-relative default.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TRIMMA_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts", "/root/repo/artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("trace_gen.hlo.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// A PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            bail!("artifact {} not found — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).context("PJRT compile")
+    }
+
+    /// Load the trace-generator executable from `dir`.
+    pub fn trace_gen(&self, dir: &Path) -> Result<TraceGenExec> {
+        Ok(TraceGenExec { exe: self.load(&dir.join("trace_gen.hlo.txt"))? })
+    }
+
+    /// Load the hotness-analysis executable from `dir`.
+    pub fn hotness(&self, dir: &Path) -> Result<HotnessExec> {
+        Ok(HotnessExec { exe: self.load(&dir.join("hotness.hlo.txt"))? })
+    }
+}
+
+/// Region tables in the artifact's wire format (padded to MAX_REGIONS).
+#[derive(Debug, Clone, Default)]
+pub struct RegionTables {
+    pub cum_w: [f32; MAX_REGIONS],
+    pub base_line: [u32; MAX_REGIONS],
+    pub lines: [u32; MAX_REGIONS],
+    pub runs: [u32; MAX_REGIONS],
+    /// Working-set runs per epoch (phased reuse).
+    pub wruns: [u32; MAX_REGIONS],
+    pub alpha: [f32; MAX_REGIONS],
+    pub seq: [u32; MAX_REGIONS],
+    /// `[run_len, write_threshold, gap_mod, n_regions, epoch_runs, 0]`.
+    pub params: [u32; 6],
+}
+
+/// One generated tile.
+#[derive(Debug, Clone)]
+pub struct TraceTile {
+    /// Row-major `[STREAMS][STEPS]` address lines (64 B units).
+    pub addr_line: Vec<u32>,
+    pub is_write: Vec<u32>,
+    pub gap: Vec<u32>,
+}
+
+fn run_tuple3(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+    let elems = result.to_tuple()?;
+    anyhow::ensure!(elems.len() == 3, "expected 3-tuple, got {}", elems.len());
+    Ok(elems)
+}
+
+/// The compiled trace-generation executable.
+pub struct TraceGenExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TraceGenExec {
+    /// Run one batch: `streams`/`slice_base` are per-stream (len STREAMS),
+    /// `step0` is the base step of the tile.
+    pub fn run(
+        &self,
+        streams: &[u32],
+        step0: u32,
+        slice_base: &[u32],
+        t: &RegionTables,
+    ) -> Result<TraceTile> {
+        anyhow::ensure!(streams.len() == STREAMS && slice_base.len() == STREAMS);
+        let args = vec![
+            xla::Literal::vec1(streams),
+            xla::Literal::vec1(&[step0]),
+            xla::Literal::vec1(slice_base),
+            xla::Literal::vec1(&t.cum_w),
+            xla::Literal::vec1(&t.base_line),
+            xla::Literal::vec1(&t.lines),
+            xla::Literal::vec1(&t.runs),
+            xla::Literal::vec1(&t.wruns),
+            xla::Literal::vec1(&t.alpha),
+            xla::Literal::vec1(&t.seq),
+            xla::Literal::vec1(&t.params),
+        ];
+        let mut it = run_tuple3(&self.exe, &args)?.into_iter();
+        Ok(TraceTile {
+            addr_line: it.next().unwrap().to_vec::<u32>()?,
+            is_write: it.next().unwrap().to_vec::<u32>()?,
+            gap: it.next().unwrap().to_vec::<u32>()?,
+        })
+    }
+}
+
+/// The compiled hotness-analysis executable.
+pub struct HotnessExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HotnessExec {
+    /// Fold one tile into the decayed histogram. Returns
+    /// `(hot_out, write_frac, mean_gap)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        streams: &[u32],
+        step0: u32,
+        slice_base: &[u32],
+        t: &RegionTables,
+        hot_in: &[f32],
+        decay: f32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        anyhow::ensure!(hot_in.len() == HOT_BUCKETS);
+        let args = vec![
+            xla::Literal::vec1(streams),
+            xla::Literal::vec1(&[step0]),
+            xla::Literal::vec1(slice_base),
+            xla::Literal::vec1(&t.cum_w),
+            xla::Literal::vec1(&t.base_line),
+            xla::Literal::vec1(&t.lines),
+            xla::Literal::vec1(&t.runs),
+            xla::Literal::vec1(&t.wruns),
+            xla::Literal::vec1(&t.alpha),
+            xla::Literal::vec1(&t.seq),
+            xla::Literal::vec1(&t.params),
+            xla::Literal::vec1(hot_in),
+            xla::Literal::vec1(&[decay]),
+        ];
+        let mut it = run_tuple3(&self.exe, &args)?.into_iter();
+        let hot = it.next().unwrap().to_vec::<f32>()?;
+        let wf = it.next().unwrap().to_vec::<f32>()?[0];
+        let mg = it.next().unwrap().to_vec::<f32>()?[0];
+        Ok((hot, wf, mg))
+    }
+}

@@ -1,0 +1,185 @@
+//! OS-address to `(set, per-set index)` translation with first-touch page
+//! allocation, standing in for the OS page allocator of the paper's setup.
+//!
+//! * Cache mode: all pages live in the slow tier (the fast tier is an
+//!   OS-invisible cache).
+//! * Flat mode: pages are allocated to the fast tier's data area first,
+//!   until it is exhausted, then to the slow tier — the first-touch policy
+//!   both MemPod and Trimma-F use in the paper (§4 Baselines).
+//!
+//! Translation is at 4 kB page granularity (or the block size, if larger);
+//! block-level striping over sets is inherited from [`SetLayout`].
+
+use crate::config::Mode;
+use crate::metadata::SetLayout;
+use crate::types::PhysAddr;
+
+const PAGE_BYTES: u64 = 4096;
+const UNMAPPED: u64 = u64::MAX;
+
+/// First-touch page mapper.
+pub struct AddrMapper {
+    layout: SetLayout,
+    mode: Mode,
+    /// OS page -> first *global block number* of the page's frame.
+    /// Fast frames are encoded as `block`, slow frames as `SLOW_BIT | block`.
+    pages: Vec<u64>,
+    page_blocks: u64,
+    page_bytes: u64,
+    next_fast_page: u64,
+    fast_pages: u64,
+    next_slow_page: u64,
+    slow_pages: u64,
+}
+
+const SLOW_BIT: u64 = 1 << 63;
+
+impl AddrMapper {
+    pub fn new(layout: SetLayout, mode: Mode) -> Self {
+        let page_bytes = PAGE_BYTES.max(layout.block_bytes as u64);
+        let page_blocks = page_bytes / layout.block_bytes as u64;
+        let fast_data_blocks = layout.data_ways * layout.num_sets as u64;
+        let slow_blocks = layout.slow_per_set * layout.num_sets as u64;
+        let fast_pages = match mode {
+            Mode::Cache => 0,
+            Mode::Flat => fast_data_blocks / page_blocks,
+        };
+        let slow_pages = slow_blocks / page_blocks;
+        let os_pages = (fast_pages + slow_pages) as usize;
+        AddrMapper {
+            layout,
+            mode,
+            pages: vec![UNMAPPED; os_pages],
+            page_blocks,
+            page_bytes,
+            next_fast_page: 0,
+            fast_pages,
+            next_slow_page: 0,
+            slow_pages,
+        }
+    }
+
+    /// OS-visible capacity in bytes.
+    pub fn os_capacity(&self) -> u64 {
+        (self.fast_pages + self.slow_pages) * self.page_bytes
+    }
+
+    /// Translate an OS physical address, allocating its page on first
+    /// touch. Addresses beyond capacity wrap (workloads are sized to fit).
+    pub fn translate(&mut self, addr: PhysAddr) -> (u32, u64) {
+        let page = (addr / self.page_bytes) % self.pages.len() as u64;
+        let off_block = (addr % self.page_bytes) / self.layout.block_bytes as u64;
+        let mut frame = self.pages[page as usize];
+        if frame == UNMAPPED {
+            frame = self.allocate();
+            self.pages[page as usize] = frame;
+        }
+        if frame & SLOW_BIT != 0 {
+            let block = (frame & !SLOW_BIT) + off_block;
+            self.layout.slow_block_to_idx(block)
+        } else {
+            let block = frame + off_block;
+            // Fast data blocks are enumerated idx-major: n -> (n % sets,
+            // n / sets) stays inside the data area by construction.
+            let set = (block % self.layout.num_sets as u64) as u32;
+            (set, block / self.layout.num_sets as u64)
+        }
+    }
+
+    fn allocate(&mut self) -> u64 {
+        if self.mode == Mode::Flat && self.next_fast_page < self.fast_pages {
+            let p = self.next_fast_page;
+            self.next_fast_page += 1;
+            p * self.page_blocks
+        } else {
+            let p = self.next_slow_page % self.slow_pages.max(1);
+            self.next_slow_page += 1;
+            SLOW_BIT | (p * self.page_blocks)
+        }
+    }
+
+    /// Pages currently resident in the fast tier's flat area.
+    pub fn fast_pages_allocated(&self) -> u64 {
+        self.next_fast_page
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> SetLayout {
+        SetLayout::new(4, 1 << 20, 8 << 20, 256, 600)
+    }
+
+    #[test]
+    fn cache_mode_everything_slow() {
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Cache);
+        assert_eq!(m.os_capacity(), 8 << 20);
+        for a in [0u64, 4096, 123456, (8 << 20) - 1] {
+            let (_, idx) = m.translate(a);
+            assert!(!l.is_fast_idx(idx), "addr {a:#x} must be slow");
+        }
+    }
+
+    #[test]
+    fn flat_mode_first_touch_prefers_fast() {
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Flat);
+        let (_, idx) = m.translate(0);
+        assert!(l.is_fast_idx(idx));
+        assert!(idx < l.data_ways, "must land in the data area");
+        // Touch more pages than the fast area holds: later ones go slow.
+        let fast_cap = m.fast_pages * m.page_bytes;
+        let (_, idx2) = m.translate(fast_cap + 4096);
+        // (fast exhausted only after all fast pages touched)
+        for p in 1..m.fast_pages {
+            m.translate(p * 4096);
+        }
+        let (_, idx3) = m.translate(fast_cap + 8192);
+        let _ = idx2;
+        assert!(!l.is_fast_idx(idx3), "fast area exhausted -> slow");
+    }
+
+    #[test]
+    fn translation_is_stable() {
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Flat);
+        let a = m.translate(777 * 4096 + 300);
+        let b = m.translate(777 * 4096 + 300);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn same_page_blocks_are_contiguous_keys() {
+        // Blocks of one page must produce contiguous remap-cache keys
+        // (the IdCache super-block relies on it).
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Cache);
+        let base = 10 * 4096;
+        let (s0, i0) = m.translate(base);
+        let k0 = l.key(s0, i0);
+        for b in 1..16u64 {
+            let (s, i) = m.translate(base + b * 256);
+            assert_eq!(l.key(s, i), k0 + b);
+        }
+    }
+
+    #[test]
+    fn never_maps_into_metadata_region() {
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Flat);
+        for p in 0..(m.fast_pages + 10) {
+            let (_, idx) = m.translate(p * 4096);
+            assert!(!l.is_meta_idx(idx), "page {p} hit the metadata region");
+        }
+    }
+
+    #[test]
+    fn big_blocks_use_block_pages() {
+        let l = SetLayout::new(1, 1 << 20, 8 << 20, 8192, 10);
+        let m = AddrMapper::new(l, Mode::Cache);
+        assert_eq!(m.page_bytes, 8192);
+    }
+}

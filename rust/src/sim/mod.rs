@@ -1,0 +1,253 @@
+//! The simulation engine: a 16-core trace-driven, cycle-accounting model
+//! in the spirit of the paper's zsim setup.
+//!
+//! Each core is an in-order stream: it retires `gap_instrs` non-memory
+//! instructions (at [`NONMEM_CPI`] cycles each), then issues one memory
+//! access through its private L1/L2 and the shared LLC ([`crate::cachesim`]);
+//! LLC misses go to the hybrid memory controller, whose demand latency
+//! stalls the core. Dirty LLC evictions are posted writes: they reach the
+//! controller (and occupy memory banks) without stalling.
+//!
+//! Cores interleave by always advancing the core with the smallest local
+//! clock, so cross-core contention on shared banks is modelled in rough
+//! timestamp order. Performance = instructions / slowest-core-cycles, whose
+//! ratio between designs is the paper's weighted-speedup comparison.
+
+pub mod mapper;
+
+use crate::cachesim::Hierarchy;
+use crate::config::SystemConfig;
+use crate::hybrid::{build_controller, Controller};
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle};
+use crate::workloads::Workload;
+use mapper::AddrMapper;
+
+/// Cycles per non-memory instruction (4-wide-ish core).
+pub const NONMEM_CPI: f64 = 0.4;
+
+/// A complete single-workload simulation.
+pub struct Simulation {
+    hierarchy: Hierarchy,
+    ctrl: Box<dyn Controller>,
+    mapper: AddrMapper,
+    workload: Box<dyn Workload>,
+    clocks: Vec<Cycle>,
+    instrs: Vec<u64>,
+    cores: u32,
+    accesses_per_core: u64,
+    warmup_per_core: u64,
+    block_bytes: u32,
+}
+
+/// End-of-run report: the controller's stats plus CPU-side counters.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub stats: Stats,
+}
+
+impl SimReport {
+    pub fn performance(&self) -> f64 {
+        self.stats.performance()
+    }
+}
+
+impl Simulation {
+    pub fn new(cfg: &SystemConfig, workload: Box<dyn Workload>) -> Self {
+        Self::with_controller(cfg, workload, build_controller(cfg, false))
+    }
+
+    /// Build with the metadata-free Ideal oracle (Fig. 1's upper bound).
+    pub fn new_ideal(cfg: &SystemConfig, workload: Box<dyn Workload>) -> Self {
+        Self::with_controller(cfg, workload, build_controller(cfg, true))
+    }
+
+    pub fn with_controller(
+        cfg: &SystemConfig,
+        workload: Box<dyn Workload>,
+        ctrl: Box<dyn Controller>,
+    ) -> Self {
+        let cores = cfg.workload.cores;
+        Simulation {
+            hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
+            mapper: AddrMapper::new(*ctrl.layout(), cfg.hybrid.mode),
+            ctrl,
+            workload,
+            clocks: vec![0; cores as usize],
+            instrs: vec![0; cores as usize],
+            cores,
+            accesses_per_core: cfg.workload.accesses_per_core,
+            warmup_per_core: cfg.workload.warmup_per_core,
+            block_bytes: cfg.hybrid.block_bytes,
+        }
+    }
+
+    /// 64 B line offset within the migration block.
+    #[inline]
+    fn line_of(&self, addr: u64) -> u32 {
+        ((addr % self.block_bytes as u64) / 64) as u32
+    }
+
+    /// Advance one access on `core`. Returns instructions retired.
+    fn step(&mut self, core: usize) -> u64 {
+        let acc = self.workload.next(core);
+        let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
+        self.clocks[core] += gap_cycles;
+        let now = self.clocks[core];
+
+        let hr = self.hierarchy.access(core, acc.addr, acc.kind);
+        let mut lat = hr.latency;
+        if hr.llc_miss {
+            let (set, idx) = self.mapper.translate(acc.addr);
+            let line = self.line_of(acc.addr);
+            lat += self.ctrl.access(set, idx, line, acc.kind, now + hr.latency);
+        }
+        // Posted writebacks: charge banks/stats, do not stall the core.
+        for wb in &hr.writebacks {
+            let (set, idx) = self.mapper.translate(*wb);
+            let line = self.line_of(*wb);
+            self.ctrl.access(set, idx, line, AccessKind::Write, now + lat);
+        }
+        self.clocks[core] += lat;
+        let retired = acc.gap_instrs as u64 + 1;
+        self.instrs[core] += retired;
+        retired
+    }
+
+    /// Run warmup + measurement; returns the report.
+    pub fn run(&mut self) -> SimReport {
+        // Warmup: populate caches, tables, and migration state.
+        for _ in 0..self.warmup_per_core {
+            for core in 0..self.cores as usize {
+                self.step(core);
+            }
+        }
+        self.ctrl.reset_stats();
+        let warm_clocks = self.clocks.clone();
+        for i in self.instrs.iter_mut() {
+            *i = 0;
+        }
+
+        // Measurement: advance the laggard core each iteration so shared
+        // bank contention is seen in (approximate) timestamp order.
+        let mut remaining: Vec<u64> = vec![self.accesses_per_core; self.cores as usize];
+        let mut live = self.cores as usize;
+        while live > 0 {
+            let mut core = usize::MAX;
+            let mut best = Cycle::MAX;
+            for c in 0..self.cores as usize {
+                if remaining[c] > 0 && self.clocks[c] < best {
+                    best = self.clocks[c];
+                    core = c;
+                }
+            }
+            self.step(core);
+            remaining[core] -= 1;
+            if remaining[core] == 0 {
+                live -= 1;
+            }
+        }
+
+        self.ctrl.finalize();
+        let mut stats = self.ctrl.stats().clone();
+        stats.instructions = self.instrs.iter().sum();
+        stats.max_core_cycles = self
+            .clocks
+            .iter()
+            .zip(&warm_clocks)
+            .map(|(c, w)| c - w)
+            .max()
+            .unwrap_or(0);
+        stats.total_core_cycles = self
+            .clocks
+            .iter()
+            .zip(&warm_clocks)
+            .map(|(c, w)| c - w)
+            .sum();
+        stats.l1_hits = self.hierarchy.l1_hits();
+        stats.l2_hits = self.hierarchy.l2_hits();
+        stats.llc_hits = self.hierarchy.llc_hits();
+        SimReport { name: self.workload.name().to_string(), stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    fn tiny_cfg(dp: DesignPoint) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(dp);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = match dp {
+            DesignPoint::AlloyCache => (cfg.hybrid.fast_bytes / 256) as u32,
+            DesignPoint::LohHill => (cfg.hybrid.fast_bytes / 8192) as u32,
+            _ => 4,
+        };
+        cfg.workload.cores = 4;
+        cfg.workload.accesses_per_core = 3000;
+        cfg.workload.warmup_per_core = 1000;
+        cfg
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let cfg = tiny_cfg(DesignPoint::TrimmaCache);
+        let wl = crate::workloads::by_name("gap_pr", &cfg).unwrap();
+        let mut sim = Simulation::new(&cfg, wl);
+        let rep = sim.run();
+        assert!(rep.stats.instructions > 0);
+        assert!(rep.stats.max_core_cycles > 0);
+        assert!(rep.performance() > 0.0);
+        assert!(rep.stats.mem_accesses > 0, "workload must miss the LLC");
+    }
+
+    #[test]
+    fn ideal_beats_linear_cache() {
+        // The metadata-free oracle must outperform the linear-table design
+        // (which burns half the fast tier on the table and walks it).
+        let mk = |dp, ideal: bool| {
+            let cfg = tiny_cfg(dp);
+            let wl = crate::workloads::by_name("ycsb_a", &cfg).unwrap();
+            let mut sim = if ideal {
+                Simulation::new_ideal(&cfg, wl)
+            } else {
+                Simulation::new(&cfg, wl)
+            };
+            sim.run().performance()
+        };
+        let ideal = mk(DesignPoint::Ideal, true);
+        let linear = mk(DesignPoint::LinearCache, false);
+        assert!(
+            ideal > linear,
+            "ideal ({ideal:.4}) must beat linear-table ({linear:.4})"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = tiny_cfg(DesignPoint::TrimmaCache);
+        let run = || {
+            let wl = crate::workloads::by_name("505.mcf_r", &cfg).unwrap();
+            Simulation::new(&cfg, wl).run().stats.max_core_cycles
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn all_design_points_run_every_mode() {
+        for dp in DesignPoint::ALL {
+            let cfg = tiny_cfg(*dp);
+            let wl = crate::workloads::by_name("519.lbm_r", &cfg).unwrap();
+            let mut sim = if *dp == DesignPoint::Ideal {
+                Simulation::new_ideal(&cfg, wl)
+            } else {
+                Simulation::new(&cfg, wl)
+            };
+            let rep = sim.run();
+            assert!(rep.stats.mem_accesses > 0, "{dp:?}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! First-order energy accounting over the simulation's traffic counters.
+//!
+//! Constants are device-class estimates from the literature the paper
+//! builds on (HBM ~3.9 pJ/bit, DDR5 ~15 pJ/bit access+IO, Optane-class
+//! NVM ~100/500 pJ/bit read/write at the media, SRAM probes ~10 pJ) —
+//! good enough to rank designs by *memory-system* energy, which is how we
+//! use them (the `trimma run` report and the efficiency rows in
+//! EXPERIMENTS.md). Absolute joules are not a claim.
+
+use super::Stats;
+
+/// Per-byte / per-probe energy coefficients (picojoules).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub fast_pj_per_byte: f64,
+    pub slow_read_pj_per_byte: f64,
+    pub slow_write_pj_per_byte: f64,
+    pub sram_probe_pj: f64,
+}
+
+impl EnergyModel {
+    /// HBM3 fast tier + DDR5 slow tier.
+    pub fn hbm3_ddr5() -> Self {
+        EnergyModel {
+            fast_pj_per_byte: 31.0,       // ~3.9 pJ/bit
+            slow_read_pj_per_byte: 120.0, // ~15 pJ/bit incl. IO
+            slow_write_pj_per_byte: 120.0,
+            sram_probe_pj: 10.0,
+        }
+    }
+
+    /// DDR5 fast tier + Optane-class NVM slow tier.
+    pub fn ddr5_nvm() -> Self {
+        EnergyModel {
+            fast_pj_per_byte: 120.0,
+            slow_read_pj_per_byte: 800.0,  // ~100 pJ/bit media read
+            slow_write_pj_per_byte: 4000.0, // ~500 pJ/bit media write
+            sram_probe_pj: 10.0,
+        }
+    }
+}
+
+/// Energy breakdown in microjoules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReport {
+    pub fast_uj: f64,
+    pub slow_uj: f64,
+    pub sram_uj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_uj(&self) -> f64 {
+        self.fast_uj + self.slow_uj + self.sram_uj
+    }
+
+    /// Energy per useful byte delivered (pJ/B) — the efficiency metric.
+    pub fn pj_per_useful_byte(&self, stats: &Stats) -> f64 {
+        if stats.useful_bytes == 0 {
+            return 0.0;
+        }
+        self.total_uj() * 1e6 / stats.useful_bytes as f64
+    }
+}
+
+/// Estimate memory-system energy for a finished run.
+pub fn estimate(stats: &Stats, m: &EnergyModel) -> EnergyReport {
+    // Approximate the slow read/write split by the demand mix plus
+    // migration (reads) and writebacks (writes).
+    let slow_writes = stats.writeback_bytes;
+    let slow_reads = stats.slow_traffic_bytes.saturating_sub(slow_writes);
+    EnergyReport {
+        fast_uj: stats.fast_traffic_bytes as f64 * m.fast_pj_per_byte / 1e6,
+        slow_uj: (slow_reads as f64 * m.slow_read_pj_per_byte
+            + slow_writes as f64 * m.slow_write_pj_per_byte)
+            / 1e6,
+        sram_uj: stats.rc_probes as f64 * m.sram_probe_pj / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> Stats {
+        Stats {
+            fast_traffic_bytes: 1_000_000,
+            slow_traffic_bytes: 500_000,
+            writeback_bytes: 100_000,
+            rc_probes: 10_000,
+            useful_bytes: 640_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let r = estimate(&stats(), &EnergyModel::hbm3_ddr5());
+        assert!(r.fast_uj > 0.0 && r.slow_uj > 0.0 && r.sram_uj > 0.0);
+        assert!((r.total_uj() - (r.fast_uj + r.slow_uj + r.sram_uj)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nvm_writes_dominate() {
+        let r = estimate(&stats(), &EnergyModel::ddr5_nvm());
+        // 100 kB of NVM writes at 4 nJ/B = 400 uJ > everything else.
+        assert!(r.slow_uj > r.fast_uj);
+        assert!(r.slow_uj > 0.4 * 1000.0 * 0.9);
+    }
+
+    #[test]
+    fn efficiency_metric_scales_with_useful_bytes() {
+        let m = EnergyModel::hbm3_ddr5();
+        let a = estimate(&stats(), &m).pj_per_useful_byte(&stats());
+        let mut s2 = stats();
+        s2.useful_bytes *= 2;
+        let b = estimate(&s2, &m).pj_per_useful_byte(&s2);
+        assert!((a / b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_useful_bytes_is_safe() {
+        let s = Stats::default();
+        let r = estimate(&s, &EnergyModel::hbm3_ddr5());
+        assert_eq!(r.pj_per_useful_byte(&s), 0.0);
+    }
+}

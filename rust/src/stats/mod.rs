@@ -1,0 +1,234 @@
+//! Metrics collection: every quantity the paper's evaluation reports.
+//!
+//! * Fig. 7 — performance (weighted-speedup proxy from per-core cycles);
+//! * Fig. 8 — average memory access time split into metadata lookup, fast
+//!   data access, and slow data access;
+//! * Fig. 9 — metadata bytes resident in the fast tier at end of simulation;
+//! * Fig. 10 — fast-memory serve rate and bandwidth bloat factor;
+//! * Fig. 11 — remap cache hit rates (overall / identity / non-identity).
+//!
+//! [`energy`] adds first-order energy accounting on top of the traffic
+//! counters.
+
+
+pub mod energy;
+
+/// Raw event counters accumulated during simulation. All plain integers so
+/// merging and CSV export are trivial.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    // ---- demand stream ----
+    /// Memory accesses that reached the hybrid memory controller (LLC misses).
+    pub mem_accesses: u64,
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+    /// Accesses whose data was served by the fast tier.
+    pub fast_served: u64,
+    /// Accesses served by the slow tier.
+    pub slow_served: u64,
+
+    // ---- latency breakdown (cycles summed over demand accesses) ----
+    /// Cycles spent resolving physical->device mappings on the critical path
+    /// (SRAM remap cache probes + off-chip table walks).
+    pub metadata_cycles: u64,
+    /// Cycles spent on fast-tier data access (critical path).
+    pub fast_data_cycles: u64,
+    /// Cycles spent on slow-tier data access (critical path).
+    pub slow_data_cycles: u64,
+
+    // ---- remap cache ----
+    pub rc_probes: u64,
+    pub rc_hits_nonid: u64,
+    pub rc_hits_id: u64,
+    /// Probes that found an IdCache line but with bit = 0 (known non-identity
+    /// or unknown): counted as misses.
+    pub rc_sector_bit_miss: u64,
+    /// Off-chip table walks (remap cache misses).
+    pub table_walks: u64,
+    /// Fast-memory accesses issued by table walks (iRT issues up to
+    /// `levels`, in parallel; linear issues 1).
+    pub table_walk_mem_accesses: u64,
+    /// Probes whose resolved mapping was identity.
+    pub lookups_identity: u64,
+    /// Probes whose resolved mapping was non-identity.
+    pub lookups_nonidentity: u64,
+
+    // ---- traffic (bytes) ----
+    /// Useful demand data delivered to the processor.
+    pub useful_bytes: u64,
+    /// Total fast-tier traffic: demand + fills + evictions + metadata.
+    pub fast_traffic_bytes: u64,
+    /// Total slow-tier traffic.
+    pub slow_traffic_bytes: u64,
+    /// Bytes moved by caching/migration (fills + evictions + swaps).
+    pub migration_bytes: u64,
+    /// Bytes written back from fast to slow (dirty evictions / swap-outs).
+    pub writeback_bytes: u64,
+    /// Metadata bytes read/written in fast memory (table walks + updates).
+    pub metadata_traffic_bytes: u64,
+
+    // ---- structural ----
+    /// Blocks inserted into the fast tier (fills/migrations in).
+    pub fills: u64,
+    /// Data blocks evicted from the fast tier.
+    pub evictions: u64,
+    /// Data blocks evicted specifically because a metadata block needed the
+    /// slot back (iRT allocation priority, §3.3).
+    pub metadata_priority_evictions: u64,
+    /// Fills that landed in donated (saved-metadata-space) slots.
+    pub saved_slot_fills: u64,
+    /// Sub-block line fetches into partially-present blocks (sub-blocking
+    /// extension only).
+    pub subblock_fetches: u64,
+    /// Remap entries recycled through software deallocation hints (§3.5).
+    pub dealloc_recycled: u64,
+
+    // ---- metadata storage (sampled at end of run) ----
+    /// Bytes of remap-table storage currently allocated in the fast tier.
+    pub metadata_bytes_used: u64,
+    /// Bytes of fast memory reserved for the metadata region (worst case).
+    pub metadata_bytes_reserved: u64,
+    /// Number of reserved metadata blocks currently donated as cache slots.
+    pub donated_slots: u64,
+
+    // ---- CPU side ----
+    /// Total instructions retired across cores.
+    pub instructions: u64,
+    /// Maximum per-core cycle count (the run's wall clock).
+    pub max_core_cycles: u64,
+    /// Sum of per-core cycle counts.
+    pub total_core_cycles: u64,
+    /// Cache-hierarchy hits per level (L1, L2, LLC).
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub llc_hits: u64,
+    pub cache_accesses: u64,
+}
+
+impl Stats {
+    pub fn merge(&mut self, o: &Stats) {
+        macro_rules! add {
+            ($($f:ident),* $(,)?) => { $( self.$f += o.$f; )* };
+        }
+        add!(
+            mem_accesses, mem_reads, mem_writes, fast_served, slow_served,
+            metadata_cycles, fast_data_cycles, slow_data_cycles,
+            rc_probes, rc_hits_nonid, rc_hits_id, rc_sector_bit_miss,
+            table_walks, table_walk_mem_accesses, lookups_identity,
+            lookups_nonidentity, useful_bytes, fast_traffic_bytes,
+            slow_traffic_bytes, migration_bytes, writeback_bytes,
+            metadata_traffic_bytes, fills, evictions,
+            metadata_priority_evictions, saved_slot_fills, subblock_fetches,
+            dealloc_recycled, instructions,
+            total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
+        );
+        self.max_core_cycles = self.max_core_cycles.max(o.max_core_cycles);
+        // storage gauges: take the other's (later) sample if set
+        if o.metadata_bytes_used > 0 || o.metadata_bytes_reserved > 0 {
+            self.metadata_bytes_used = o.metadata_bytes_used;
+            self.metadata_bytes_reserved = o.metadata_bytes_reserved;
+            self.donated_slots = o.donated_slots;
+        }
+    }
+
+    // ---- derived metrics ----
+
+    /// Fraction of demand accesses served by the fast tier (Fig. 10a).
+    pub fn fast_serve_rate(&self) -> f64 {
+        ratio(self.fast_served, self.mem_accesses)
+    }
+
+    /// Fast-tier traffic divided by useful processor traffic (Fig. 10b,
+    /// "bandwidth bloat factor" after BEAR).
+    pub fn bandwidth_bloat(&self) -> f64 {
+        if self.useful_bytes == 0 {
+            return 0.0;
+        }
+        self.fast_traffic_bytes as f64 / self.useful_bytes as f64
+    }
+
+    /// Overall remap-cache hit rate (Fig. 11 lines).
+    pub fn rc_hit_rate(&self) -> f64 {
+        ratio(self.rc_hits_nonid + self.rc_hits_id, self.rc_probes)
+    }
+
+    /// Hit rate over probes that resolve to identity mappings.
+    pub fn rc_id_hit_rate(&self) -> f64 {
+        ratio(self.rc_hits_id, self.lookups_identity)
+    }
+
+    /// Hit rate over probes that resolve to non-identity mappings.
+    pub fn rc_nonid_hit_rate(&self) -> f64 {
+        ratio(self.rc_hits_nonid, self.lookups_nonidentity)
+    }
+
+    /// Average memory access time components, per demand access (Fig. 8).
+    pub fn amat_breakdown(&self) -> (f64, f64, f64) {
+        let n = self.mem_accesses.max(1) as f64;
+        (
+            self.metadata_cycles as f64 / n,
+            self.fast_data_cycles as f64 / n,
+            self.slow_data_cycles as f64 / n,
+        )
+    }
+
+    /// Performance proxy: instructions per cycle over the slowest core
+    /// (throughput of the rate-mode batch; ratios between designs form the
+    /// paper's weighted-speedup comparisons).
+    pub fn performance(&self) -> f64 {
+        ratio(self.instructions, self.max_core_cycles)
+    }
+
+    /// Fraction of the reserved metadata region actually holding metadata
+    /// at end of run (Fig. 9's "metadata size").
+    pub fn metadata_occupancy(&self) -> f64 {
+        ratio(self.metadata_bytes_used, self.metadata_bytes_reserved)
+    }
+}
+
+#[inline]
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 { 0.0 } else { num as f64 / den as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics_handle_zero() {
+        let s = Stats::default();
+        assert_eq!(s.fast_serve_rate(), 0.0);
+        assert_eq!(s.bandwidth_bloat(), 0.0);
+        assert_eq!(s.rc_hit_rate(), 0.0);
+        assert_eq!(s.performance(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_maxes_clock() {
+        let mut a = Stats { mem_accesses: 10, max_core_cycles: 100, ..Default::default() };
+        let b = Stats { mem_accesses: 5, max_core_cycles: 70, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.mem_accesses, 15);
+        assert_eq!(a.max_core_cycles, 100);
+    }
+
+    #[test]
+    fn serve_rate() {
+        let s = Stats { mem_accesses: 100, fast_served: 80, ..Default::default() };
+        assert!((s.fast_serve_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amat_breakdown_sums() {
+        let s = Stats {
+            mem_accesses: 4,
+            metadata_cycles: 8,
+            fast_data_cycles: 40,
+            slow_data_cycles: 100,
+            ..Default::default()
+        };
+        let (m, f, sl) = s.amat_breakdown();
+        assert_eq!((m, f, sl), (2.0, 10.0, 25.0));
+    }
+}

@@ -1,0 +1,187 @@
+//! Core shared types: addresses, block identifiers, cycles, access records.
+//!
+//! The simulator works in three address spaces, mirroring the paper's
+//! terminology (§2.2):
+//!
+//! * **physical address** — what the OS/application sees and what arrives at
+//!   the memory controller after virtual translation. In cache mode this
+//!   covers only the slow tier; in flat mode it covers slow + the OS-visible
+//!   part of the fast tier.
+//! * **device address** — the actual location on a memory device after the
+//!   hybrid-memory remap step. An *identity mapping* means
+//!   `device == physical`.
+//! * **block id** — a physical/device address divided by the migration block
+//!   size (256 B by default).
+
+
+/// A time stamp or duration in CPU cycles (3.2 GHz by default).
+pub type Cycle = u64;
+
+/// A physical byte address.
+pub type PhysAddr = u64;
+
+/// A block identifier: byte address >> log2(block size).
+pub type BlockId = u64;
+
+/// Sentinel for "no block".
+pub const NO_BLOCK: BlockId = u64::MAX;
+
+/// Memory tier selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// The fast tier (HBM3 or DDR5 depending on configuration).
+    Fast,
+    /// The slow tier (DDR5 or NVM depending on configuration).
+    Slow,
+}
+
+/// Read or write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+impl AccessKind {
+    #[inline]
+    pub fn is_write(self) -> bool {
+        matches!(self, AccessKind::Write)
+    }
+}
+
+/// One memory access emitted by a workload generator (post-CPU, pre-cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAccess {
+    /// Physical byte address.
+    pub addr: PhysAddr,
+    pub kind: AccessKind,
+    /// Number of non-memory instructions executed since the previous memory
+    /// access on the same core (drives the core clock between accesses).
+    pub gap_instrs: u32,
+}
+
+impl MemAccess {
+    pub fn read(addr: PhysAddr, gap_instrs: u32) -> Self {
+        MemAccess { addr, kind: AccessKind::Read, gap_instrs }
+    }
+    pub fn write(addr: PhysAddr, gap_instrs: u32) -> Self {
+        MemAccess { addr, kind: AccessKind::Write, gap_instrs }
+    }
+}
+
+/// Result of a device-address resolution (the metadata lookup of Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Remap {
+    /// Device block id the physical block currently maps to.
+    pub device_block: BlockId,
+    /// Which tier the device block lives on.
+    pub tier: Tier,
+}
+
+/// Simple deterministic 64-bit RNG (xorshift*), used everywhere a seeded
+/// stream is needed so runs are bit-reproducible without external crates.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point; splitmix the seed once.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        Rng64 { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for simulation purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+/// Integer log2 for powers of two, with a check in debug builds.
+#[inline]
+pub fn ilog2(x: u64) -> u32 {
+    debug_assert!(x.is_power_of_two(), "{x} is not a power of two");
+    x.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = Rng64::new(1);
+        let mut b = Rng64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn rng_zero_seed_is_fine() {
+        let mut r = Rng64::new(0);
+        let v: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert!(v.iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Rng64::new(7);
+        for n in [1u64, 2, 3, 17, 1 << 40] {
+            for _ in 0..50 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Rng64::new(9);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn ilog2_powers() {
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(256), 8);
+        assert_eq!(ilog2(1 << 33), 33);
+    }
+}

@@ -1,0 +1,97 @@
+//! Workload generators: calibrated synthetic stand-ins for the paper's
+//! evaluation suite (SPEC CPU 2017 memory-intensive rate-16, GAP, silo
+//! TPC-C, memcached YCSB-A/B) — see DESIGN.md §4 for the substitution
+//! rationale.
+//!
+//! Every workload is parameterized by a [`synth::Profile`]: memory
+//! footprint, per-region access mix (streaming scans vs. zipf-skewed random
+//! access), spatial run length, write fraction, and memory intensity.
+//! The generator itself ([`synth::TraceGen`]) is *stateless per
+//! `(stream, step)`* — a counter-based hash pipeline — which is exactly
+//! what lets the same algorithm run as the AOT-compiled Pallas kernel
+//! (python/compile/kernels/trace_gen.py) loaded through
+//! [`crate::runtime`]; [`pjrt::PjrtWorkload`] wraps that artifact behind
+//! the same [`Workload`] trait.
+
+pub mod pjrt;
+pub mod suite;
+pub mod synth;
+
+use crate::types::MemAccess;
+
+/// A multi-stream workload: one access stream per simulated core.
+/// (Not `Send`: the PJRT-backed implementation holds client handles;
+/// parallel sweeps construct workloads inside their worker threads.)
+pub trait Workload {
+    /// Generate the next access of `core`'s stream.
+    fn next(&mut self, core: usize) -> MemAccess;
+
+    /// Human-readable name (matches the paper's workload labels).
+    fn name(&self) -> &str;
+
+    /// Bytes of OS-visible memory the workload touches.
+    fn footprint_bytes(&self) -> u64;
+}
+
+/// All workload names in the evaluation suite, in the paper's order:
+/// SPEC CPU 2017 (rate-16) first, then GAP, then the server workloads.
+pub const SUITE: &[&str] = &[
+    "503.bwaves_r",
+    "505.mcf_r",
+    "507.cactuBSSN_r",
+    "519.lbm_r",
+    "520.omnetpp_r",
+    "523.xalancbmk_r",
+    "549.fotonik3d_r",
+    "554.roms_r",
+    "557.xz_r",
+    "gap_pr",
+    "gap_bfs",
+    "gap_sssp",
+    "gap_cc",
+    "gap_tc",
+    "silo_tpcc",
+    "ycsb_a",
+    "ycsb_b",
+];
+
+/// Build a workload by name for a system configuration (footprints scale
+/// with the configured capacities). Returns `None` for unknown names.
+pub fn by_name(
+    name: &str,
+    cfg: &crate::config::SystemConfig,
+) -> Option<Box<dyn Workload>> {
+    suite::build(name, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    #[test]
+    fn suite_is_complete() {
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        for name in SUITE {
+            let wl = by_name(name, &cfg).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(wl.name(), *name);
+            assert!(wl.footprint_bytes() > 0);
+        }
+        assert!(by_name("nonexistent", &cfg).is_none());
+    }
+
+    #[test]
+    fn accesses_stay_in_footprint() {
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        for name in ["505.mcf_r", "gap_pr", "ycsb_a"] {
+            let mut wl = by_name(name, &cfg).unwrap();
+            let fp = wl.footprint_bytes();
+            for core in 0..4 {
+                for _ in 0..500 {
+                    let a = wl.next(core);
+                    assert!(a.addr < fp, "{name}: {:#x} >= {fp:#x}", a.addr);
+                }
+            }
+        }
+    }
+}

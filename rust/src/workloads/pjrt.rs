@@ -1,0 +1,117 @@
+//! PJRT-backed workload generation: the [`Workload`] adapter over the
+//! AOT-compiled Pallas trace-generation artifact.
+//!
+//! This is the production data path of the three-layer architecture: the
+//! Layer-1 kernel (lowered once, at build time, by `make artifacts`) runs
+//! batched on the PJRT CPU client; the simulator pulls `(addr, write, gap)`
+//! tuples out of the returned tiles. A small tile cache lets cores at
+//! slightly different step counts share batches.
+//!
+//! `rust/tests/pjrt_crosscheck.rs` asserts this path agrees with the pure
+//! rust twin ([`super::synth::TraceGen`]).
+
+use anyhow::Result;
+
+use super::synth::TraceGen;
+use super::Workload;
+use crate::runtime::{Runtime, TraceGenExec, TraceTile, RegionTables, STEPS, STREAMS};
+use crate::types::{AccessKind, MemAccess};
+
+/// Workload generating accesses via the AOT trace_gen artifact.
+pub struct PjrtWorkload {
+    exec: TraceGenExec,
+    tables: RegionTables,
+    streams: Vec<u32>,
+    slice_base: Vec<u32>,
+    name: String,
+    footprint: u64,
+    /// Per-core next step.
+    steps: Vec<u32>,
+    /// Small cache of generated tiles, keyed by `step / STEPS`.
+    tiles: Vec<(u32, TraceTile)>,
+    cores: usize,
+}
+
+impl PjrtWorkload {
+    /// Wrap `gen`'s geometry behind the artifact in `runtime::artifacts_dir()`.
+    pub fn from_trace_gen(gen: &TraceGen, name: &str, cores: u32, seed: u32) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let exec = rt.trace_gen(&crate::runtime::artifacts_dir())?;
+        Self::with_exec(exec, gen, name, cores, seed)
+    }
+
+    pub fn with_exec(
+        exec: TraceGenExec,
+        gen: &TraceGen,
+        name: &str,
+        cores: u32,
+        seed: u32,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cores as usize <= STREAMS,
+            "artifact is compiled for {STREAMS} streams"
+        );
+        // Stream ids match SynthWorkload: core ^ seed; pad to STREAMS.
+        let streams: Vec<u32> = (0..STREAMS as u32).map(|c| c ^ seed).collect();
+        let (tables, slice_base) = gen.to_region_tables(&streams);
+        Ok(PjrtWorkload {
+            exec,
+            tables,
+            streams,
+            slice_base,
+            name: name.to_string(),
+            footprint: gen.footprint(),
+            steps: vec![0; cores as usize],
+            tiles: Vec::new(),
+            cores: cores as usize,
+        })
+    }
+
+    fn tile_for(&mut self, k: u32) -> Result<usize> {
+        if let Some(i) = self.tiles.iter().position(|(kk, _)| *kk == k) {
+            return Ok(i);
+        }
+        let tile = self.exec.run(
+            &self.streams,
+            k * STEPS as u32,
+            &self.slice_base,
+            &self.tables,
+        )?;
+        if self.tiles.len() >= 2 {
+            self.tiles.remove(0);
+        }
+        self.tiles.push((k, tile));
+        Ok(self.tiles.len() - 1)
+    }
+}
+
+impl Workload for PjrtWorkload {
+    fn next(&mut self, core: usize) -> MemAccess {
+        debug_assert!(core < self.cores);
+        let step = self.steps[core];
+        self.steps[core] = step.wrapping_add(1);
+        let k = step / STEPS as u32;
+        let off = (step % STEPS as u32) as usize;
+        let i = self.tile_for(k).expect("PJRT trace generation failed");
+        let (_, tile) = &self.tiles[i];
+        let at = core * STEPS + off;
+        let kind = if tile.is_write[at] != 0 {
+            AccessKind::Write
+        } else {
+            AccessKind::Read
+        };
+        MemAccess {
+            addr: tile.addr_line[at] as u64 * 64,
+            kind,
+            gap_instrs: tile.gap[at],
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.footprint
+    }
+}

@@ -1,0 +1,429 @@
+//! The counter-based synthetic trace generator — the rust twin of the
+//! Pallas kernel in `python/compile/kernels/trace_gen.py`.
+//!
+//! Every access is a pure function of `(stream_seed, step, profile)`:
+//!
+//! ```text
+//! run_id  = step / run_len            (spatial runs of run_len 64 B lines)
+//! h1      = lowbias32(stream_key ^ lowbias32(run_id))
+//! region  = cumulative-weight pick by h1
+//! u       = uniform(h2) in [0,1)
+//! line    = streaming sweep           (scan regions)
+//!         | floor(R * u^(1/(1-theta))) (zipf/pareto hot-rank regions)
+//! addr    = region_base + (line*run_len + pos) * 64   [+ private slice]
+//! write?  = hash bit vs write_frac;   gap = hash % (2*avg_gap)
+//! ```
+//!
+//! Statelessness makes the generator embarrassingly parallel (the Pallas
+//! kernel evaluates a whole `(streams x steps)` tile at once) and makes the
+//! rust and AOT-artifact paths directly comparable: integer-derived fields
+//! (`is_write`, `gap`) match bit-exactly; the zipf line index may differ in
+//! the last ULP of `powf` between libm and XLA, so address equality is
+//! asserted statistically (see rust/tests/pjrt_crosscheck.rs).
+
+use super::Workload;
+use crate::types::{MemAccess, PhysAddr};
+
+pub const LINE_BYTES: u64 = 64;
+
+/// One address region of a profile.
+#[derive(Debug, Clone, Copy)]
+pub struct Region {
+    /// Relative access weight (normalized over the profile's regions).
+    pub weight: f32,
+    /// Fraction of the footprint this region occupies.
+    pub frac: f64,
+    /// Zipf skew theta in [0, 1) for random regions. Ignored when `seq`.
+    pub theta: f32,
+    /// Fraction of the region's runs forming the per-epoch *working set*
+    /// (phased reuse, e.g. PageRank iterations). 1.0 = classic IRM zipf
+    /// over the whole region. Ignored when `seq`.
+    pub working: f32,
+    /// Streaming sweep (true) vs. zipf-skewed random runs (false).
+    pub seq: bool,
+}
+
+/// Full workload profile (see [`super::suite`] for the calibrated set).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: &'static str,
+    /// Fraction of OS-visible memory the workload touches.
+    pub footprint_frac: f64,
+    /// SPEC rate mode: each core owns a private slice of the footprint.
+    pub private_per_core: bool,
+    /// Mean non-memory instructions between memory accesses.
+    pub avg_gap_instrs: u32,
+    /// Fraction of accesses that are writes.
+    pub write_frac: f32,
+    /// Spatial run length in 64 B lines.
+    pub run_len: u32,
+    pub regions: Vec<Region>,
+}
+
+/// The low-bias 32-bit integer hash (the same rounds as the Pallas kernel).
+#[inline]
+pub fn lowbias32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7feb_352d);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846c_a68b);
+    x ^= x >> 16;
+    x
+}
+
+/// Precomputed per-region geometry for a concrete footprint.
+#[derive(Debug, Clone)]
+struct RegionGeom {
+    cum_weight: f32,
+    base_line: u64,
+    lines: u64,
+    runs: u64,
+    /// Working-set runs per epoch (phased reuse).
+    wruns: u64,
+    alpha: f32,
+    seq: bool,
+}
+
+/// Stateless trace generator over a fixed footprint.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    profile: Profile,
+    footprint: u64,
+    /// Per-stream slice span (== footprint when shared).
+    slice_bytes: u64,
+    regions: Vec<RegionGeom>,
+    run_len: u64,
+    cores: u32,
+    /// Runs per working-set epoch.
+    epoch_runs: u32,
+}
+
+impl TraceGen {
+    pub fn new(profile: Profile, os_capacity: u64, cores: u32) -> Self {
+        let footprint =
+            ((os_capacity as f64 * profile.footprint_frac) as u64).max(1 << 20) & !(LINE_BYTES - 1);
+        let slice_bytes = if profile.private_per_core {
+            (footprint / cores as u64) & !(LINE_BYTES - 1)
+        } else {
+            footprint
+        };
+        let slice_lines = slice_bytes / LINE_BYTES;
+        let run_len = profile.run_len.max(1) as u64;
+
+        let total_w: f32 = profile.regions.iter().map(|r| r.weight).sum();
+        let mut regions = Vec::with_capacity(profile.regions.len());
+        let mut cum_w = 0.0f32;
+        let mut base = 0u64;
+        let total_frac: f64 = profile.regions.iter().map(|r| r.frac).sum();
+        for r in &profile.regions {
+            cum_w += r.weight / total_w;
+            let lines = ((slice_lines as f64 * r.frac / total_frac) as u64).max(run_len);
+            let runs = (lines / run_len).max(1);
+            let wruns = ((runs as f64 * r.working as f64) as u64).clamp(1, runs);
+            regions.push(RegionGeom {
+                cum_weight: cum_w,
+                base_line: base,
+                lines,
+                runs,
+                wruns,
+                alpha: if r.theta < 1.0 { 1.0 / (1.0 - r.theta) } else { 64.0 },
+                seq: r.seq,
+            });
+            base += lines;
+        }
+
+        // Epoch length: ~8x the largest working set, so each epoch's set
+        // is re-referenced several times before it shifts.
+        let max_w = regions.iter().filter(|g| !g.seq).map(|g| g.wruns).max().unwrap_or(1);
+        let epoch_runs = (8 * max_w).max(1) as u32;
+
+        TraceGen { profile, footprint, slice_bytes, regions, run_len, cores, epoch_runs }
+    }
+
+    pub fn footprint(&self) -> u64 {
+        self.footprint
+    }
+
+    /// Export the precomputed geometry in the AOT artifact's wire format,
+    /// plus per-stream slice bases (in 64 B lines) for `streams`.
+    pub fn to_region_tables(
+        &self,
+        streams: &[u32],
+    ) -> (crate::runtime::RegionTables, Vec<u32>) {
+        use crate::runtime::{RegionTables, MAX_REGIONS};
+        let mut t = RegionTables::default();
+        // Pad unused slots with cum_w = 1.0 and 1-run dummy geometry.
+        for i in 0..MAX_REGIONS {
+            if let Some(g) = self.regions.get(i) {
+                t.cum_w[i] = g.cum_weight;
+                t.base_line[i] = g.base_line as u32;
+                t.lines[i] = g.lines as u32;
+                t.runs[i] = g.runs as u32;
+                t.wruns[i] = g.wruns as u32;
+                t.alpha[i] = g.alpha;
+                t.seq[i] = g.seq as u32;
+            } else {
+                t.cum_w[i] = 1.0;
+                t.lines[i] = self.run_len as u32;
+                t.runs[i] = 1;
+                t.wruns[i] = 1;
+                t.alpha[i] = 1.0;
+            }
+        }
+        t.params = [
+            self.run_len as u32,
+            (self.profile.write_frac * 65536.0) as u32,
+            (2 * self.profile.avg_gap_instrs).max(1),
+            self.regions.len() as u32,
+            self.epoch_runs,
+            0,
+        ];
+        let slice_lines = (self.slice_bytes / LINE_BYTES) as u32;
+        let bases = streams
+            .iter()
+            .map(|&s| {
+                if self.profile.private_per_core {
+                    (s % self.cores) * slice_lines
+                } else {
+                    0
+                }
+            })
+            .collect();
+        (t, bases)
+    }
+
+    /// The pure function: access for `(stream, step)`. Mirrors the Pallas
+    /// kernel exactly (integer ops + one `powf`).
+    pub fn gen(&self, stream: u32, step: u32) -> MemAccess {
+        let run_id = step / self.run_len as u32;
+        let pos = (step % self.run_len as u32) as u64;
+        let stream_key = lowbias32(stream.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        let h1 = lowbias32(stream_key ^ lowbias32(run_id));
+        let h2 = lowbias32(h1 ^ 0x9E37_79B9);
+        let h3 = lowbias32(h2 ^ 0x85EB_CA6B);
+
+        // Region pick by cumulative weight.
+        let u_r = h1 as f32 / 4294967296.0;
+        let mut ri = self.regions.len() - 1;
+        for (i, g) in self.regions.iter().enumerate() {
+            if u_r < g.cum_weight {
+                ri = i;
+                break;
+            }
+        }
+        let g = &self.regions[ri];
+
+        let line = if g.seq {
+            // Streaming sweep: consecutive runs are adjacent (per stream).
+            ((run_id as u64).wrapping_mul(self.run_len).wrapping_add(pos)) % g.lines
+        } else {
+            // Zipf (continuous pareto) rank over the epoch's *working
+            // set*, then a stateless hash scatter over the whole region.
+            // The epoch salt shifts the working set periodically (phased
+            // reuse, like graph-iteration sweeps); the hash spreads hot
+            // runs across the address space (collisions merely merge
+            // popularity mass and preserve the skew).
+            let u = (h2 >> 8) as f32 / 16777216.0;
+            let wrank = (g.wruns as f32 * u.powf(g.alpha)) as u32;
+            let epoch = run_id / self.epoch_runs;
+            let salt = lowbias32(epoch ^ (ri as u32).wrapping_mul(0x0100_0193) ^ 0x5EED_5EED);
+            let scattered = lowbias32(wrank ^ salt) as u64 % g.runs;
+            (scattered * self.run_len + pos) % g.lines
+        };
+
+        let slice_base = if self.profile.private_per_core {
+            stream as u64 % self.cores as u64 * self.slice_bytes
+        } else {
+            0
+        };
+        let addr: PhysAddr = slice_base + (g.base_line + line) * LINE_BYTES;
+
+        // Integer threshold (not an f32 compare) so the AOT kernel matches
+        // bit-exactly.
+        let is_write = (h3 & 0xFFFF) < (self.profile.write_frac * 65536.0) as u32;
+        let gap_mod = (2 * self.profile.avg_gap_instrs).max(1);
+        let gap = (h3 >> 16) % gap_mod;
+        let kind = if is_write {
+            crate::types::AccessKind::Write
+        } else {
+            crate::types::AccessKind::Read
+        };
+        MemAccess { addr, kind, gap_instrs: gap }
+    }
+}
+
+/// [`Workload`] adapter: per-core step counters over a [`TraceGen`].
+pub struct SynthWorkload {
+    gen: TraceGen,
+    steps: Vec<u32>,
+    seed: u32,
+}
+
+impl SynthWorkload {
+    pub fn new(gen: TraceGen, cores: u32, seed: u32) -> Self {
+        SynthWorkload { gen, steps: vec![0; cores as usize], seed }
+    }
+
+    pub fn trace_gen(&self) -> &TraceGen {
+        &self.gen
+    }
+}
+
+impl Workload for SynthWorkload {
+    fn next(&mut self, core: usize) -> MemAccess {
+        let step = self.steps[core];
+        self.steps[core] = step.wrapping_add(1);
+        self.gen.gen(core as u32 ^ self.seed, step)
+    }
+
+    fn name(&self) -> &str {
+        self.gen.profile.name
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.gen.footprint
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> Profile {
+        Profile {
+            name: "test",
+            footprint_frac: 0.5,
+            private_per_core: false,
+            avg_gap_instrs: 20,
+            write_frac: 0.3,
+            run_len: 4,
+            regions: vec![
+                Region { weight: 1.0, frac: 0.5, theta: 0.0, working: 1.0, seq: true },
+                Region { weight: 1.0, frac: 0.5, theta: 0.9, working: 1.0, seq: false },
+            ],
+        }
+    }
+
+    #[test]
+    fn deterministic_and_stateless() {
+        let g = TraceGen::new(profile(), 64 << 20, 4);
+        let a = g.gen(3, 100);
+        let b = g.gen(3, 100);
+        assert_eq!(a, b);
+        assert_ne!(g.gen(3, 101), a);
+        // Different streams diverge (shared seq regions may collide on the
+        // address, but the hash-derived fields differ).
+        let other = g.gen(4, 100);
+        assert!(other != a || g.gen(4, 101) != g.gen(3, 101));
+    }
+
+    #[test]
+    fn addresses_within_footprint() {
+        let g = TraceGen::new(profile(), 64 << 20, 4);
+        for s in 0..4 {
+            for t in 0..5000 {
+                let a = g.gen(s, t);
+                assert!(a.addr < g.footprint());
+                assert_eq!(a.addr % LINE_BYTES, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn write_fraction_approximates_profile() {
+        let g = TraceGen::new(profile(), 64 << 20, 4);
+        let n = 20_000;
+        let writes = (0..n).filter(|&t| g.gen(0, t).kind.is_write()).count();
+        let frac = writes as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.02, "write frac {frac}");
+    }
+
+    #[test]
+    fn gap_mean_approximates_profile() {
+        let g = TraceGen::new(profile(), 64 << 20, 4);
+        let n = 20_000u32;
+        let total: u64 = (0..n).map(|t| g.gen(0, t).gap_instrs as u64).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 20.0).abs() < 1.5, "gap mean {mean}");
+    }
+
+    #[test]
+    fn zipf_region_is_skewed() {
+        // The hash scatter spreads hot runs across the region, so head
+        // concentration shows up in the *frequency distribution*: the most
+        // popular 10% of distinct lines must absorb most accesses.
+        let mut p = profile();
+        p.regions = vec![Region { weight: 1.0, frac: 1.0, theta: 0.9, working: 1.0, seq: false }];
+        let g = TraceGen::new(p, 16 << 20, 1);
+        let n = 50_000u32;
+        let mut counts = std::collections::HashMap::new();
+        for t in 0..n {
+            *counts.entry(g.gen(0, t).addr).or_insert(0u32) += 1;
+        }
+        let mut freqs: Vec<u32> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let top: u64 = freqs.iter().take((freqs.len() / 10).max(1)).map(|&c| c as u64).sum();
+        let frac = top as f64 / n as f64;
+        assert!(frac > 0.5, "zipf 0.9 head too cold: {frac}");
+    }
+
+    #[test]
+    fn working_set_shifts_across_epochs() {
+        // With a small working set, addresses inside one epoch repeat
+        // heavily; across epochs the sets differ.
+        let mut p = profile();
+        p.regions =
+            vec![Region { weight: 1.0, frac: 1.0, theta: 0.5, working: 0.01, seq: false }];
+        p.run_len = 1;
+        let g = TraceGen::new(p, 64 << 20, 1);
+        let epoch_steps = g.epoch_runs; // run_len = 1
+        let set_a: std::collections::HashSet<u64> =
+            (0..epoch_steps / 2).map(|t| g.gen(0, t).addr).collect();
+        let set_b: std::collections::HashSet<u64> = (8 * epoch_steps..8 * epoch_steps + epoch_steps / 2)
+            .map(|t| g.gen(0, t).addr)
+            .collect();
+        let inter = set_a.intersection(&set_b).count();
+        assert!(
+            (inter as f64) < 0.2 * set_a.len() as f64,
+            "epochs should shift the working set: {inter} / {}",
+            set_a.len()
+        );
+        // And within an epoch the set is small relative to the sample.
+        assert!(set_a.len() < (epoch_steps / 2) as usize);
+    }
+
+    #[test]
+    fn sequential_region_sweeps() {
+        let mut p = profile();
+        p.regions = vec![Region { weight: 1.0, frac: 1.0, theta: 0.0, working: 1.0, seq: true }];
+        p.run_len = 1;
+        let g = TraceGen::new(p, 16 << 20, 1);
+        let a0 = g.gen(0, 0).addr;
+        let a1 = g.gen(0, 1).addr;
+        let a2 = g.gen(0, 2).addr;
+        assert_eq!(a1 - a0, LINE_BYTES);
+        assert_eq!(a2 - a1, LINE_BYTES);
+    }
+
+    #[test]
+    fn private_slices_are_disjoint() {
+        let mut p = profile();
+        p.private_per_core = true;
+        let g = TraceGen::new(p, 64 << 20, 4);
+        let slice = g.slice_bytes;
+        for s in 0..4u32 {
+            for t in 0..2000 {
+                let a = g.gen(s, t);
+                assert_eq!(a.addr / slice, s as u64, "stream {s} leaked its slice");
+            }
+        }
+    }
+
+    #[test]
+    fn lowbias32_reference_values() {
+        // Pinned values so the Pallas kernel can assert the same constants.
+        assert_eq!(lowbias32(0), 0);
+        assert_eq!(lowbias32(1), 1753845952);
+        assert_eq!(lowbias32(0xDEADBEEF), 3861431939);
+    }
+}

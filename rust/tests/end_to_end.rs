@@ -1,0 +1,148 @@
+//! End-to-end integration: full simulations across modes, technologies,
+//! and design points at reduced scale, exercising the entire L3 stack
+//! (workload gen -> cache hierarchy -> controller -> devices -> stats).
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::{MetadataScheme, SystemConfig};
+use trimma::coordinator::{figures, run_job, run_jobs, Job, JobKind};
+use trimma::sim::Simulation;
+use trimma::workloads;
+
+fn small(dp: DesignPoint, accesses: u64) -> SystemConfig {
+    let mut cfg = presets::hbm3_ddr5(dp);
+    cfg.workload.cores = 8;
+    cfg.workload.accesses_per_core = accesses;
+    cfg.workload.warmup_per_core = accesses / 2;
+    cfg
+}
+
+#[test]
+fn every_design_point_runs_every_workload_class() {
+    for dp in DesignPoint::ALL {
+        for wl in ["519.lbm_r", "gap_pr", "ycsb_b"] {
+            let cfg = small(*dp, 4000);
+            let w = workloads::by_name(wl, &cfg).unwrap();
+            let mut sim = if *dp == DesignPoint::Ideal {
+                Simulation::new_ideal(&cfg, w)
+            } else {
+                Simulation::new(&cfg, w)
+            };
+            let rep = sim.run();
+            assert!(rep.stats.mem_accesses > 0, "{dp:?}/{wl}");
+            assert!(rep.performance() > 0.0, "{dp:?}/{wl}");
+            assert_eq!(
+                rep.stats.fast_served + rep.stats.slow_served,
+                rep.stats.mem_accesses,
+                "{dp:?}/{wl}: every access is served somewhere"
+            );
+        }
+    }
+}
+
+#[test]
+fn ddr5_nvm_technology_runs() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::MemPod] {
+        let mut cfg = presets::ddr5_nvm(dp);
+        cfg.workload.cores = 8;
+        cfg.workload.accesses_per_core = 4000;
+        cfg.workload.warmup_per_core = 2000;
+        let w = workloads::by_name("gap_sssp", &cfg).unwrap();
+        let rep = Simulation::new(&cfg, w).run();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.slow_data_cycles > 0);
+    }
+}
+
+#[test]
+fn trimma_outperforms_linear_table_design() {
+    // The core claim at the heart of the paper, at small scale: same mode,
+    // same associativity; iRT + saved-space + iRC should win.
+    let perf = |dp: DesignPoint| {
+        let cfg = small(dp, 25_000);
+        let w = workloads::by_name("ycsb_a", &cfg).unwrap();
+        Simulation::new(&cfg, w).run().performance()
+    };
+    let trimma = perf(DesignPoint::TrimmaCache);
+    let linear = perf(DesignPoint::LinearCache);
+    assert!(
+        trimma > linear,
+        "Trimma-C ({trimma:.3}) must beat the linear-table design ({linear:.3})"
+    );
+}
+
+#[test]
+fn irt_levels_all_run() {
+    for levels in [1, 2, 4] {
+        let mut cfg = small(DesignPoint::TrimmaCache, 4000);
+        cfg.hybrid.scheme = MetadataScheme::Irt { levels };
+        let w = workloads::by_name("gap_cc", &cfg).unwrap();
+        let rep = Simulation::new(&cfg, w).run();
+        assert!(rep.stats.mem_accesses > 0, "levels={levels}");
+    }
+}
+
+#[test]
+fn block_size_sweep_runs() {
+    for block in [64u32, 1024, 4096] {
+        let cfg = presets::with_block_bytes(small(DesignPoint::TrimmaCache, 3000), block);
+        cfg.validate().unwrap();
+        let w = workloads::by_name("519.lbm_r", &cfg).unwrap();
+        let rep = Simulation::new(&cfg, w).run();
+        assert!(rep.stats.mem_accesses > 0, "block={block}");
+    }
+}
+
+#[test]
+fn capacity_ratio_sweep_runs() {
+    for ratio in [8u64, 64] {
+        let cfg = presets::with_capacity_ratio(small(DesignPoint::TrimmaFlat, 3000), ratio);
+        cfg.validate().unwrap();
+        let w = workloads::by_name("gap_bfs", &cfg).unwrap();
+        let rep = Simulation::new(&cfg, w).run();
+        assert!(rep.stats.mem_accesses > 0, "ratio={ratio}");
+    }
+}
+
+#[test]
+fn figure_harness_produces_tables_and_csv() {
+    let tables = figures::run_figure("fig9", 0.01, 0).unwrap();
+    assert_eq!(tables.len(), 1);
+    assert!(tables[0].columns.contains(&"irt(trimma)".to_string()));
+    assert_eq!(tables[0].rows.len(), workloads::SUITE.len() + 1); // + MEAN
+    assert!(std::fs::read_dir("results").map(|d| d.count() > 0).unwrap_or(false));
+}
+
+#[test]
+fn parallel_jobs_deterministic() {
+    let jobs: Vec<Job> = ["gap_pr", "ycsb_b", "519.lbm_r"]
+        .iter()
+        .map(|w| Job {
+            label: w.to_string(),
+            cfg: small(DesignPoint::TrimmaFlat, 3000),
+            workload: w.to_string(),
+            kind: JobKind::Normal,
+        })
+        .collect();
+    let a = run_jobs(&jobs, 3);
+    let b: Vec<_> = jobs.iter().map(run_job).collect();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.stats.max_core_cycles, y.stats.max_core_cycles);
+        assert_eq!(x.stats.fast_served, y.stats.fast_served);
+    }
+}
+
+#[test]
+fn stats_conservation_invariants() {
+    let cfg = small(DesignPoint::TrimmaCache, 10_000);
+    let w = workloads::by_name("silo_tpcc", &cfg).unwrap();
+    let rep = Simulation::new(&cfg, w).run();
+    let s = &rep.stats;
+    // Remap-cache probes either hit or miss into walks.
+    assert_eq!(s.rc_probes, s.rc_hits_nonid + s.rc_hits_id + s.table_walks);
+    // Every probe resolved to identity or non-identity.
+    assert_eq!(s.rc_probes, s.lookups_identity + s.lookups_nonidentity);
+    // Traffic sanity: the tiers carry at least the demand bytes.
+    assert!(s.fast_traffic_bytes + s.slow_traffic_bytes >= s.useful_bytes);
+    // Reads + writes partition accesses.
+    assert_eq!(s.mem_accesses, s.mem_reads + s.mem_writes);
+}

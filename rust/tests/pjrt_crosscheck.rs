@@ -1,0 +1,120 @@
+//! Integration test: the AOT Pallas artifact (through PJRT) must agree
+//! with the pure-rust generator twin.
+//!
+//! Integer-derived fields (`is_write`, `gap_instrs`) must match
+//! bit-exactly. Addresses match except where the single f32 `powf` in the
+//! zipf rank differs in the last ULP between libm and XLA — we allow a
+//! small mismatch rate and require the mismatches to be rank-adjacent.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use trimma::runtime::{artifacts_dir, Runtime, STEPS};
+use trimma::workloads::pjrt::PjrtWorkload;
+use trimma::workloads::suite;
+use trimma::workloads::synth::TraceGen;
+use trimma::workloads::Workload;
+
+fn artifact_available() -> bool {
+    artifacts_dir().join("trace_gen.hlo.txt").exists()
+}
+
+#[test]
+fn pjrt_matches_rust_generator() {
+    if !artifact_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let cores = 8u32;
+    let seed = 0xD1CEu32;
+    for name in ["gap_pr", "505.mcf_r", "ycsb_a", "519.lbm_r"] {
+        let profile = suite::profile(name).unwrap();
+        let gen = TraceGen::new(profile, 256 << 20, cores);
+        let mut pj =
+            PjrtWorkload::from_trace_gen(&gen, name, cores, seed).expect("load artifact");
+
+        let n = 2 * STEPS; // crosses a tile boundary
+        let mut addr_mismatch = 0u64;
+        let mut total = 0u64;
+        for core in 0..cores as usize {
+            for step in 0..n as u32 {
+                let got = pj.next(core);
+                let want = gen.gen(core as u32 ^ seed, step);
+                assert_eq!(got.kind, want.kind, "{name} core {core} step {step}");
+                assert_eq!(
+                    got.gap_instrs, want.gap_instrs,
+                    "{name} core {core} step {step}"
+                );
+                if got.addr != want.addr {
+                    addr_mismatch += 1;
+                }
+                total += 1;
+            }
+        }
+        let rate = addr_mismatch as f64 / total as f64;
+        assert!(
+            rate < 0.001,
+            "{name}: address mismatch rate {rate} (powf ULP differences should be rare)"
+        );
+    }
+}
+
+#[test]
+fn hotness_artifact_runs_and_conserves_mass() {
+    if !artifact_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let hx = rt.hotness(&artifacts_dir()).unwrap();
+    let gen = TraceGen::new(suite::profile("ycsb_a").unwrap(), 128 << 20, 16);
+    let streams: Vec<u32> = (0..16).collect();
+    let (tables, slice) = gen.to_region_tables(&streams);
+    let hot0 = vec![0f32; trimma::runtime::HOT_BUCKETS];
+    let (hot, wf, mg) = hx.run(&streams, 0, &slice, &tables, &hot0, 1.0).unwrap();
+    let sum: f32 = hot.iter().sum();
+    assert!((sum - (16 * STEPS) as f32).abs() < 1.0, "mass {sum}");
+    assert!((0.0..=1.0).contains(&wf));
+    assert!(mg >= 0.0);
+    // ycsb_a is write-heavy (50%).
+    assert!((wf - 0.5).abs() < 0.05, "write frac {wf}");
+}
+
+#[test]
+fn pjrt_workload_behaves_like_synth_in_sim() {
+    if !artifact_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    use trimma::config::presets::{self, DesignPoint};
+    use trimma::sim::Simulation;
+    let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+    cfg.hybrid.fast_bytes = 1 << 20;
+    cfg.hybrid.slow_bytes = 32 << 20;
+    cfg.hybrid.num_sets = 4;
+    cfg.workload.cores = 8;
+    cfg.workload.accesses_per_core = 2000;
+    cfg.workload.warmup_per_core = 500;
+
+    let profile = suite::profile("gap_pr").unwrap();
+    let cap = suite::os_capacity(&cfg);
+    let gen = TraceGen::new(profile, cap, cfg.workload.cores);
+    let pj = PjrtWorkload::from_trace_gen(
+        &gen,
+        "gap_pr",
+        cfg.workload.cores,
+        cfg.workload.seed as u32,
+    )
+    .unwrap();
+    let rep_pjrt = Simulation::new(&cfg, Box::new(pj)).run();
+
+    let wl = trimma::workloads::by_name("gap_pr", &cfg).unwrap();
+    let rep_synth = Simulation::new(&cfg, wl).run();
+
+    // Same generator, same machine: headline metrics must agree closely.
+    let a = rep_pjrt.stats.fast_serve_rate();
+    let b = rep_synth.stats.fast_serve_rate();
+    assert!((a - b).abs() < 0.02, "serve rates diverged: {a} vs {b}");
+    let pa = rep_pjrt.performance();
+    let pb = rep_synth.performance();
+    assert!((pa / pb - 1.0).abs() < 0.05, "perf diverged: {pa} vs {pb}");
+}
