@@ -153,6 +153,14 @@ pub struct HybridConfig {
     /// demanded 64 B sub-blocks of a cached block instead of the whole
     /// block, trading fill bandwidth for extra sub-block misses.
     pub subblock: bool,
+    /// Shadow every controller with the [`crate::verify`] oracle: after
+    /// each access the translation, fast/slow placement, and
+    /// identity/non-identity classification are checked against the
+    /// ground-truth model, and the remap tables are periodically swept for
+    /// bijectivity, lost blocks, and donated-slot accounting. Costs a
+    /// constant factor per access — on for tests and debug runs, off for
+    /// benches and figure sweeps (all presets default to `false`).
+    pub verify: bool,
 }
 
 impl HybridConfig {

@@ -207,7 +207,14 @@ fn hybrid_for(dp: DesignPoint, fast_bytes: u64, slow_bytes: u64, block: u32) -> 
         remap_cache_latency: 3,
         flat_fast_fraction: 1.0,
         subblock: false,
+        verify: false,
     }
+}
+
+/// Enable the [`crate::verify`] oracle (tests / debug runs).
+pub fn with_verify(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.hybrid.verify = true;
+    cfg
 }
 
 fn base(name: String, fast_mem: MemTech, slow_mem: MemTech, hybrid: HybridConfig) -> SystemConfig {

@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::SystemConfig;
-use crate::hybrid::{build_controller, tagmatch::TagMatchController, Controller};
+use crate::hybrid::{build_controller, maybe_checked, tagmatch::TagMatchController, Controller};
 use crate::sim::{SimReport, Simulation};
 use crate::workloads;
 
@@ -51,7 +51,9 @@ pub fn run_job(job: &Job) -> SimReport {
     let ctrl: Box<dyn Controller> = match job.kind {
         JobKind::Normal => build_controller(&job.cfg, false),
         JobKind::Ideal => build_controller(&job.cfg, true),
-        JobKind::TagMatch => Box::new(TagMatchController::new(&job.cfg)),
+        JobKind::TagMatch => {
+            maybe_checked(Box::new(TagMatchController::new(&job.cfg)), &job.cfg)
+        }
     };
     let mut sim = Simulation::with_controller(&job.cfg, wl, ctrl);
     sim.run()

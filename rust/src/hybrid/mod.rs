@@ -45,18 +45,56 @@ pub trait Controller {
     fn stats(&self) -> &Stats;
 
     fn layout(&self) -> &SetLayout;
+
+    /// Debug/verify introspection: the current physical->device translation
+    /// for `(set, idx)`, with no stats or timing side effects. `None` means
+    /// this controller has no remap table to introspect (the tag-matching
+    /// baselines keep placement in cache tags instead); the verify oracle
+    /// then skips remap-specific checks and runs only the generic ones.
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        let _ = (set, idx);
+        None
+    }
+
+    /// Deep self-check of one set's metadata/slot invariants (slot states
+    /// vs. table entries, donated-slot accounting vs. iRT occupancy, free
+    /// list coverage). Controllers without remap state accept by default.
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        let _ = set;
+        Ok(())
+    }
+
+    /// The remap table's own count of live non-identity entries in `set`
+    /// (its internal occupancy bookkeeping). The verify oracle cross-checks
+    /// this against the entries it can observe via [`Self::debug_translate`].
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        let _ = set;
+        None
+    }
 }
 
 /// Build the controller for a system configuration. `ideal = true` builds
 /// the metadata-free oracle of Fig. 1 regardless of `cfg.hybrid.scheme`.
+/// With `cfg.hybrid.verify` the controller is shadowed by the
+/// [`crate::verify::CheckedController`] oracle.
 pub fn build_controller(cfg: &SystemConfig, ideal: bool) -> Box<dyn Controller> {
-    match (ideal, cfg.hybrid.scheme, cfg.hybrid.mode) {
+    let inner: Box<dyn Controller> = match (ideal, cfg.hybrid.scheme, cfg.hybrid.mode) {
         (true, _, _) => Box::new(remap::RemapController::new(cfg, true)),
         (_, MetadataScheme::TagAlloy, Mode::Cache) => Box::new(alloy::AlloyController::new(cfg)),
         (_, MetadataScheme::TagLohHill, Mode::Cache) => {
             Box::new(lohhill::LohHillController::new(cfg))
         }
         _ => Box::new(remap::RemapController::new(cfg, false)),
+    };
+    maybe_checked(inner, cfg)
+}
+
+/// Wrap `inner` in the verify oracle when the config asks for it.
+pub fn maybe_checked(inner: Box<dyn Controller>, cfg: &SystemConfig) -> Box<dyn Controller> {
+    if cfg.hybrid.verify {
+        Box::new(crate::verify::CheckedController::new(inner, cfg))
+    } else {
+        inner
     }
 }
 

@@ -687,6 +687,14 @@ impl RemapController {
                 if !self.use_saved_space {
                     return;
                 }
+                // A fast *home* block served slow is one whose data was
+                // swapped out to its partner's location; it returns via the
+                // swap restore, never via demand caching — caching it here
+                // would overwrite its live swap mapping and orphan the
+                // partner's inverse entry (the verify oracle flags this).
+                if self.layout.is_fast_idx(p) {
+                    return;
+                }
                 let s = match self.pop_free(set) {
                     Some(s) => Some(s),
                     None => {
@@ -909,6 +917,98 @@ impl Controller for RemapController {
 
     fn layout(&self) -> &SetLayout {
         &self.layout
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        Some(self.table.lookup(set, idx))
+    }
+
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        Some(self.table.nonidentity_entries(set))
+    }
+
+    /// Deep invariant sweep of one set: every slot state must agree with
+    /// the remap table, donated-slot accounting must match iRT occupancy,
+    /// and every vacant slot must be reachable through the free stack.
+    /// The verify oracle calls this periodically and at finalize.
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        let f = self.layout.fast_per_set;
+        let mut non_meta_reserved = 0u64;
+        for s in 0..f {
+            let st = self.slot(set, s);
+            match st {
+                Slot::Data { phys, .. } => {
+                    let p = phys as u64;
+                    if self.table.lookup(set, p) != s {
+                        return Err(format!(
+                            "set {set} slot {s}: holds {p} but forward mapping is {}",
+                            self.table.lookup(set, p)
+                        ));
+                    }
+                    if self.table.lookup(set, s) != p {
+                        return Err(format!(
+                            "set {set} slot {s}: inverse mapping is {} not {p}",
+                            self.table.lookup(set, s)
+                        ));
+                    }
+                }
+                Slot::Home | Slot::Empty => {
+                    if !self.table.is_identity(set, s) {
+                        return Err(format!(
+                            "set {set} slot {s}: vacant/home but mapped to {}",
+                            self.table.lookup(set, s)
+                        ));
+                    }
+                }
+                Slot::Meta => {
+                    if !self.layout.is_meta_idx(s) {
+                        return Err(format!("set {set} slot {s}: Meta outside the region"));
+                    }
+                    if self.table.slot_is_donatable(set, s) {
+                        return Err(format!(
+                            "set {set} slot {s}: Meta but table says donatable"
+                        ));
+                    }
+                }
+                Slot::DonatedEmpty | Slot::ReservedUnusable => {
+                    if !self.layout.is_meta_idx(s) {
+                        return Err(format!(
+                            "set {set} slot {s}: reserved state outside the region"
+                        ));
+                    }
+                    if !self.table.slot_is_donatable(set, s) {
+                        return Err(format!(
+                            "set {set} slot {s}: unallocated state but table says allocated"
+                        ));
+                    }
+                }
+            }
+            if self.layout.is_meta_idx(s) && st != Slot::Meta {
+                non_meta_reserved += 1;
+            }
+        }
+        // Donated accounting: the table's per-set donated count must equal
+        // the reserved slots not currently holding live metadata.
+        if let Table::Irt(t) = &self.table {
+            if t.levels() > 1 {
+                let d = t.donated_blocks_in_set(set);
+                if d != non_meta_reserved {
+                    return Err(format!(
+                        "set {set}: table donates {d} blocks but {non_meta_reserved} \
+                         reserved slots are not Meta"
+                    ));
+                }
+            }
+        }
+        // Free-stack coverage: every usable vacant slot must be poppable.
+        for s in 0..f {
+            if matches!(self.slot(set, s), Slot::Empty | Slot::DonatedEmpty)
+                && !self.free[set as usize].contains(&(s as u32))
+            {
+                return Err(format!("set {set} slot {s}: vacant but absent from free stack"));
+            }
+        }
+        Ok(())
     }
 }
 

@@ -47,6 +47,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod types;
+pub mod verify;
 pub mod workloads;
 
 pub use config::SystemConfig;

@@ -209,7 +209,21 @@ fn compare(get: &dyn Fn(&str) -> Option<String>) {
 }
 
 /// Workload hotness analysis through the AOT `hotness` artifact — the
+/// L2 analysis graph running via PJRT, no python involved. Requires the
+/// `pjrt` cargo feature (the offline build image lacks the XLA crates).
+#[cfg(not(feature = "pjrt"))]
+fn analyze(_get: &dyn Fn(&str) -> Option<String>) {
+    eprintln!(
+        "`trimma analyze` needs the PJRT runtime: vendor the `xla` and \
+         `anyhow` crates, add them to rust/Cargo.toml (see the [features] \
+         note there), and rebuild with `--features pjrt`"
+    );
+    std::process::exit(2);
+}
+
+/// Workload hotness analysis through the AOT `hotness` artifact — the
 /// L2 analysis graph running via PJRT, no python involved.
+#[cfg(feature = "pjrt")]
 fn analyze(get: &dyn Fn(&str) -> Option<String>) {
     use trimma::runtime::{artifacts_dir, Runtime, HOT_BUCKETS, STEPS};
     use trimma::workloads::suite;

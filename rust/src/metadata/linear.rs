@@ -58,6 +58,12 @@ impl LinearTable {
     pub fn reserved_blocks_per_set(&self) -> u64 {
         self.reserved_blocks_per_set
     }
+
+    /// Live non-identity entries in one set (occupancy introspection for
+    /// the verify oracle; storage is charged in full regardless).
+    pub fn nonidentity_entries(&self, set: u32) -> u64 {
+        self.sets[set as usize].iter().filter(|&&e| e != IDENTITY).count() as u64
+    }
 }
 
 #[cfg(test)]

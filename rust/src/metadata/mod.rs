@@ -124,6 +124,23 @@ impl Table {
             Table::Irt(t) => t.donated_blocks(),
         }
     }
+
+    /// Donated blocks in one set (0 for the linear table, which never
+    /// donates).
+    pub fn donated_blocks_in_set(&self, set: u32) -> u64 {
+        match self {
+            Table::Linear(_) => 0,
+            Table::Irt(t) => t.donated_blocks_in_set(set),
+        }
+    }
+
+    /// Live non-identity entries in one set.
+    pub fn nonidentity_entries(&self, set: u32) -> u64 {
+        match self {
+            Table::Linear(t) => t.nonidentity_entries(set),
+            Table::Irt(t) => t.nonidentity_entries(set),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -120,6 +120,11 @@ impl RemapCache {
     pub fn capacity(&self) -> u64 {
         self.sets * self.ways as u64
     }
+
+    /// Currently valid entries (occupancy introspection).
+    pub fn live_entries(&self) -> u64 {
+        self.lines.iter().filter(|e| e.valid).count() as u64
+    }
 }
 
 #[cfg(test)]

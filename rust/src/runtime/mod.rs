@@ -3,13 +3,23 @@
 //! artifacts under `artifacts/` are HLO *text* produced once by
 //! `python/compile/aot.py` (see that file for why text, not protos).
 //!
-//! The wrapper owns a CPU [`xla::PjRtClient`] and one compiled executable
-//! per artifact. [`TraceGenExec`] is the typed interface the workload layer
+//! The wrapper owns a CPU PJRT client and one compiled executable per
+//! artifact. `TraceGenExec` is the typed interface the workload layer
 //! uses: feed stream/region tables, get back `(addr_line, is_write, gap)`
 //! tiles.
+//!
+//! The PJRT client itself needs the `xla` and `anyhow` crates, which the
+//! offline build image does not ship; everything touching them is gated
+//! behind the `pjrt` cargo feature. The wire-format types
+//! ([`RegionTables`], [`TraceTile`], the shape constants) stay available
+//! unconditionally — the pure-rust twin ([`crate::workloads::synth`])
+//! exports its geometry through them regardless of which backend runs.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
+use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
 
 /// Fixed AOT shapes (must match python/compile/model.py).
@@ -34,10 +44,12 @@ pub fn artifacts_dir() -> PathBuf {
 }
 
 /// A PJRT CPU client plus compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         Ok(Runtime { client: xla::PjRtClient::cpu().context("PJRT CPU client")? })
@@ -95,6 +107,7 @@ pub struct TraceTile {
     pub gap: Vec<u32>,
 }
 
+#[cfg(feature = "pjrt")]
 fn run_tuple3(
     exe: &xla::PjRtLoadedExecutable,
     args: &[xla::Literal],
@@ -106,10 +119,12 @@ fn run_tuple3(
 }
 
 /// The compiled trace-generation executable.
+#[cfg(feature = "pjrt")]
 pub struct TraceGenExec {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl TraceGenExec {
     /// Run one batch: `streams`/`slice_base` are per-stream (len STREAMS),
     /// `step0` is the base step of the tile.
@@ -144,10 +159,12 @@ impl TraceGenExec {
 }
 
 /// The compiled hotness-analysis executable.
+#[cfg(feature = "pjrt")]
 pub struct HotnessExec {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl HotnessExec {
     /// Fold one tile into the decayed histogram. Returns
     /// `(hot_out, write_frac, mean_gap)`.

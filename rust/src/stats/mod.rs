@@ -184,6 +184,63 @@ impl Stats {
     pub fn metadata_occupancy(&self) -> f64 {
         ratio(self.metadata_bytes_used, self.metadata_bytes_reserved)
     }
+
+    /// Canonical serialization of the full stat vector: every counter in a
+    /// fixed order as `name=value` pairs joined by `;`. Two runs are
+    /// byte-identical iff these strings are equal — the golden-snapshot
+    /// harness (rust/tests/golden.rs) and the determinism matrix compare
+    /// exactly this.
+    pub fn canonical(&self) -> String {
+        let pairs: [(&str, u64); 37] = [
+            ("mem_accesses", self.mem_accesses),
+            ("mem_reads", self.mem_reads),
+            ("mem_writes", self.mem_writes),
+            ("fast_served", self.fast_served),
+            ("slow_served", self.slow_served),
+            ("metadata_cycles", self.metadata_cycles),
+            ("fast_data_cycles", self.fast_data_cycles),
+            ("slow_data_cycles", self.slow_data_cycles),
+            ("rc_probes", self.rc_probes),
+            ("rc_hits_nonid", self.rc_hits_nonid),
+            ("rc_hits_id", self.rc_hits_id),
+            ("rc_sector_bit_miss", self.rc_sector_bit_miss),
+            ("table_walks", self.table_walks),
+            ("table_walk_mem_accesses", self.table_walk_mem_accesses),
+            ("lookups_identity", self.lookups_identity),
+            ("lookups_nonidentity", self.lookups_nonidentity),
+            ("useful_bytes", self.useful_bytes),
+            ("fast_traffic_bytes", self.fast_traffic_bytes),
+            ("slow_traffic_bytes", self.slow_traffic_bytes),
+            ("migration_bytes", self.migration_bytes),
+            ("writeback_bytes", self.writeback_bytes),
+            ("metadata_traffic_bytes", self.metadata_traffic_bytes),
+            ("fills", self.fills),
+            ("evictions", self.evictions),
+            ("metadata_priority_evictions", self.metadata_priority_evictions),
+            ("saved_slot_fills", self.saved_slot_fills),
+            ("subblock_fetches", self.subblock_fetches),
+            ("dealloc_recycled", self.dealloc_recycled),
+            ("metadata_bytes_used", self.metadata_bytes_used),
+            ("metadata_bytes_reserved", self.metadata_bytes_reserved),
+            ("donated_slots", self.donated_slots),
+            ("instructions", self.instructions),
+            ("max_core_cycles", self.max_core_cycles),
+            ("total_core_cycles", self.total_core_cycles),
+            ("l1_hits", self.l1_hits),
+            ("l2_hits", self.l2_hits),
+            ("llc_hits", self.llc_hits),
+        ];
+        let mut out = String::with_capacity(pairs.len() * 24);
+        for (i, (k, v)) in pairs.iter().enumerate() {
+            if i > 0 {
+                out.push(';');
+            }
+            out.push_str(k);
+            out.push('=');
+            out.push_str(&v.to_string());
+        }
+        out
+    }
 }
 
 #[inline]

@@ -1,0 +1,387 @@
+//! Differential verification of the remap metadata path.
+//!
+//! Trimma's whole value proposition rests on the correctness of the
+//! physical->device translation: the iRT must never lose or alias a block
+//! while trimming identity entries, and the iRC must return the same
+//! translation the off-chip tables would. This module provides the
+//! ground-truth model and the wiring that lets any [`Controller`] be
+//! shadowed by it:
+//!
+//! * [`ReferenceRemap`] — the oracle. It checks, after *every* access,
+//!   that the translation is in range, involutive (every non-identity
+//!   mapping is a 2-cycle `p -> s`, `s -> p` — the bidirectional-entry
+//!   invariant of paper §3.3), tier-crossing (a moved block always pairs a
+//!   fast slot with a slow home), consistent with which tier actually
+//!   served the access, and consistent with the identity/non-identity
+//!   classification counters. Periodically (and at finalize) it sweeps a
+//!   whole set: involution over the full per-set index space (which
+//!   implies bijectivity — no lost, no aliased blocks) plus a cross-check
+//!   of the table's own occupancy bookkeeping against the entries the
+//!   sweep observes.
+//! * [`CheckedController`] — a transparent [`Controller`] wrapper wiring
+//!   the oracle into any design point. Enabled by
+//!   `cfg.hybrid.verify = true` (see [`crate::config::presets::with_verify`]);
+//!   tests and debug runs pay the cost, benches and figure sweeps do not.
+//!
+//! Controllers expose three debug hooks ([`Controller::debug_translate`],
+//! [`Controller::debug_check_set`], [`Controller::debug_nonidentity_entries`]);
+//! the tag-matching baselines (Alloy, Loh-Hill) keep placement in cache
+//! tags rather than a remap table and use the default hooks, so for them
+//! the oracle degrades to the generic conservation checks (every access
+//! served exactly once, read/write partition, latency breakdown equals the
+//! returned demand latency).
+//!
+//! Any violation panics with a description of the broken invariant, so a
+//! seeded mutation in `hybrid/remap.rs` (e.g. skipping the inverse-entry
+//! write on a swap) fails the scenario tests immediately.
+
+use crate::hybrid::Controller;
+use crate::metadata::SetLayout;
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle};
+
+/// How many accesses between incremental full-set sweeps.
+const SWEEP_EVERY: u64 = 2048;
+
+/// Small snapshot of the counters the per-access checks need.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct Snap {
+    mem: u64,
+    reads: u64,
+    writes: u64,
+    fast: u64,
+    slow: u64,
+    id: u64,
+    nonid: u64,
+    meta_cyc: u64,
+    fast_cyc: u64,
+    slow_cyc: u64,
+}
+
+impl Snap {
+    fn of(s: &Stats) -> Snap {
+        Snap {
+            mem: s.mem_accesses,
+            reads: s.mem_reads,
+            writes: s.mem_writes,
+            fast: s.fast_served,
+            slow: s.slow_served,
+            id: s.lookups_identity,
+            nonid: s.lookups_nonidentity,
+            meta_cyc: s.metadata_cycles,
+            fast_cyc: s.fast_data_cycles,
+            slow_cyc: s.slow_data_cycles,
+        }
+    }
+}
+
+/// The ground-truth remap model: a dead-simple view of what a correct
+/// logical->physical map must look like, checked against whatever the
+/// controller reports through its debug hooks.
+#[derive(Debug, Clone)]
+pub struct ReferenceRemap {
+    layout: SetLayout,
+    subblock: bool,
+}
+
+impl ReferenceRemap {
+    pub fn new(layout: SetLayout, subblock: bool) -> Self {
+        ReferenceRemap { layout, subblock }
+    }
+
+    /// Check one observed mapping `idx -> device` of `set`.
+    fn check_mapping(
+        &self,
+        ctrl: &dyn Controller,
+        set: u32,
+        idx: u64,
+        device: u64,
+        when: &str,
+    ) {
+        let k = self.layout.indices_per_set();
+        if device >= k {
+            panic!(
+                "verify oracle [{when}]: set {set} idx {idx} maps out of range \
+                 ({device} >= {k})"
+            );
+        }
+        let back = ctrl
+            .debug_translate(set, device)
+            .expect("controller with translation must stay introspectable");
+        if back != idx {
+            panic!(
+                "verify oracle [{when}]: set {set} mapping is not involutive: \
+                 {idx} -> {device} but {device} -> {back} (lost or aliased block)"
+            );
+        }
+        if device != idx && self.layout.is_fast_idx(device) == self.layout.is_fast_idx(idx) {
+            panic!(
+                "verify oracle [{when}]: set {set} non-identity mapping {idx} -> {device} \
+                 does not cross tiers"
+            );
+        }
+    }
+
+    /// Per-access differential check. `pre_dev` is the translation sampled
+    /// immediately before the access (what the lookup must have resolved);
+    /// `pre`/`post` are the stats snapshots around it.
+    #[allow(clippy::too_many_arguments)]
+    fn check_access(
+        &self,
+        ctrl: &dyn Controller,
+        set: u32,
+        idx: u64,
+        kind: AccessKind,
+        lat: Cycle,
+        pre_dev: Option<u64>,
+        pre: Snap,
+        post: Snap,
+    ) {
+        // Generic conservation laws (hold for every design point).
+        if post.mem != pre.mem + 1 {
+            panic!("verify oracle: access did not count exactly once (set {set} idx {idx})");
+        }
+        let (dr, dw) = (post.reads - pre.reads, post.writes - pre.writes);
+        if (dr + dw) != 1 || (kind.is_write() && dw != 1) || (!kind.is_write() && dr != 1) {
+            panic!("verify oracle: read/write partition broken (set {set} idx {idx})");
+        }
+        let served_fast = post.fast == pre.fast + 1;
+        let served_slow = post.slow == pre.slow + 1;
+        if served_fast == served_slow {
+            panic!(
+                "verify oracle: access must be served by exactly one tier \
+                 (set {set} idx {idx}: fast {served_fast}, slow {served_slow})"
+            );
+        }
+        let breakdown = (post.meta_cyc - pre.meta_cyc)
+            + (post.fast_cyc - pre.fast_cyc)
+            + (post.slow_cyc - pre.slow_cyc);
+        if breakdown != lat {
+            panic!(
+                "verify oracle: latency breakdown {breakdown} != demand latency {lat} \
+                 (set {set} idx {idx})"
+            );
+        }
+
+        // Remap-specific checks (controllers with a translation hook).
+        let Some(d0) = pre_dev else { return };
+        // Fast/slow placement: the serving tier must match the translation
+        // resolved by the lookup. Sub-blocking may legitimately serve a
+        // fast-mapped block from the slow tier (sub-block miss), never the
+        // reverse.
+        if self.subblock {
+            if served_fast && !self.layout.is_fast_idx(d0) {
+                panic!(
+                    "verify oracle: set {set} idx {idx} -> {d0} (slow) but served fast"
+                );
+            }
+        } else if served_fast != self.layout.is_fast_idx(d0) {
+            panic!(
+                "verify oracle: set {set} idx {idx} -> {d0} placement disagrees with \
+                 serving tier (served_fast = {served_fast})"
+            );
+        }
+        // Identity classification: when the lookup classified this access,
+        // its verdict must match the pre-access translation.
+        let class_delta = (post.id + post.nonid) - (pre.id + pre.nonid);
+        if class_delta == 1 {
+            let claimed_nonid = post.nonid == pre.nonid + 1;
+            if claimed_nonid != (d0 != idx) {
+                panic!(
+                    "verify oracle: set {set} idx {idx} -> {d0} classified as \
+                     {} mapping",
+                    if claimed_nonid { "non-identity" } else { "identity" }
+                );
+            }
+        }
+        // The mapping pair must be consistent after the access settles
+        // (fills/migrations/evictions included).
+        let d1 = ctrl
+            .debug_translate(set, idx)
+            .expect("controller with translation must stay introspectable");
+        self.check_mapping(ctrl, set, idx, d1, "after access");
+    }
+
+    /// Full sweep of one set: involution over the entire per-set index
+    /// space (=> the mapping is a bijection; no block is lost or aliased),
+    /// tier-crossing for every non-identity entry, and agreement between
+    /// the table's occupancy bookkeeping and the observed entries.
+    pub fn sweep_set(&self, ctrl: &dyn Controller, set: u32) {
+        let k = self.layout.indices_per_set();
+        if ctrl.debug_translate(set, 0).is_none() {
+            return; // tag-matching baseline: nothing to sweep
+        }
+        let mut nonid = 0u64;
+        for i in 0..k {
+            let d = ctrl.debug_translate(set, i).unwrap();
+            self.check_mapping(ctrl, set, i, d, "sweep");
+            if d != i {
+                nonid += 1;
+            }
+        }
+        if let Some(counted) = ctrl.debug_nonidentity_entries(set) {
+            if counted != nonid {
+                panic!(
+                    "verify oracle [sweep]: set {set} table occupancy bookkeeping says \
+                     {counted} non-identity entries, sweep observed {nonid}"
+                );
+            }
+        }
+        if let Err(e) = ctrl.debug_check_set(set) {
+            panic!("verify oracle [deep check]: {e}");
+        }
+    }
+}
+
+/// Transparent verifying wrapper around any controller. See module docs.
+pub struct CheckedController {
+    inner: Box<dyn Controller>,
+    oracle: ReferenceRemap,
+    layout: SetLayout,
+    accesses: u64,
+    sweep_cursor: u32,
+}
+
+impl CheckedController {
+    pub fn new(inner: Box<dyn Controller>, cfg: &crate::config::SystemConfig) -> Self {
+        let layout = *inner.layout();
+        CheckedController {
+            oracle: ReferenceRemap::new(layout, cfg.hybrid.subblock),
+            inner,
+            layout,
+            accesses: 0,
+            sweep_cursor: 0,
+        }
+    }
+
+    /// Run the full verification (every set) immediately.
+    pub fn verify_all_sets(&self) {
+        for set in 0..self.layout.num_sets {
+            self.oracle.sweep_set(&*self.inner, set);
+        }
+    }
+}
+
+impl Controller for CheckedController {
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        let pre = Snap::of(self.inner.stats());
+        let pre_dev = self.inner.debug_translate(set, idx);
+        if let Some(d0) = pre_dev {
+            self.oracle.check_mapping(&*self.inner, set, idx, d0, "before access");
+        }
+        let lat = self.inner.access(set, idx, line, kind, now);
+        let post = Snap::of(self.inner.stats());
+        self.oracle
+            .check_access(&*self.inner, set, idx, kind, lat, pre_dev, pre, post);
+
+        self.accesses += 1;
+        if self.accesses % SWEEP_EVERY == 0 {
+            let s = self.sweep_cursor;
+            self.sweep_cursor = (self.sweep_cursor + 1) % self.layout.num_sets;
+            self.oracle.sweep_set(&*self.inner, s);
+        }
+        lat
+    }
+
+    fn finalize(&mut self) {
+        self.verify_all_sets();
+        self.inner.finalize();
+    }
+
+    fn reset_stats(&mut self) {
+        self.inner.reset_stats();
+    }
+
+    fn stats(&self) -> &Stats {
+        self.inner.stats()
+    }
+
+    fn layout(&self) -> &SetLayout {
+        self.inner.layout()
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        self.inner.debug_translate(set, idx)
+    }
+
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        self.inner.debug_check_set(set)
+    }
+
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        self.inner.debug_nonidentity_entries(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+    use crate::hybrid::{build_controller, Controller};
+
+    fn small(dp: DesignPoint) -> crate::config::SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(dp);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg.hybrid.verify = true;
+        cfg
+    }
+
+    #[test]
+    fn checked_controller_is_transparent() {
+        // Same accesses, same latencies and stats as the bare controller.
+        let mut cfg = small(DesignPoint::TrimmaCache);
+        let mut checked = build_controller(&cfg, false);
+        cfg.hybrid.verify = false;
+        let mut bare = build_controller(&cfg, false);
+        let f = bare.layout().fast_per_set;
+        let mut t = 0;
+        for n in 0..500u64 {
+            let idx = f + (n * 37) % 2000;
+            let a = checked.access(0, idx, 0, AccessKind::Read, t);
+            let b = bare.access(0, idx, 0, AccessKind::Read, t);
+            assert_eq!(a, b, "access {n}");
+            t += 900;
+        }
+        checked.finalize();
+        bare.finalize();
+        assert_eq!(checked.stats().fast_served, bare.stats().fast_served);
+        assert_eq!(checked.stats().metadata_bytes_used, bare.stats().metadata_bytes_used);
+    }
+
+    #[test]
+    fn oracle_accepts_correct_controller_storm() {
+        let cfg = small(DesignPoint::TrimmaCache);
+        let mut c = build_controller(&cfg, false);
+        let f = c.layout().fast_per_set;
+        let mut rng = crate::types::Rng64::new(0xFEED);
+        let mut t = 0;
+        for _ in 0..6000 {
+            let set = rng.next_below(4) as u32;
+            let idx = f + rng.next_below(3000);
+            let kind = if rng.chance(0.3) { AccessKind::Write } else { AccessKind::Read };
+            c.access(set, idx, 0, kind, t);
+            t += 700;
+        }
+        c.finalize(); // full sweep of every set must pass
+    }
+
+    #[test]
+    fn oracle_sweeps_flat_mode_swaps() {
+        let cfg = small(DesignPoint::TrimmaFlat);
+        let mut c = build_controller(&cfg, false);
+        let f = c.layout().fast_per_set;
+        let mut t = 0;
+        // Hammer a few slow blocks across MEA epochs to force swaps, then
+        // drift to force restores.
+        for round in 0..8u64 {
+            for n in 0..400u64 {
+                let idx = f + round * 64 + n % 48;
+                c.access(0, idx, 0, AccessKind::Read, t);
+                t += 600;
+            }
+        }
+        c.finalize();
+    }
+}

@@ -1,0 +1,330 @@
+//! Adversarial scenario engine: deterministic, seedable access patterns
+//! built to break the remap metadata path rather than to resemble any real
+//! application. Each scenario targets one failure class of the iRT/iRC
+//! machinery; all of them run green under every design point with the
+//! [`crate::verify`] oracle enabled (rust/tests/verify_oracle.rs), and
+//! their stat vectors are locked by the golden-snapshot harness
+//! (rust/tests/golden.rs).
+//!
+//! | name                  | attack                                          |
+//! |-----------------------|-------------------------------------------------|
+//! | `adv_set_thrash`      | all accesses conflict on one hybrid set: more   |
+//! |                       | distinct blocks than the set has ways, cycled,  |
+//! |                       | so every fill evicts (and LLC sets alias too)   |
+//! | `adv_migration_storm` | a hot region larger than the LLC is hammered,   |
+//! |                       | then teleports every epoch — mass fills,        |
+//! |                       | evictions, MEA swaps and swap restores          |
+//! | `adv_identity_flip`   | two same-set block groups alternate phases, so  |
+//! |                       | the same indices flip identity <-> non-identity |
+//! |                       | continuously (iRT alloc/free churn, iRC         |
+//! |                       | invalidation storms)                            |
+//! | `adv_drift`           | a working-set window slides over the footprint, |
+//! |                       | continuously retiring old mappings while        |
+//! |                       | minting new ones                                |
+//! | `adv_pointer_chase`   | dependent-chain hash walk over the whole        |
+//! |                       | footprint: no spatial locality, maximal remap   |
+//! |                       | cache pressure                                  |
+//!
+//! Scenarios are pure functions of `(seed, core, step)` plus the config
+//! geometry, so runs are bit-reproducible across thread counts and hosts.
+
+use super::synth::lowbias32;
+use super::Workload;
+use crate::config::SystemConfig;
+use crate::types::{AccessKind, MemAccess, PhysAddr};
+
+/// 64 B cache-line size (the unit the CPU hierarchy works in).
+const LINE: u64 = 64;
+
+/// Scenario names, registration order.
+pub const ADVERSARIAL: &[&str] = &[
+    "adv_set_thrash",
+    "adv_migration_storm",
+    "adv_identity_flip",
+    "adv_drift",
+    "adv_pointer_chase",
+];
+
+/// Geometry every scenario derives its parameters from.
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    /// Hybrid migration block size in bytes.
+    block: u64,
+    /// Stride (bytes) between consecutive blocks of one hybrid set.
+    set_stride: u64,
+    /// Fast-tier blocks per hybrid set (the associativity to overload).
+    fast_per_set: u64,
+    /// Total fast-tier blocks.
+    fast_blocks: u64,
+    /// OS-visible capacity in bytes.
+    os_cap: u64,
+    /// Shared LLC capacity in bytes (patterns must exceed it to reach the
+    /// hybrid controller at all).
+    llc_bytes: u64,
+    seed: u32,
+}
+
+impl Geom {
+    fn of(cfg: &SystemConfig) -> Geom {
+        let h = &cfg.hybrid;
+        Geom {
+            block: h.block_bytes as u64,
+            set_stride: h.num_sets as u64 * h.block_bytes as u64,
+            fast_per_set: (h.fast_blocks() / h.num_sets as u64).max(1),
+            fast_blocks: h.fast_blocks().max(1),
+            os_cap: super::suite::os_capacity(cfg).max(1 << 20),
+            llc_bytes: cfg.llc.size_bytes.max(1),
+            seed: cfg.workload.seed as u32,
+        }
+    }
+}
+
+/// Per-access hash-derived read/write + core-gap fields, shared by all
+/// scenarios so their mix knobs stay in one place.
+#[inline]
+fn mix(h: u32, write_milli: u32, gap_mod: u32) -> (AccessKind, u32) {
+    let kind = if (h & 0x3FF) < write_milli { AccessKind::Write } else { AccessKind::Read };
+    let gap = (h >> 10) % gap_mod.max(1);
+    (kind, gap)
+}
+
+/// One scenario: a name, per-core step counters, and a pure address
+/// function. Keeping the state down to counters is what makes scenarios
+/// trivially deterministic.
+struct Scenario {
+    name: &'static str,
+    geom: Geom,
+    footprint: u64,
+    steps: Vec<u32>,
+    gen: fn(&Geom, u32, u32) -> u64,
+    write_milli: u32,
+    gap_mod: u32,
+}
+
+impl Workload for Scenario {
+    fn next(&mut self, core: usize) -> MemAccess {
+        let step = self.steps[core];
+        self.steps[core] = step.wrapping_add(1);
+        let stream = (core as u32) ^ self.geom.seed;
+        let addr: PhysAddr = (self.gen)(&self.geom, stream, step) % self.footprint;
+        let h = lowbias32(lowbias32(stream.wrapping_mul(0x9E37_79B9) ^ step) ^ 0x5EED);
+        let (kind, gap) = mix(h, self.write_milli, self.gap_mod);
+        MemAccess { addr: addr & !(LINE - 1), kind, gap_instrs: gap }
+    }
+
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.footprint
+    }
+}
+
+// ---------------- address functions ----------------
+
+/// Set-conflict thrash: every address lands in hybrid set 0 (multiples of
+/// `set_stride`), cycling over several times more distinct blocks than the
+/// set has fast ways. Cores run phase-shifted over the same conflict ring.
+fn thrash_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let ring = thrash_ring(g);
+    let pos = (step as u64 + stream as u64 * 7) % ring;
+    pos * g.set_stride
+}
+
+fn thrash_ring(g: &Geom) -> u64 {
+    // Overload the set's associativity, stay inside the OS capacity, and
+    // keep at least a few dozen blocks so even direct-mapped designs (one
+    // fast block per set) see LLC-defeating reuse distances.
+    (4 * g.fast_per_set).max(64).min((g.os_cap / g.set_stride).max(2))
+}
+
+/// Migration storm: sweep a hot region bigger than the LLC (so every
+/// access reaches the controller) but comparable to the fast tier (so it
+/// gets cached/migrated in), then teleport the region every epoch to turn
+/// all of those mappings stale at once.
+fn storm_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let hot_bytes = (2 * g.llc_bytes).max(g.fast_blocks * g.block / 2).min(g.os_cap / 2);
+    let hot_lines = (hot_bytes / LINE).max(1);
+    // Short epochs (per core) so even brief runs see several teleports;
+    // within an epoch the sweep is sequential, so the 64 B lines of each
+    // migration block coalesce into one fill + several fast hits.
+    let epoch_len: u32 = 1024;
+    let epoch = step / epoch_len;
+    let base = (epoch as u64).wrapping_mul(hot_bytes + 17 * g.block) % g.os_cap;
+    let off = ((step % epoch_len) as u64 + stream as u64 * 1031) % hot_lines;
+    base + off * LINE
+}
+
+/// Identity-flip churn: two block groups, both aliasing hybrid set 0,
+/// alternate as the active group. Each phase caches its own group
+/// (identity -> non-identity) while pressure evicts the other
+/// (non-identity -> identity), flipping the same iRT leaves and iRC bits
+/// over and over.
+fn flip_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let group = flip_group(g);
+    // Phases much shorter than a full group sweep: the point is the
+    // *flip rate* (iRT alloc/free churn, iRC invalidations), not coverage.
+    let phase_len = ((group / 4) as u32).max(256);
+    let phase = step / phase_len;
+    let which = (phase & 1) as u64;
+    let pos = (step as u64 + stream as u64 * 13) % group;
+    (which * group + pos) * g.set_stride
+}
+
+fn flip_group(g: &Geom) -> u64 {
+    (2 * g.fast_per_set).max(64).min((g.os_cap / (2 * g.set_stride)).max(2))
+}
+
+/// Working-set drift: a window about twice the fast tier slides forward an
+/// eighth of its span every window's worth of accesses; accesses scatter
+/// hash-uniformly inside the window.
+fn drift_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let window_blocks = (2 * g.fast_blocks).max(256).min((g.os_cap / g.block).max(2));
+    // Advance the window every 1/16th of a window's worth of accesses so
+    // short runs still drift several times.
+    let epoch = step / ((window_blocks / 16).max(64) as u32);
+    let base_block = (epoch as u64).wrapping_mul(window_blocks / 8 + 1);
+    let h = lowbias32(lowbias32(step ^ stream.wrapping_mul(0x0100_0193)) ^ 0xD81F);
+    let block = base_block + (h as u64 % window_blocks);
+    block * g.block
+}
+
+/// Pointer chase: a per-core dependent hash chain over the whole
+/// footprint. Successive addresses share nothing — worst case for the
+/// remap caches and for any spatial-locality assumption in the tables.
+fn chase_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    // Stateless chain: position i is hash^(i)(seed), realized as a single
+    // mix of (stream, step) — equivalent distribution, still deterministic.
+    let h = lowbias32(step.wrapping_mul(0x9E37_79B9) ^ lowbias32(stream ^ 0xC4A5));
+    let total_lines = (g.os_cap / LINE).max(1);
+    (h as u64 % total_lines) * LINE
+}
+
+/// Build a scenario by name, or `None` if the name is not adversarial.
+pub fn build(name: &str, cfg: &SystemConfig) -> Option<Box<dyn Workload>> {
+    let geom = Geom::of(cfg);
+    let cores = cfg.workload.cores as usize;
+    let (gen, footprint, write_milli, gap_mod): (fn(&Geom, u32, u32) -> u64, u64, u32, u32) =
+        match name {
+            "adv_set_thrash" => {
+                let span = thrash_ring(&geom) * geom.set_stride;
+                (thrash_addr, span, 307, 16)
+            }
+            "adv_migration_storm" => (storm_addr, geom.os_cap, 307, 24),
+            "adv_identity_flip" => {
+                let span = 2 * flip_group(&geom) * geom.set_stride;
+                (flip_addr, span, 409, 16)
+            }
+            "adv_drift" => (drift_addr, geom.os_cap, 204, 20),
+            "adv_pointer_chase" => (chase_addr, geom.os_cap, 51, 8),
+            _ => return None,
+        };
+    Some(Box::new(Scenario {
+        name: ADVERSARIAL.iter().copied().find(|n| *n == name)?,
+        geom,
+        footprint: footprint.max(LINE),
+        steps: vec![0; cores],
+        gen,
+        write_milli,
+        gap_mod,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    fn cfg() -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg.workload.cores = 4;
+        cfg
+    }
+
+    #[test]
+    fn all_scenarios_build_and_stay_in_footprint() {
+        let cfg = cfg();
+        for name in ADVERSARIAL {
+            let mut wl = build(name, &cfg).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(wl.name(), *name);
+            let fp = wl.footprint_bytes();
+            assert!(fp > 0, "{name}");
+            for core in 0..4 {
+                for _ in 0..2000 {
+                    let a = wl.next(core);
+                    assert!(a.addr < fp, "{name}: {:#x} >= {fp:#x}", a.addr);
+                    assert_eq!(a.addr % LINE, 0, "{name}: unaligned");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(build("adv_nonexistent", &cfg()).is_none());
+        assert!(build("gap_pr", &cfg()).is_none());
+    }
+
+    #[test]
+    fn scenarios_are_deterministic() {
+        let cfg = cfg();
+        for name in ADVERSARIAL {
+            let mut a = build(name, &cfg).unwrap();
+            let mut b = build(name, &cfg).unwrap();
+            for core in 0..2 {
+                for _ in 0..500 {
+                    assert_eq!(a.next(core), b.next(core), "{name} core {core}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_changes_the_stream() {
+        let cfg_a = cfg();
+        let mut cfg_b = cfg();
+        cfg_b.workload.seed = 0xBEEF;
+        let mut a = build("adv_pointer_chase", &cfg_a).unwrap();
+        let mut b = build("adv_pointer_chase", &cfg_b).unwrap();
+        let div = (0..200).any(|_| a.next(0) != b.next(0));
+        assert!(div, "different seeds must diverge");
+    }
+
+    #[test]
+    fn set_thrash_hits_one_hybrid_set() {
+        let cfg = cfg();
+        let layout = crate::metadata::SetLayout::for_config(&cfg.hybrid, false);
+        let mut wl = build("adv_set_thrash", &cfg).unwrap();
+        let mut mapper = crate::sim::mapper::AddrMapper::new(layout, cfg.hybrid.mode);
+        let mut sets = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let a = wl.next(0);
+            let (set, _) = mapper.translate(a.addr);
+            sets.insert(set);
+        }
+        assert_eq!(sets.len(), 1, "thrash must alias one set: {sets:?}");
+    }
+
+    #[test]
+    fn identity_flip_alternates_groups() {
+        let cfg = cfg();
+        let mut wl = build("adv_identity_flip", &cfg).unwrap();
+        let fp = wl.footprint_bytes();
+        let half = fp / 2;
+        // Drain one phase, then confirm the next phase visits the other half.
+        let mut last_group = wl.next(0).addr >= half;
+        let mut flips = 0;
+        for _ in 0..40_000 {
+            let g = wl.next(0).addr >= half;
+            if g != last_group {
+                flips += 1;
+                last_group = g;
+            }
+        }
+        assert!(flips >= 2, "phases must alternate between groups: {flips}");
+    }
+}

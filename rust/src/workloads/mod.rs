@@ -13,6 +13,8 @@
 //! [`crate::runtime`]; [`pjrt::PjrtWorkload`] wraps that artifact behind
 //! the same [`Workload`] trait.
 
+pub mod adversarial;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod suite;
 pub mod synth;
@@ -56,12 +58,14 @@ pub const SUITE: &[&str] = &[
 ];
 
 /// Build a workload by name for a system configuration (footprints scale
-/// with the configured capacities). Returns `None` for unknown names.
+/// with the configured capacities). Covers the calibrated suite and the
+/// `adv_*` adversarial scenarios ([`adversarial::ADVERSARIAL`]). Returns
+/// `None` for unknown names.
 pub fn by_name(
     name: &str,
     cfg: &crate::config::SystemConfig,
 ) -> Option<Box<dyn Workload>> {
-    suite::build(name, cfg)
+    suite::build(name, cfg).or_else(|| adversarial::build(name, cfg))
 }
 
 #[cfg(test)]

@@ -1,0 +1,45 @@
+//! Shared helpers for the integration tests: tiny per-design-point system
+//! configurations (small enough that debug-mode runs finish quickly, big
+//! enough that the adversarial scenarios actually reach the hybrid memory
+//! controller) and a uniform way to run any design point on any workload.
+#![allow(dead_code)]
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::SystemConfig;
+use trimma::sim::Simulation;
+use trimma::stats::Stats;
+use trimma::workloads;
+
+/// Tiny, fixed-geometry config for `dp`: 1 MiB fast / 32 MiB slow (the
+/// paper's 32:1 ratio), 2 cores, short runs. Geometry knobs that are
+/// design-point-specific (Alloy's direct mapping, Loh-Hill's row-sized
+/// sets) are derived the same way the full presets derive them.
+pub fn tiny(dp: DesignPoint) -> SystemConfig {
+    let mut cfg = presets::hbm3_ddr5(dp);
+    cfg.hybrid.fast_bytes = 1 << 20;
+    cfg.hybrid.slow_bytes = 32 << 20;
+    cfg.hybrid.num_sets = match dp {
+        DesignPoint::AlloyCache => {
+            (cfg.hybrid.fast_bytes / cfg.hybrid.block_bytes as u64) as u32
+        }
+        DesignPoint::LohHill => (cfg.hybrid.fast_bytes / 8192) as u32,
+        _ => 4,
+    };
+    cfg.workload.cores = 2;
+    cfg.workload.accesses_per_core = 1500;
+    cfg.workload.warmup_per_core = 500;
+    cfg
+}
+
+/// Run `dp` on workload `wl` under `cfg` (handles the Ideal oracle's
+/// special construction) and return the end-of-run stats.
+pub fn run(dp: DesignPoint, cfg: &SystemConfig, wl: &str) -> Stats {
+    let w = workloads::by_name(wl, cfg)
+        .unwrap_or_else(|| panic!("unknown workload {wl}"));
+    let mut sim = if dp == DesignPoint::Ideal {
+        Simulation::new_ideal(cfg, w)
+    } else {
+        Simulation::new(cfg, w)
+    };
+    sim.run().stats
+}

@@ -1,0 +1,70 @@
+//! Determinism matrix: every design point must produce a byte-identical
+//! stat vector across repeated runs, and `coordinator::run_jobs` must
+//! produce byte-identical results regardless of the worker-thread count
+//! (1 vs. all cores). This is what makes the golden-snapshot harness and
+//! the paper-claim comparisons trustworthy at all.
+
+mod common;
+
+use trimma::config::presets::DesignPoint;
+use trimma::coordinator::{run_jobs, Job, JobKind};
+
+#[test]
+fn every_design_point_is_run_to_run_deterministic() {
+    for dp in DesignPoint::ALL {
+        let cfg = common::tiny(*dp);
+        let a = common::run(*dp, &cfg, "adv_drift").canonical();
+        let b = common::run(*dp, &cfg, "adv_drift").canonical();
+        assert_eq!(a, b, "{dp:?}: two identical runs diverged");
+    }
+}
+
+#[test]
+fn verification_does_not_change_determinism() {
+    // verify=true runs the oracle but must leave the stat vector alone.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::MemPod] {
+        let plain = common::run(dp, &common::tiny(dp), "adv_identity_flip").canonical();
+        let mut vcfg = common::tiny(dp);
+        vcfg.hybrid.verify = true;
+        let verified = common::run(dp, &vcfg, "adv_identity_flip").canonical();
+        assert_eq!(plain, verified, "{dp:?}");
+    }
+}
+
+#[test]
+fn run_jobs_thread_count_invariant() {
+    // One job per design point, all on the same adversarial workload; the
+    // coordinator must return identical stat vectors whether it runs them
+    // on one worker or on every core.
+    let jobs: Vec<Job> = DesignPoint::ALL
+        .iter()
+        .map(|dp| Job {
+            label: dp.label().to_string(),
+            cfg: common::tiny(*dp),
+            workload: "adv_pointer_chase".to_string(),
+            kind: if *dp == DesignPoint::Ideal { JobKind::Ideal } else { JobKind::Normal },
+        })
+        .collect();
+    let serial = run_jobs(&jobs, 1);
+    let parallel = run_jobs(&jobs, 0); // 0 = all cores
+    assert_eq!(serial.len(), parallel.len());
+    for ((s, p), job) in serial.iter().zip(&parallel).zip(&jobs) {
+        assert_eq!(
+            s.stats.canonical(),
+            p.stats.canonical(),
+            "{}: thread count changed the result",
+            job.label
+        );
+    }
+}
+
+#[test]
+fn distinct_seeds_distinct_results() {
+    // Sanity check that determinism is not degeneracy: the seed matters.
+    let dp = DesignPoint::TrimmaCache;
+    let a = common::run(dp, &common::tiny(dp), "adv_drift").canonical();
+    let mut cfg = common::tiny(dp);
+    cfg.workload.seed = 0x0DD5EED;
+    let b = common::run(dp, &cfg, "adv_drift").canonical();
+    assert_ne!(a, b, "different seeds should not collide on the full vector");
+}

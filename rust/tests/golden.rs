@@ -1,0 +1,129 @@
+//! Golden-stats snapshot harness: locks the full end-of-run stat vector of
+//! every `DesignPoint x adversarial scenario` combination, byte for byte,
+//! against `tests/golden/stats.json`.
+//!
+//! This is the safety net for hot-path refactors of `hybrid/remap.rs` and
+//! the metadata structures: any change that perturbs a single counter in a
+//! single combination fails here with the exact field that moved.
+//!
+//! Snapshot workflow (insta-style bless-on-first-run):
+//! * a combination present in the JSON must match exactly — mismatch fails
+//!   the test and names the first differing counter;
+//! * a combination absent from the JSON is *blessed*: the harness appends
+//!   it and passes, printing what it added. Commit the updated file;
+//! * an intentional behavior change is re-blessed by running with
+//!   `TRIMMA_BLESS=1` and committing the rewritten file.
+//!
+//! The file is JSON with one string value per combination — the value is
+//! the canonical `name=value;...` stat vector of [`trimma::stats::Stats::canonical`],
+//! so "byte-for-byte" comparison is plain string equality and the file
+//! stays mergeable line by line.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use trimma::config::presets::DesignPoint;
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/stats.json")
+}
+
+/// Parse the snapshot file. Format (written by `save` below): one
+/// `"key": "value"` pair per line inside a single object, no escapes.
+fn load(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, rest)) = rest.split_once("\": \"") else { continue };
+        let Some(value) = rest.strip_suffix('"') else { continue };
+        map.insert(key.to_string(), value.to_string());
+    }
+    map
+}
+
+fn save(map: &BTreeMap<String, String>) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in map.iter().enumerate() {
+        out.push_str(&format!("  \"{k}\": \"{v}\""));
+        out.push_str(if i + 1 < map.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Point out the first differing counter between two canonical vectors.
+fn first_diff(want: &str, got: &str) -> String {
+    for (w, g) in want.split(';').zip(got.split(';')) {
+        if w != g {
+            return format!("expected `{w}`, got `{g}`");
+        }
+    }
+    let (nw, ng) = (want.split(';').count(), got.split(';').count());
+    if nw != ng {
+        return format!("field count changed: {nw} -> {ng}");
+    }
+    "vectors differ".to_string()
+}
+
+#[test]
+fn golden_stats_all_design_points_all_scenarios() {
+    let path = golden_path();
+    let mut golden = load(&std::fs::read_to_string(&path).unwrap_or_default());
+    let bless_all = std::env::var("TRIMMA_BLESS").is_ok();
+
+    let mut blessed = Vec::new();
+    let mut failures = Vec::new();
+    for dp in DesignPoint::ALL {
+        for sc in ADVERSARIAL {
+            let key = format!("{}/{}", dp.label(), sc);
+            let stats = common::run(*dp, &common::tiny(*dp), sc);
+            assert!(stats.mem_accesses > 0, "{key}: scenario never reached memory");
+            let got = stats.canonical();
+            match golden.get(&key).cloned() {
+                Some(want) if want == got => {}
+                Some(_) if bless_all => {
+                    golden.insert(key.clone(), got);
+                    blessed.push(key);
+                }
+                Some(want) => {
+                    failures.push(format!("  {key}: {}", first_diff(&want, &got)));
+                }
+                None => {
+                    golden.insert(key.clone(), got);
+                    blessed.push(key);
+                }
+            }
+        }
+    }
+
+    if !blessed.is_empty() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+        std::fs::write(&path, save(&golden)).expect("write golden snapshots");
+        eprintln!(
+            "golden: blessed {} new snapshot(s) into {} — commit the file:\n  {}",
+            blessed.len(),
+            path.display(),
+            blessed.join("\n  ")
+        );
+    }
+    assert!(
+        failures.is_empty(),
+        "golden stat vectors drifted (re-bless intentional changes with \
+         TRIMMA_BLESS=1):\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn golden_roundtrip_format() {
+    let mut m = BTreeMap::new();
+    m.insert("trimma-c/adv_drift".to_string(), "a=1;b=2".to_string());
+    m.insert("ideal/adv_set_thrash".to_string(), "a=0".to_string());
+    assert_eq!(load(&save(&m)), m);
+    assert_eq!(load("{}"), BTreeMap::new());
+    assert_eq!(load(""), BTreeMap::new());
+}

@@ -6,7 +6,10 @@
 //! zipf rank differs in the last ULP between libm and XLA — we allow a
 //! small mismatch rate and require the mismatches to be rank-adjacent.
 //!
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Requires `make artifacts` (skips with a message otherwise) and the
+//! `pjrt` cargo feature (the offline build image lacks the XLA crates, so
+//! this whole test compiles away without it).
+#![cfg(feature = "pjrt")]
 
 use trimma::runtime::{artifacts_dir, Runtime, STEPS};
 use trimma::workloads::pjrt::PjrtWorkload;

@@ -1,0 +1,244 @@
+//! The differential remap oracle under fire: every adversarial scenario
+//! runs green on every design point with `cfg.hybrid.verify` enabled, and
+//! the oracle demonstrably *fires* when fed a controller that commits the
+//! canonical remap sin (writing a forward mapping without its inverse —
+//! exactly the mutation class a bad refactor of `hybrid/remap.rs` would
+//! introduce).
+
+mod common;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use trimma::config::presets::DesignPoint;
+use trimma::hybrid::Controller;
+use trimma::metadata::SetLayout;
+use trimma::sim::Simulation;
+use trimma::stats::Stats;
+use trimma::types::{AccessKind, Cycle};
+use trimma::verify::CheckedController;
+use trimma::workloads::{self, adversarial::ADVERSARIAL};
+
+/// The six evaluated design points (plus the Ideal oracle, which must also
+/// stay self-consistent under verification).
+const DESIGNS: &[DesignPoint] = &[
+    DesignPoint::AlloyCache,
+    DesignPoint::LohHill,
+    DesignPoint::TrimmaCache,
+    DesignPoint::MemPod,
+    DesignPoint::TrimmaFlat,
+    DesignPoint::LinearCache,
+    DesignPoint::Ideal,
+];
+
+#[test]
+fn adversarial_scenarios_green_under_oracle_all_design_points() {
+    for dp in DESIGNS {
+        for sc in ADVERSARIAL {
+            let mut cfg = common::tiny(*dp);
+            cfg.hybrid.verify = true;
+            cfg.workload.accesses_per_core = 1200;
+            cfg.workload.warmup_per_core = 400;
+            let stats = common::run(*dp, &cfg, sc);
+            assert!(
+                stats.mem_accesses > 0,
+                "{dp:?}/{sc}: scenario must reach the memory controller"
+            );
+        }
+    }
+}
+
+#[test]
+fn suite_workloads_green_under_oracle() {
+    // A cross-section of the calibrated suite also passes verification on
+    // the two Trimma design points (streaming, pointer-chase, key-value).
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        for wl in ["519.lbm_r", "505.mcf_r", "ycsb_a"] {
+            let mut cfg = common::tiny(dp);
+            cfg.hybrid.verify = true;
+            cfg.workload.accesses_per_core = 1200;
+            cfg.workload.warmup_per_core = 400;
+            let stats = common::run(dp, &cfg, wl);
+            assert!(stats.mem_accesses > 0, "{dp:?}/{wl}");
+        }
+    }
+}
+
+#[test]
+fn oracle_stats_match_unverified_run() {
+    // The wrapper must be observation-only: enabling verification changes
+    // no stat anywhere, for any scenario.
+    for sc in ADVERSARIAL {
+        let dp = DesignPoint::TrimmaCache;
+        let plain = common::run(dp, &common::tiny(dp), sc);
+        let mut vcfg = common::tiny(dp);
+        vcfg.hybrid.verify = true;
+        let checked = common::run(dp, &vcfg, sc);
+        assert_eq!(
+            plain.canonical(),
+            checked.canonical(),
+            "{sc}: verification must not perturb the simulation"
+        );
+    }
+}
+
+// ---------------- the oracle must actually fire ----------------
+
+/// A deliberately broken controller: on a slow-tier miss it installs the
+/// forward remap entry but "forgets" the inverse entry — the seeded
+/// mutation of the acceptance criteria (skipping the inverse-entry write
+/// on a swap/fill in `hybrid/remap.rs`).
+struct ForgottenInverse {
+    layout: SetLayout,
+    map: std::collections::HashMap<(u32, u64), u64>,
+    next_slot: u64,
+    stats: Stats,
+}
+
+impl ForgottenInverse {
+    fn new(layout: SetLayout) -> Self {
+        ForgottenInverse {
+            layout,
+            map: std::collections::HashMap::new(),
+            next_slot: 0,
+            stats: Stats::default(),
+        }
+    }
+
+    fn lookup(&self, set: u32, idx: u64) -> u64 {
+        *self.map.get(&(set, idx)).unwrap_or(&idx)
+    }
+}
+
+impl Controller for ForgottenInverse {
+    fn access(&mut self, set: u32, idx: u64, _line: u32, kind: AccessKind, _now: Cycle) -> Cycle {
+        self.stats.mem_accesses += 1;
+        match kind {
+            AccessKind::Read => self.stats.mem_reads += 1,
+            AccessKind::Write => self.stats.mem_writes += 1,
+        }
+        let device = self.lookup(set, idx);
+        let lat = if self.layout.is_fast_idx(device) {
+            self.stats.fast_served += 1;
+            self.stats.fast_data_cycles += 50;
+            50
+        } else {
+            self.stats.slow_served += 1;
+            self.stats.slow_data_cycles += 200;
+            // Demand "fill": forward entry only. A correct controller would
+            // also write the inverse entry for the claimed slot.
+            let slot = self.next_slot % self.layout.fast_per_set;
+            self.next_slot += 1;
+            self.map.insert((set, idx), slot);
+            200
+        };
+        lat
+    }
+
+    fn finalize(&mut self) {}
+
+    fn reset_stats(&mut self) {
+        self.stats = Stats::default();
+    }
+
+    fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    fn layout(&self) -> &SetLayout {
+        &self.layout
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        Some(self.lookup(set, idx))
+    }
+}
+
+#[test]
+fn oracle_kills_missing_inverse_entry() {
+    let cfg = {
+        let mut c = common::tiny(DesignPoint::TrimmaCache);
+        c.hybrid.verify = true;
+        c
+    };
+    let layout = SetLayout::for_config(&cfg.hybrid, false);
+    let broken: Box<dyn Controller> = Box::new(ForgottenInverse::new(layout));
+    let mut checked = CheckedController::new(broken, &cfg);
+    let slow_idx = layout.fast_per_set + 7;
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        // Miss installs the one-sided mapping; the post-access involution
+        // check must already reject it.
+        checked.access(0, slow_idx, 0, AccessKind::Read, 0);
+        // Belt and braces: a second access trips the pre-access check too.
+        checked.access(0, slow_idx, 0, AccessKind::Read, 1000);
+    }));
+    assert!(
+        result.is_err(),
+        "the oracle must reject a forward mapping without its inverse"
+    );
+}
+
+#[test]
+fn oracle_kills_wrong_tier_serve() {
+    /// Serves from the fast tier while the translation says slow.
+    struct WrongTier {
+        layout: SetLayout,
+        stats: Stats,
+    }
+    impl Controller for WrongTier {
+        fn access(
+            &mut self,
+            _set: u32,
+            _idx: u64,
+            _line: u32,
+            kind: AccessKind,
+            _now: Cycle,
+        ) -> Cycle {
+            self.stats.mem_accesses += 1;
+            match kind {
+                AccessKind::Read => self.stats.mem_reads += 1,
+                AccessKind::Write => self.stats.mem_writes += 1,
+            }
+            self.stats.fast_served += 1; // translation says slow: lie
+            self.stats.fast_data_cycles += 50;
+            50
+        }
+        fn finalize(&mut self) {}
+        fn reset_stats(&mut self) {
+            self.stats = Stats::default();
+        }
+        fn stats(&self) -> &Stats {
+            &self.stats
+        }
+        fn layout(&self) -> &SetLayout {
+            &self.layout
+        }
+        fn debug_translate(&self, _set: u32, idx: u64) -> Option<u64> {
+            Some(idx) // identity: a slow idx stays slow
+        }
+    }
+
+    let cfg = {
+        let mut c = common::tiny(DesignPoint::TrimmaCache);
+        c.hybrid.verify = true;
+        c
+    };
+    let layout = SetLayout::for_config(&cfg.hybrid, false);
+    let mut checked =
+        CheckedController::new(Box::new(WrongTier { layout, stats: Stats::default() }), &cfg);
+    let slow_idx = layout.fast_per_set + 3;
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        checked.access(0, slow_idx, 0, AccessKind::Read, 0);
+    }));
+    assert!(result.is_err(), "fast-serving a slow-mapped block must be rejected");
+}
+
+#[test]
+fn oracle_end_to_end_through_simulation() {
+    // Full stack: Simulation -> build_controller -> CheckedController.
+    let mut cfg = common::tiny(DesignPoint::TrimmaFlat);
+    cfg.hybrid.verify = true;
+    let wl = workloads::by_name("adv_migration_storm", &cfg).unwrap();
+    let rep = Simulation::new(&cfg, wl).run();
+    assert!(rep.stats.mem_accesses > 0);
+    assert!(rep.stats.fills > 0, "the storm must trigger migrations");
+}
