@@ -6,7 +6,7 @@ use trimma::bench_util::Bench;
 use trimma::coordinator::figures;
 
 fn main() {
-    let b = Bench::new("fig7_overall");
+    let mut b = Bench::new("fig7_overall");
     for fig in "fig7a".split('+') {
         let (tables, dt) = b.once(fig, || figures::run_figure(fig, 0.05, 0).expect("known figure"));
         println!("  ({} rows in {:.1}s)", tables.iter().map(|t| t.rows.len()).sum::<usize>(), dt);

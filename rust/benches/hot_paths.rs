@@ -1,110 +1,15 @@
 //! Micro-benchmarks of the simulator's hot paths — the targets of the
-//! performance pass (EXPERIMENTS.md §Perf). Run via `cargo bench`.
+//! performance pass (EXPERIMENTS.md §Perf). Run via `cargo bench`; the
+//! same suite backs `trimma bench [--quick] --json`, which additionally
+//! emits the schema-versioned JSON report the CI perf gate consumes.
 
 use trimma::bench_util::Bench;
-use trimma::cachesim::Hierarchy;
-use trimma::config::presets::{self, DesignPoint};
-use trimma::hybrid::{build_controller, Controller};
-use trimma::mem::MemDevice;
-use trimma::metadata::irc::Irc;
-use trimma::metadata::irt::IrtTable;
-use trimma::metadata::remap_cache::RemapCache;
-use trimma::metadata::SetLayout;
-use trimma::sim::Simulation;
-use trimma::types::{AccessKind, Rng64};
-use trimma::workloads::synth::TraceGen;
-use trimma::workloads::{by_name, suite};
+use trimma::coordinator::bench::{run_hot_paths, run_sim_sweep};
+use trimma::coordinator::geomean;
 
 fn main() {
-    let b = Bench::new("hot_paths");
-
-    // ---- metadata structures ----
-    let layout = SetLayout::new(4, 16 << 20, 512 << 20, 256, 33000);
-    let mut irt = IrtTable::new(&layout, 2);
-    let mut ev = Vec::new();
-    let k = layout.indices_per_set();
-    let mut rng = Rng64::new(7);
-    for _ in 0..10_000 {
-        irt.set_mapping(0, rng.next_below(k), rng.next_below(k), &mut ev);
-        ev.clear();
-    }
-    let mut i = 0u64;
-    b.iter("irt_lookup", || {
-        i = (i + 9973) % k;
-        irt.lookup(0, i)
-    });
-    b.iter("irt_update_cycle", || {
-        i = (i + 9973) % k;
-        irt.set_mapping(0, i, (i + 5) % k, &mut ev);
-        irt.clear_mapping(0, i, &mut ev);
-        ev.clear();
-    });
-
-    let mut rc = RemapCache::new(2048, 8);
-    for j in 0..16384u64 {
-        rc.insert(j, j as u32);
-    }
-    b.iter("remap_cache_probe", || {
-        i = i.wrapping_add(977);
-        rc.probe(i % 40000)
-    });
-
-    let mut irc = Irc::new(2048, 6, 256, 16, 32);
-    for j in 0..8192u64 {
-        irc.fill_nonid(j * 3, j as u32);
-        irc.fill_id_vector(j, 0xAAAA_5555);
-    }
-    b.iter("irc_probe", || {
-        i = i.wrapping_add(977);
-        irc.probe(i % 300_000)
-    });
-
-    // ---- devices / caches ----
-    let mut dev = MemDevice::new(presets::hbm3());
-    let mut t = 0u64;
-    b.iter("dram_access", || {
-        i = i.wrapping_add(0x40_0001);
-        t += 30;
-        dev.access(i % (16 << 20), 64, AccessKind::Read, t)
-    });
-
-    let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
-    let mut h = Hierarchy::new(16, &cfg.l1d, &cfg.l2, &cfg.llc);
-    b.iter("cache_hierarchy_access", || {
-        i = i.wrapping_add(4093 * 64);
-        h.access((i % 16) as usize, i % (256 << 20), AccessKind::Read)
-    });
-
-    // ---- trace generation ----
-    let gen = TraceGen::new(suite::profile("gap_pr").unwrap(), 512 << 20, 16);
-    let mut step = 0u32;
-    b.iter("trace_gen_access", || {
-        step = step.wrapping_add(1);
-        gen.gen(3, step)
-    });
-
-    // ---- full controller access ----
-    let mut ctrl = build_controller(&cfg, false);
-    let f = ctrl.layout().fast_per_set;
-    let span = ctrl.layout().slow_per_set;
-    let mut now = 0u64;
-    b.iter("trimma_controller_access", || {
-        i = i.wrapping_add(104729);
-        now += 40;
-        ctrl.access((i % 16) as u32, f + i % span, 0, AccessKind::Read, now)
-    });
-
-    // ---- end-to-end simulation throughput ----
-    let mut cfg2 = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
-    cfg2.workload.accesses_per_core = 40_000;
-    cfg2.workload.warmup_per_core = 5_000;
-    let wl = by_name("gap_pr", &cfg2).unwrap();
-    let (rep, dt) = b.once("sim_gap_pr_40k_per_core", || {
-        Simulation::new(&cfg2, wl).run()
-    });
-    println!(
-        "  -> {:.2} M instrs/s, {:.2} M mem-steps/s",
-        rep.stats.instructions as f64 / 1e6 / dt,
-        (16.0 * 45_000.0) / 1e6 / dt
-    );
+    let mut b = Bench::new("hot_paths");
+    run_hot_paths(&mut b);
+    let tputs = run_sim_sweep(&mut b, false);
+    println!("  -> geomean {:.2} M mem-steps/s over the sim sweep", geomean(&tputs));
 }

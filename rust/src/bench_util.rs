@@ -1,58 +1,544 @@
-//! Minimal benchmark harness (criterion is unavailable in this offline
-//! environment). `cargo bench` targets use [`Bench`] to get
-//! warmup + repeated timed iterations and criterion-style output:
+//! Benchmark harness (criterion is unavailable in this offline
+//! environment). `cargo bench` targets and the `trimma bench` subcommand
+//! use [`Bench`] to get warmup + two-pass calibration + repeated timed
+//! iterations, criterion-style stdout output, **and** a machine-readable
+//! result stream: every `iter`/`once` call appends a [`Record`]
+//! `{label, ns_per_iter, reps, throughput}`, and [`BenchReport`]
+//! serializes the whole run as schema-versioned JSON (hand-rolled,
+//! dependency-free — see EXPERIMENTS.md §Perf for the schema and the CI
+//! regression gates built on it).
 //!
 //! ```text
-//! irt_lookup_hit          ... 12.3 ns/iter (4096 iters x 64 reps)
+//! irt_lookup_hit          ... 12.3 ns/iter (4096 reps)
 //! ```
 
 use std::time::Instant;
 
-/// One benchmark group; prints results to stdout.
+/// Version of the JSON report schema emitted by [`BenchReport::to_json`].
+/// Bump on any breaking change to field names or semantics; the CI
+/// `bench-check` step rejects reports whose version it does not know.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub label: String,
+    /// Mean wall time per iteration, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Timed repetitions behind the mean (1 for `once` measurements).
+    pub reps: u64,
+    /// Caller-defined throughput (e.g. M mem-steps/s for simulation runs);
+    /// attached via [`Bench::attach_throughput`].
+    pub throughput: Option<f64>,
+}
+
+/// One benchmark group: prints results to stdout and records them.
 pub struct Bench {
     name: &'static str,
+    /// Measurement budget per `iter` label, nanoseconds (default 200 ms;
+    /// `--quick` runs shrink it).
+    target_ns: f64,
+    records: Vec<Record>,
 }
 
 impl Bench {
     pub fn new(name: &'static str) -> Self {
+        Self::with_target(name, 200e6)
+    }
+
+    /// A group with an explicit per-label measurement budget in
+    /// nanoseconds (smoke runs use ~50 ms to keep CI fast).
+    pub fn with_target(name: &'static str, target_ns: f64) -> Self {
         println!("== bench: {name} ==");
-        Bench { name }
+        Bench { name, target_ns, records: Vec::new() }
     }
 
     /// Time `f` (which should perform one logical iteration) and report
-    /// ns/iter. Runs a warmup, then enough reps to cover ~200 ms.
-    pub fn iter<R>(&self, label: &str, mut f: impl FnMut() -> R) -> f64 {
-        // Warmup + calibration.
+    /// ns/iter.
+    ///
+    /// Calibration is two-pass: the warmup loop polls the clock between
+    /// iterations to know when ~50 ms have passed, so its per-iteration
+    /// time includes `Instant::now()` overhead — enough to skew rep counts
+    /// badly for sub-10ns labels. The second pass re-runs the same
+    /// iteration count with no clock reads inside the loop and calibrates
+    /// on that clean timing.
+    pub fn iter<R>(&mut self, label: &str, mut f: impl FnMut() -> R) -> f64 {
+        // Pass 1: warmup; only sizes the calibration pass.
         let t0 = Instant::now();
-        let mut calib = 0u64;
+        let mut warm = 0u64;
         while t0.elapsed().as_millis() < 50 {
             std::hint::black_box(f());
-            calib += 1;
+            warm += 1;
         }
-        let per = t0.elapsed().as_nanos() as f64 / calib as f64;
-        let reps = ((200e6 / per.max(1.0)) as u64).clamp(3, 5_000_000);
-
+        // Pass 2: clean calibration (no clock reads inside the loop).
         let t1 = Instant::now();
+        for _ in 0..warm {
+            std::hint::black_box(f());
+        }
+        let per = t1.elapsed().as_nanos() as f64 / warm as f64;
+        let reps = ((self.target_ns / per.max(0.1)) as u64).clamp(3, 5_000_000);
+
+        let t2 = Instant::now();
         for _ in 0..reps {
             std::hint::black_box(f());
         }
-        let ns = t1.elapsed().as_nanos() as f64 / reps as f64;
+        let ns = t2.elapsed().as_nanos() as f64 / reps as f64;
         println!("{:<40} ... {:>12.1} ns/iter ({} reps)", label, ns, reps);
+        self.records.push(Record {
+            label: label.to_string(),
+            ns_per_iter: ns,
+            reps,
+            throughput: None,
+        });
         ns
     }
 
     /// Time one long-running operation (e.g., a whole simulation) once and
-    /// report seconds plus a caller-computed throughput metric.
-    pub fn once<R>(&self, label: &str, f: impl FnOnce() -> R) -> (R, f64) {
+    /// report seconds plus the elapsed time; attach a throughput metric
+    /// with [`Self::attach_throughput`].
+    pub fn once<R>(&mut self, label: &str, f: impl FnOnce() -> R) -> (R, f64) {
         let t0 = Instant::now();
         let r = f();
         let dt = t0.elapsed().as_secs_f64();
         println!("{:<40} ... {:>10.3} s", label, dt);
+        self.records.push(Record {
+            label: label.to_string(),
+            ns_per_iter: dt * 1e9,
+            reps: 1,
+            throughput: None,
+        });
         (r, dt)
+    }
+
+    /// Attach a caller-computed throughput (units/second) to the most
+    /// recent measurement.
+    pub fn attach_throughput(&mut self, units_per_sec: f64) {
+        if let Some(r) = self.records.last_mut() {
+            r.throughput = Some(units_per_sec);
+        }
+    }
+
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    pub fn into_records(self) -> Vec<Record> {
+        self.records
     }
 
     pub fn name(&self) -> &'static str {
         self.name
+    }
+}
+
+/// A complete, schema-versioned benchmark report — what `trimma bench
+/// --json` writes and the CI regression gate reads back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: u32,
+    /// Free-form run tag (e.g. "pr2", "ci").
+    pub tag: String,
+    /// True for `--quick` (smoke-scale) runs; quick and full reports are
+    /// never compared against each other by the CI gate.
+    pub quick: bool,
+    /// Geometric mean over the end-to-end simulation sweep's throughputs,
+    /// in M mem-steps/s — the headline number the perf gate tracks.
+    pub geomean_sim_msteps_per_s: f64,
+    pub records: Vec<Record>,
+}
+
+impl BenchReport {
+    /// Serialize as pretty-printed JSON (stable field order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.records.len() * 96);
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema_version\": {},\n", self.schema_version));
+        out.push_str(&format!("  \"tag\": \"{}\",\n", esc(&self.tag)));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str(&format!(
+            "  \"geomean_sim_msteps_per_s\": {},\n",
+            json_num(self.geomean_sim_msteps_per_s)
+        ));
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"ns_per_iter\": {}, \"reps\": {}, \"throughput\": {}}}",
+                esc(&r.label),
+                json_num(r.ns_per_iter),
+                r.reps,
+                match r.throughput {
+                    Some(t) => json_num(t),
+                    None => "null".to_string(),
+                }
+            ));
+            out.push_str(if i + 1 < self.records.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a report back from JSON (round-trip inverse of
+    /// [`Self::to_json`]; also accepts any field order / whitespace).
+    pub fn from_json(text: &str) -> Result<BenchReport, String> {
+        let v = Json::parse(text)?;
+        let top = v.as_obj("top-level")?;
+        let schema_version = get(top, "schema_version")?.as_f64("schema_version")? as u32;
+        let tag = get(top, "tag")?.as_str("tag")?.to_string();
+        let quick = get(top, "quick")?.as_bool("quick")?;
+        let geomean_sim_msteps_per_s =
+            get(top, "geomean_sim_msteps_per_s")?.as_f64("geomean_sim_msteps_per_s")?;
+        let mut records = Vec::new();
+        for (i, rv) in get(top, "records")?.as_arr("records")?.iter().enumerate() {
+            let ro = rv.as_obj(&format!("records[{i}]"))?;
+            let throughput = match get(ro, "throughput")? {
+                Json::Null => None,
+                other => Some(other.as_f64("throughput")?),
+            };
+            records.push(Record {
+                label: get(ro, "label")?.as_str("label")?.to_string(),
+                ns_per_iter: get(ro, "ns_per_iter")?.as_f64("ns_per_iter")?,
+                reps: get(ro, "reps")?.as_f64("reps")? as u64,
+                throughput,
+            });
+        }
+        Ok(BenchReport { schema_version, tag, quick, geomean_sim_msteps_per_s, records })
+    }
+
+    /// Schema validation (`trimma bench-check` / the CI smoke job): a
+    /// report that parses but carries nonsense must still be rejected.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.schema_version != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema_version {} (this build knows {SCHEMA_VERSION})",
+                self.schema_version
+            ));
+        }
+        if self.tag.is_empty() {
+            return Err("empty tag".into());
+        }
+        if !self.geomean_sim_msteps_per_s.is_finite() || self.geomean_sim_msteps_per_s < 0.0 {
+            return Err(format!(
+                "geomean_sim_msteps_per_s {} is not a finite non-negative number",
+                self.geomean_sim_msteps_per_s
+            ));
+        }
+        for r in &self.records {
+            if r.label.is_empty() {
+                return Err("record with empty label".into());
+            }
+            if !r.ns_per_iter.is_finite() || r.ns_per_iter < 0.0 {
+                return Err(format!("record '{}': bad ns_per_iter {}", r.label, r.ns_per_iter));
+            }
+            if r.reps == 0 {
+                return Err(format!("record '{}': zero reps", r.label));
+            }
+            if let Some(t) = r.throughput {
+                if !t.is_finite() || t <= 0.0 {
+                    return Err(format!("record '{}': bad throughput {t}", r.label));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Ratio `new / baseline` of geomean sim throughput. `None` when the two
+/// reports are not comparable: either side recorded no sim sweep (geomean
+/// 0 — e.g. the placeholder baseline committed before the first reference
+/// run), or the `quick` flags differ (quick and full sweeps run at
+/// different scales, so their per-step throughputs differ systematically).
+/// The CI gate skips the comparison in both cases instead of failing.
+pub fn throughput_ratio(baseline: &BenchReport, new: &BenchReport) -> Option<f64> {
+    if baseline.quick == new.quick
+        && baseline.geomean_sim_msteps_per_s > 0.0
+        && new.geomean_sim_msteps_per_s > 0.0
+    {
+        Some(new.geomean_sim_msteps_per_s / baseline.geomean_sim_msteps_per_s)
+    } else {
+        None
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number formatting: Rust's `{:?}` for floats is the shortest string
+/// that round-trips exactly, and is always valid JSON for finite values.
+fn json_num(v: f64) -> String {
+    debug_assert!(v.is_finite(), "non-finite value in bench report");
+    if v.is_finite() { format!("{v:?}") } else { "0.0".to_string() }
+}
+
+// ---------------- minimal JSON parser ----------------
+// Just enough JSON (objects, arrays, strings with standard escapes,
+// numbers, booleans, null) to read reports back. No external crates in
+// this offline build, so the parser lives here, next to its only schema.
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    fn as_obj(&self, what: &str) -> Result<&[(String, Json)], String> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            _ => Err(format!("{what}: expected object")),
+        }
+    }
+
+    fn as_arr(&self, what: &str) -> Result<&[Json], String> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => Err(format!("{what}: expected array")),
+        }
+    }
+
+    fn as_str(&self, what: &str) -> Result<&str, String> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(format!("{what}: expected string")),
+        }
+    }
+
+    fn as_f64(&self, what: &str) -> Result<f64, String> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => Err(format!("{what}: expected number")),
+        }
+    }
+
+    fn as_bool(&self, what: &str) -> Result<bool, String> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(format!("{what}: expected boolean")),
+        }
+    }
+}
+
+fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json, String> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field '{key}'"))
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            // `self.i` points at the 'u'. Non-BMP chars
+                            // (e.g. emoji) arrive as UTF-16 surrogate
+                            // pairs from standard serializers.
+                            let hi = self.hex4(self.i + 1)?;
+                            self.i += 5;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                if self.b.get(self.i) != Some(&b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err("unpaired high surrogate in \\u escape".into());
+                                }
+                                let lo = self.hex4(self.i + 2)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("unpaired high surrogate in \\u escape".into());
+                                }
+                                self.i += 6;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| "invalid \\u escape".to_string())?,
+                            );
+                            continue;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so byte
+                    // boundaries are valid).
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.b.len() && (self.b[self.i] & 0xC0) == 0x80 {
+                        self.i += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.b[start..self.i]).unwrap());
+                }
+            }
+        }
+    }
+
+    /// Four hex digits starting at byte `at` (for `\u` escapes).
+    fn hex4(&self, at: usize) -> Result<u32, String> {
+        if at + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        std::str::from_utf8(&self.b[at..at + 4])
+            .ok()
+            .and_then(|h| u32::from_str_radix(h, 16).ok())
+            .ok_or_else(|| "bad \\u escape".to_string())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .unwrap()
+            .parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number at byte {start}: {e}"))
     }
 }
 
@@ -61,17 +547,117 @@ mod tests {
     use super::*;
 
     #[test]
-    fn iter_reports_positive_ns() {
-        let b = Bench::new("self-test");
+    fn iter_reports_positive_ns_and_records() {
+        let mut b = Bench::with_target("self-test", 1e6);
         let ns = b.iter("noop-ish", || std::hint::black_box(1 + 1));
         assert!(ns > 0.0);
+        assert_eq!(b.records().len(), 1);
+        assert_eq!(b.records()[0].label, "noop-ish");
+        assert!(b.records()[0].reps >= 3);
+        assert!(b.records()[0].throughput.is_none());
     }
 
     #[test]
-    fn once_returns_value() {
-        let b = Bench::new("self-test");
+    fn once_returns_value_and_attaches_throughput() {
+        let mut b = Bench::new("self-test");
         let (v, dt) = b.once("compute", || 42);
         assert_eq!(v, 42);
         assert!(dt >= 0.0);
+        b.attach_throughput(123.5);
+        assert_eq!(b.records()[0].reps, 1);
+        assert_eq!(b.records()[0].throughput, Some(123.5));
+    }
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            tag: "unit \"quoted\"\\tag".to_string(),
+            quick: true,
+            geomean_sim_msteps_per_s: 3.25,
+            records: vec![
+                Record {
+                    label: "irt_lookup".into(),
+                    ns_per_iter: 12.25,
+                    reps: 4096,
+                    throughput: None,
+                },
+                Record {
+                    label: "sim/trimma-c/gap_pr".into(),
+                    ns_per_iter: 1.5e9,
+                    reps: 1,
+                    throughput: Some(4.75),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips_exactly() {
+        let r = sample_report();
+        let parsed = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+        parsed.validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(BenchReport::from_json("").is_err());
+        assert!(BenchReport::from_json("{").is_err());
+        assert!(BenchReport::from_json("{\"tag\": \"x\"}").is_err()); // missing fields
+        assert!(BenchReport::from_json("[1, 2]").is_err());
+        let trailing = sample_report().to_json() + "garbage";
+        assert!(BenchReport::from_json(&trailing).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_schema_and_value_errors() {
+        let mut r = sample_report();
+        r.schema_version += 1;
+        assert!(r.validate().is_err());
+
+        let mut r = sample_report();
+        r.records[0].reps = 0;
+        assert!(r.validate().is_err());
+
+        let mut r = sample_report();
+        r.records[1].throughput = Some(-1.0);
+        assert!(r.validate().is_err());
+
+        let mut r = sample_report();
+        r.geomean_sim_msteps_per_s = f64::NAN;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn throughput_ratio_skips_unrecorded_baseline() {
+        let mut base = sample_report();
+        let new = sample_report();
+        assert_eq!(throughput_ratio(&base, &new), Some(1.0));
+        base.geomean_sim_msteps_per_s = 0.0;
+        assert_eq!(throughput_ratio(&base, &new), None);
+    }
+
+    #[test]
+    fn throughput_ratio_refuses_quick_vs_full() {
+        // Quick and full sweeps run at different scales; comparing them
+        // would make the CI gate fire on scale, not on regressions.
+        let base = sample_report(); // quick: true
+        let mut new = sample_report();
+        new.quick = false;
+        assert_eq!(throughput_ratio(&base, &new), None);
+    }
+
+    #[test]
+    fn parser_handles_surrogate_pair_escapes() {
+        // Standard serializers escape non-BMP characters as UTF-16
+        // surrogate pairs; a spec-valid report must parse.
+        let mut r = sample_report();
+        r.tag = "😀-tagged".to_string();
+        let escaped = r.to_json().replace("😀", "\\ud83d\\ude00");
+        let parsed = BenchReport::from_json(&escaped).unwrap();
+        assert_eq!(parsed, r);
+        // Unpaired surrogates are malformed, not silently mangled.
+        assert!(BenchReport::from_json(&r.to_json().replace("😀", "\\ud83d")).is_err());
+        assert!(BenchReport::from_json(&r.to_json().replace("😀", "\\ude00")).is_err());
     }
 }

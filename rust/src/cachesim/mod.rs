@@ -121,8 +121,18 @@ impl Cache {
     }
 }
 
+/// Upper bound on dirty LLC evictions one access can surface: at most one
+/// per cache level crossed (L1 evict cascading to memory, L2 evict
+/// cascading to memory, LLC evict).
+pub const MAX_WRITEBACKS: usize = 3;
+
 /// What the hierarchy tells the memory system about one core access.
-#[derive(Debug, Clone, Default)]
+///
+/// Writebacks are stored inline (`[PhysAddr; MAX_WRITEBACKS]` + length)
+/// instead of a `Vec`: this struct is built once per simulated access, and
+/// the old heap-backed list was the last steady-state allocation on the
+/// simulation hot path.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct HierarchyResult {
     /// On-chip latency (cache lookups) in cycles.
     pub latency: Cycle,
@@ -130,8 +140,22 @@ pub struct HierarchyResult {
     pub llc_miss: bool,
     /// Level that served the access: 1, 2, 3, or 0 for memory.
     pub hit_level: u8,
+    wb: [PhysAddr; MAX_WRITEBACKS],
+    wb_len: u8,
+}
+
+impl HierarchyResult {
     /// Dirty LLC evictions that must be written to memory.
-    pub writebacks: Vec<PhysAddr>,
+    #[inline]
+    pub fn writebacks(&self) -> &[PhysAddr] {
+        &self.wb[..self.wb_len as usize]
+    }
+
+    #[inline]
+    fn push_writeback(&mut self, addr: PhysAddr) {
+        self.wb[self.wb_len as usize] = addr;
+        self.wb_len += 1;
+    }
 }
 
 /// Per-core L1D + L2 with a shared LLC.
@@ -165,7 +189,7 @@ impl Hierarchy {
         if let Some(wb) = e1.writeback {
             if let Some(wb2) = self.l2[core].writeback_insert(wb) {
                 if let Some(wb3) = self.llc.writeback_insert(wb2) {
-                    res.writebacks.push(wb3);
+                    res.push_writeback(wb3);
                 }
             }
         }
@@ -178,7 +202,7 @@ impl Hierarchy {
         let e2 = self.l2[core].access(addr, kind);
         if let Some(wb) = e2.writeback {
             if let Some(wb2) = self.llc.writeback_insert(wb) {
-                res.writebacks.push(wb2);
+                res.push_writeback(wb2);
             }
         }
         if e2.hit {
@@ -189,7 +213,7 @@ impl Hierarchy {
         res.latency += self.llc_lat;
         let e3 = self.llc.access(addr, kind);
         if let Some(wb) = e3.writeback {
-            res.writebacks.push(wb);
+            res.push_writeback(wb);
         }
         if e3.hit {
             res.hit_level = 3;
@@ -285,7 +309,7 @@ mod tests {
         let s = 128u64;
         let mut wbs = vec![];
         for i in 1..=6 {
-            wbs.extend(h.access(0, i * s, AccessKind::Read).writebacks);
+            wbs.extend(h.access(0, i * s, AccessKind::Read).writebacks().iter().copied());
         }
         assert!(wbs.contains(&0), "dirty line should eventually reach memory: {wbs:?}");
     }

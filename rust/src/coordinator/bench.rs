@@ -1,0 +1,200 @@
+//! The `trimma bench` suite: hot-path micro-benchmarks plus an end-to-end
+//! simulation sweep, shared between the `hot_paths` cargo-bench target and
+//! the `trimma bench [--quick] --json` CLI subcommand (EXPERIMENTS.md
+//! §Perf).
+//!
+//! The micro half times every structure on the per-access critical path
+//! (iRT lookup/update, remap-cache and iRC probes, DRAM timing, the CPU
+//! cache hierarchy, trace generation, and the full controller access —
+//! single and batched). The end-to-end half runs
+//! [`SIM_DESIGNS`] x [`SIM_WORKLOADS`] (three design points, three
+//! workloads including one adversarial scenario) and reports throughput in
+//! **M mem-steps/s** — simulated per-core memory steps (warmup included;
+//! they are simulated all the same) per wall-clock second. The geometric
+//! mean over the sweep is the headline number CI's soft perf gate tracks
+//! against `BENCH_baseline.json`.
+
+use crate::bench_util::{Bench, BenchReport, SCHEMA_VERSION};
+use crate::cachesim::Hierarchy;
+use crate::config::presets::{self, DesignPoint};
+use crate::coordinator::geomean;
+use crate::hybrid::{build_controller, Access, Controller};
+use crate::mem::MemDevice;
+use crate::metadata::irc::Irc;
+use crate::metadata::irt::IrtTable;
+use crate::metadata::remap_cache::RemapCache;
+use crate::metadata::SetLayout;
+use crate::sim::Simulation;
+use crate::types::{AccessKind, Rng64};
+use crate::workloads::synth::TraceGen;
+use crate::workloads::{by_name, suite};
+
+/// Design points of the end-to-end sweep: both Trimma modes plus the
+/// linear-table baseline (the walk-heavy worst case).
+pub const SIM_DESIGNS: &[DesignPoint] =
+    &[DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache];
+
+/// Workloads of the end-to-end sweep: streaming-graph, key-value, and one
+/// adversarial scenario (set-conflict thrash — the eviction-heavy path).
+pub const SIM_WORKLOADS: &[&str] = &["gap_pr", "ycsb_a", "adv_set_thrash"];
+
+/// The hot-path micro suite. Every label lands in `b`'s record stream.
+pub fn run_hot_paths(b: &mut Bench) {
+    // ---- metadata structures ----
+    let layout = SetLayout::new(4, 16 << 20, 512 << 20, 256, 33000);
+    let mut irt = IrtTable::new(&layout, 2);
+    let mut ev = Vec::new();
+    let k = layout.indices_per_set();
+    let mut rng = Rng64::new(7);
+    for _ in 0..10_000 {
+        irt.set_mapping(0, rng.next_below(k), rng.next_below(k), &mut ev);
+        ev.clear();
+    }
+    let mut i = 0u64;
+    b.iter("irt_lookup", || {
+        i = (i + 9973) % k;
+        irt.lookup(0, i)
+    });
+    b.iter("irt_is_identity", || {
+        i = (i + 9973) % k;
+        irt.is_identity(0, i)
+    });
+    b.iter("irt_update_cycle", || {
+        i = (i + 9973) % k;
+        irt.set_mapping(0, i, (i + 5) % k, &mut ev);
+        irt.clear_mapping(0, i, &mut ev);
+        ev.clear();
+    });
+
+    let mut rc = RemapCache::new(2048, 8);
+    for j in 0..16384u64 {
+        rc.insert(j, j as u32);
+    }
+    b.iter("remap_cache_probe", || {
+        i = i.wrapping_add(977);
+        rc.probe(i % 40000)
+    });
+
+    let mut irc = Irc::new(2048, 6, 256, 16, 32);
+    for j in 0..8192u64 {
+        irc.fill_nonid(j * 3, j as u32);
+        irc.fill_id_vector(j, 0xAAAA_5555);
+    }
+    b.iter("irc_probe", || {
+        i = i.wrapping_add(977);
+        irc.probe(i % 300_000)
+    });
+
+    // ---- devices / caches ----
+    let mut dev = MemDevice::new(presets::hbm3());
+    let mut t = 0u64;
+    b.iter("dram_access", || {
+        i = i.wrapping_add(0x40_0001);
+        t += 30;
+        dev.access(i % (16 << 20), 64, AccessKind::Read, t)
+    });
+
+    let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+    let mut h = Hierarchy::new(16, &cfg.l1d, &cfg.l2, &cfg.llc);
+    b.iter("cache_hierarchy_access", || {
+        i = i.wrapping_add(4093 * 64);
+        h.access((i % 16) as usize, i % (256 << 20), AccessKind::Read)
+    });
+
+    // ---- trace generation ----
+    let gen = TraceGen::new(suite::profile("gap_pr").unwrap(), 512 << 20, 16);
+    let mut step = 0u32;
+    b.iter("trace_gen_access", || {
+        step = step.wrapping_add(1);
+        gen.gen(3, step)
+    });
+
+    // ---- full controller access: single and batched ----
+    let mut ctrl = build_controller(&cfg, false);
+    let f = ctrl.layout().fast_per_set;
+    let span = ctrl.layout().slow_per_set;
+    let mut now = 0u64;
+    b.iter("trimma_controller_access", || {
+        i = i.wrapping_add(104729);
+        now += 40;
+        ctrl.access((i % 16) as u32, f + i % span, 0, AccessKind::Read, now)
+    });
+    let mut batch = [Access::default(); 8];
+    b.iter("trimma_controller_access_block_x8", || {
+        for slot in batch.iter_mut() {
+            i = i.wrapping_add(104729);
+            now += 40;
+            *slot = Access {
+                set: (i % 16) as u32,
+                idx: f + i % span,
+                line: 0,
+                kind: AccessKind::Read,
+                now,
+            };
+        }
+        ctrl.access_block(&batch)
+    });
+}
+
+/// The end-to-end simulation sweep. Each run is recorded on `b` (label
+/// `sim/<design>/<workload>`) with its throughput attached; the returned
+/// vector holds the per-run throughputs in M mem-steps/s, sweep order.
+pub fn run_sim_sweep(b: &mut Bench, quick: bool) -> Vec<f64> {
+    let (accesses, warmup) = if quick { (8_000, 1_000) } else { (40_000, 5_000) };
+    let mut tputs = Vec::new();
+    for dp in SIM_DESIGNS {
+        for wl in SIM_WORKLOADS {
+            let mut cfg = presets::hbm3_ddr5(*dp);
+            cfg.workload.accesses_per_core = accesses;
+            cfg.workload.warmup_per_core = warmup;
+            let w = by_name(wl, &cfg).unwrap_or_else(|| panic!("unknown workload {wl}"));
+            let steps = cfg.workload.cores as f64 * (accesses + warmup) as f64;
+            let label = format!("sim/{}/{}", dp.label(), wl);
+            let (_rep, dt) = b.once(&label, || Simulation::new(&cfg, w).run());
+            let msteps_per_s = steps / 1e6 / dt.max(1e-9);
+            b.attach_throughput(msteps_per_s);
+            println!("  -> {msteps_per_s:.2} M mem-steps/s");
+            tputs.push(msteps_per_s);
+        }
+    }
+    tputs
+}
+
+/// Run the whole suite and package it as a schema-versioned report.
+pub fn full_report(tag: &str, quick: bool) -> BenchReport {
+    let mut b = if quick {
+        // Smoke scale: ~50 ms measurement budget per micro label.
+        Bench::with_target("trimma-bench", 50e6)
+    } else {
+        Bench::new("trimma-bench")
+    };
+    run_hot_paths(&mut b);
+    let tputs = run_sim_sweep(&mut b, quick);
+    BenchReport {
+        schema_version: SCHEMA_VERSION,
+        tag: tag.to_string(),
+        quick,
+        geomean_sim_msteps_per_s: geomean(&tputs),
+        records: b.into_records(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matrix_is_three_by_three_with_adversarial() {
+        assert_eq!(SIM_DESIGNS.len(), 3);
+        assert_eq!(SIM_WORKLOADS.len(), 3);
+        assert!(SIM_WORKLOADS.iter().any(|w| w.starts_with("adv_")));
+        // Every sweep cell must resolve to a real workload under every
+        // swept design point's preset.
+        for dp in SIM_DESIGNS {
+            let cfg = presets::hbm3_ddr5(*dp);
+            for wl in SIM_WORKLOADS {
+                assert!(by_name(wl, &cfg).is_some(), "{}/{wl}", dp.label());
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! are formatted into [`Table`]s (markdown to stdout, CSV under
 //! `results/`).
 
+pub mod bench;
 pub mod figures;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

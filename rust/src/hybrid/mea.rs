@@ -12,6 +12,9 @@
 #[derive(Debug, Clone)]
 pub struct MeaTracker {
     entries: Vec<(u64, u32)>, // (per-set phys idx, count)
+    /// Reusable sort buffer for epoch drains (keeps the per-epoch path
+    /// allocation-free; capacity is fixed at `counters`).
+    scratch: Vec<(u64, u32)>,
     accesses_this_epoch: u64,
     epoch_len: u64,
 }
@@ -22,6 +25,7 @@ impl MeaTracker {
     pub fn new(counters: usize, epoch_len: u64) -> Self {
         MeaTracker {
             entries: vec![(u64::MAX, 0); counters],
+            scratch: Vec::with_capacity(counters),
             accesses_this_epoch: 0,
             epoch_len,
         }
@@ -60,19 +64,36 @@ impl MeaTracker {
     }
 
     /// Candidates surviving the epoch with count >= `threshold`, hottest
-    /// first. Counters reset for the next epoch.
-    pub fn drain_hot(&mut self, threshold: u32) -> Vec<u64> {
-        let mut hot: Vec<(u64, u32)> = self
-            .entries
-            .iter()
-            .filter(|e| e.0 != u64::MAX && e.1 >= threshold)
-            .copied()
-            .collect();
-        hot.sort_by(|a, b| b.1.cmp(&a.1));
+    /// first, written into `out` (cleared first). Counters reset for the
+    /// next epoch. Allocation-free given `out` has capacity `counters`:
+    /// the sort is a stable insertion sort over at most `counters` pairs
+    /// in the reusable scratch buffer (`slice::sort_by` would allocate).
+    pub fn drain_hot_into(&mut self, threshold: u32, out: &mut Vec<u64>) {
+        self.scratch.clear();
+        self.scratch
+            .extend(self.entries.iter().filter(|e| e.0 != u64::MAX && e.1 >= threshold));
+        // Stable descending insertion sort: identical order to a stable
+        // `sort_by(|a, b| b.1.cmp(&a.1))`.
+        for i in 1..self.scratch.len() {
+            let mut j = i;
+            while j > 0 && self.scratch[j - 1].1 < self.scratch[j].1 {
+                self.scratch.swap(j - 1, j);
+                j -= 1;
+            }
+        }
         for e in self.entries.iter_mut() {
             *e = (u64::MAX, 0);
         }
-        hot.into_iter().map(|e| e.0).collect()
+        out.clear();
+        out.extend(self.scratch.iter().map(|e| e.0));
+    }
+
+    /// Convenience wrapper around [`Self::drain_hot_into`] (tests / cold
+    /// paths).
+    pub fn drain_hot(&mut self, threshold: u32) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.drain_hot_into(threshold, &mut out);
+        out
     }
 }
 

@@ -28,6 +28,19 @@ use crate::metadata::SetLayout;
 use crate::stats::Stats;
 use crate::types::{AccessKind, Cycle};
 
+/// One controller-bound demand access in `(set, per-set index)` physical
+/// form — the unit of the batched [`Controller::access_block`] entry point.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Access {
+    pub set: u32,
+    pub idx: u64,
+    /// 64 B line offset within the migration block.
+    pub line: u32,
+    pub kind: AccessKind,
+    /// Arrival cycle.
+    pub now: Cycle,
+}
+
 /// A hybrid-memory controller under test.
 pub trait Controller {
     /// One demand access (an LLC miss or LLC dirty writeback) to physical
@@ -35,6 +48,21 @@ pub trait Controller {
     /// `now`. Returns the demand latency in cycles (metadata lookup + data
     /// access; fills/migrations excluded).
     fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle;
+
+    /// Batched entry point: process `batch` in order, exactly as `N`
+    /// single [`Controller::access`] calls would (stat-for-stat — the
+    /// perf-harness tests lock this equivalence), returning the summed
+    /// demand latency. The simulation engine routes posted LLC writebacks
+    /// through this to amortize virtual dispatch; controllers with a
+    /// monomorphic inner loop (e.g. [`remap::RemapController`]) override
+    /// it so the per-access work is devirtualized.
+    fn access_block(&mut self, batch: &[Access]) -> Cycle {
+        let mut total = 0;
+        for a in batch {
+            total += self.access(a.set, a.idx, a.line, a.kind, a.now);
+        }
+        total
+    }
 
     /// Snapshot end-of-run gauges (metadata size, donated slots) into stats.
     fn finalize(&mut self);

@@ -32,7 +32,7 @@
 
 use crate::config::{Mode, RemapCacheKind, ReplacementPolicy, SystemConfig};
 use crate::hybrid::mea::MeaTracker;
-use crate::hybrid::Controller;
+use crate::hybrid::{Access, Controller};
 use crate::mem::MemDevice;
 use crate::metadata::irc::{Irc, IrcProbe};
 use crate::metadata::irt::IrtTable;
@@ -102,8 +102,17 @@ pub struct RemapController {
     mea: Vec<MeaTracker>,
     rng: Rng64,
     stats: Stats,
+    /// Reusable table-update event buffers. Two, because a table update
+    /// can nest exactly once: `table_set` -> `BlockAllocated` ->
+    /// `evict_slot` -> `table_clear` (whose own events are only
+    /// `BlockFreed`, which never evicts — so depth is bounded at 2 and the
+    /// whole update path stays allocation-free).
     ev_buf: Vec<MetaEvent>,
+    ev_buf2: Vec<MetaEvent>,
     walk_buf: Vec<u64>,
+    /// Reusable MEA epoch-drain buffer (flat mode): keeps migration rounds
+    /// off the allocator.
+    hot_buf: Vec<u64>,
     meta_write_cursor: u64,
     meta_wc_pending: u64,
     /// Sub-block presence bitmask per fast slot (allocated when the
@@ -153,7 +162,12 @@ impl RemapController {
         let f = layout.fast_per_set as usize;
         let n_sets = layout.num_sets as usize;
         let mut slots = vec![Slot::Empty; n_sets * f];
-        let mut free: Vec<Vec<u32>> = vec![Vec::new(); n_sets];
+        // Free stacks are pre-sized with headroom: pushes in steady state
+        // (evictions, metadata frees, the occasional stale duplicate left
+        // by a metadata reclaim) must never grow the allocation — the
+        // translate path is locked allocation-free by a counting-allocator
+        // test.
+        let mut free: Vec<Vec<u32>> = (0..n_sets).map(|_| Vec::with_capacity(2 * f)).collect();
         for set in 0..n_sets {
             for s in 0..layout.fast_per_set {
                 let state = if layout.is_meta_idx(s) {
@@ -218,7 +232,9 @@ impl RemapController {
             rng: Rng64::new(cfg.workload.seed ^ 0x5107),
             stats: Stats::default(),
             ev_buf: Vec::with_capacity(8),
+            ev_buf2: Vec::with_capacity(8),
             walk_buf: Vec::with_capacity(4),
+            hot_buf: Vec::with_capacity(MEA_COUNTERS),
             meta_write_cursor: 0,
             meta_wc_pending: 0,
             present,
@@ -402,26 +418,42 @@ impl RemapController {
 
     // ---------------- table updates ----------------
 
+    /// Borrow a pre-sized event buffer: the primary one, or — when this
+    /// update is nested inside another update's event handling and the
+    /// primary is already out — the secondary.
+    fn take_ev_buf(&mut self) -> Vec<MetaEvent> {
+        let ev = std::mem::take(&mut self.ev_buf);
+        if ev.capacity() > 0 { ev } else { std::mem::take(&mut self.ev_buf2) }
+    }
+
+    fn put_ev_buf(&mut self, ev: Vec<MetaEvent>) {
+        if self.ev_buf.capacity() == 0 {
+            self.ev_buf = ev;
+        } else {
+            self.ev_buf2 = ev;
+        }
+    }
+
     /// Apply a mapping update, then service metadata block alloc/free
     /// events (allocations evict any data in the claimed slot). Charges
     /// buffered metadata write-back traffic off the critical path.
     fn table_set(&mut self, set: u32, idx: u64, device: u64, t: Cycle) {
-        let mut ev = std::mem::take(&mut self.ev_buf);
+        let mut ev = self.take_ev_buf();
         ev.clear();
         self.table.set_mapping(set, idx, device, &mut ev);
         self.charge_meta_update(set, 1 + ev.len() as u64, t);
         self.handle_events(set, &ev, t);
-        self.ev_buf = ev;
+        self.put_ev_buf(ev);
         self.rc_update(set, idx);
     }
 
     fn table_clear(&mut self, set: u32, idx: u64, t: Cycle) {
-        let mut ev = std::mem::take(&mut self.ev_buf);
+        let mut ev = self.take_ev_buf();
         ev.clear();
         self.table.clear_mapping(set, idx, &mut ev);
         self.charge_meta_update(set, 1 + ev.len() as u64, t);
         self.handle_events(set, &ev, t);
-        self.ev_buf = ev;
+        self.put_ev_buf(ev);
         self.rc_update(set, idx);
     }
 
@@ -771,12 +803,14 @@ impl RemapController {
     /// blocks into the flat area, evicting previously migrated blocks
     /// round-robin (slow-swap: they return to their home locations).
     fn mea_epoch(&mut self, set: u32, t: Cycle) {
-        let hot = self.mea[set as usize].drain_hot(MEA_THRESHOLD);
+        let mut hot = std::mem::take(&mut self.hot_buf);
+        self.mea[set as usize].drain_hot_into(MEA_THRESHOLD, &mut hot);
         let dw = self.layout.data_ways;
         if dw == 0 {
+            self.hot_buf = hot;
             return;
         }
-        for p in hot {
+        for &p in &hot {
             // Skip if p has been cached/migrated meanwhile.
             if !self.table.is_identity(set, p) {
                 continue;
@@ -805,11 +839,15 @@ impl RemapController {
                 self.swap_in(set, p, s, t);
             }
         }
+        self.hot_buf = hot;
     }
-}
 
-impl Controller for RemapController {
-    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+    // ---------------- the demand access itself ----------------
+
+    /// One demand access — the monomorphic body behind both
+    /// [`Controller::access`] and [`Controller::access_block`], so batched
+    /// callers pay a single virtual dispatch for the whole batch.
+    fn do_access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
         self.stats.mem_accesses += 1;
         match kind {
             AccessKind::Read => self.stats.mem_reads += 1,
@@ -897,6 +935,24 @@ impl Controller for RemapController {
         }
 
         meta_lat + data_lat
+    }
+}
+
+impl Controller for RemapController {
+    #[inline]
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        self.do_access(set, idx, line, kind, now)
+    }
+
+    /// Batched entry point: one virtual dispatch, then a monomorphic loop
+    /// over [`Self::do_access`] — stat-for-stat identical to `N` single
+    /// `access` calls (locked by `rust/tests/perf_harness.rs`).
+    fn access_block(&mut self, batch: &[Access]) -> Cycle {
+        let mut total = 0;
+        for a in batch {
+            total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
+        }
+        total
     }
 
     fn finalize(&mut self) {

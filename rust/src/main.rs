@@ -6,6 +6,12 @@
 //!            [--accesses N] [--ideal] [--ratio R] [--block B]
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
+//! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
+//!                                           hot-path + sim-sweep perf
+//!                                           report (EXPERIMENTS.md §Perf)
+//! trimma bench-check --report bench.json    validate a report's schema
+//! trimma bench-compare --baseline B --new N [--warn-pct 10] [--fail-pct 30]
+//!                                           CI regression gate
 //! trimma analyze --workload gap_pr          hotness analysis via the AOT
 //!                                           artifact (PJRT; no python)
 //! trimma dump-config --design trimma-c [--mem hbm3+ddr5]
@@ -24,6 +30,9 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
+  trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
+  trimma bench-check --report bench.json
+  trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma analyze --workload gap_pr          AOT hotness artifact via PJRT
   trimma dump-config --design trimma-c [--mem hbm3+ddr5]";
 
@@ -42,6 +51,9 @@ fn main() {
         "run" => run(&get, &has),
         "compare" => compare(&get),
         "sweep" => sweep(&get, &has),
+        "bench" => bench(&get, &has),
+        "bench-check" => bench_check(&get),
+        "bench-compare" => bench_compare(&get),
         "analyze" => analyze(&get),
         "dump-config" => {
             let cfg = build_cfg(&get);
@@ -142,6 +154,111 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
         dt.as_secs_f64(),
         (s.instructions as f64 / 1e6) / dt.as_secs_f64().max(1e-9)
     );
+}
+
+/// `trimma bench`: run the hot-path + sim-sweep suite and (optionally)
+/// write the schema-versioned JSON report. See EXPERIMENTS.md §Perf.
+fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
+    let quick = has("--quick");
+    let tag = get("--tag").unwrap_or_else(|| if quick { "quick".into() } else { "full".into() });
+    let report = trimma::coordinator::bench::full_report(&tag, quick);
+    println!(
+        "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
+        report.geomean_sim_msteps_per_s,
+        report.records.len(),
+        report.tag,
+        if quick { ", quick" } else { "" }
+    );
+    if let Some(path) = get("--json") {
+        report.validate().unwrap_or_else(|e| {
+            eprintln!("internal error: generated report fails its own schema: {e}");
+            std::process::exit(2);
+        });
+        std::fs::write(&path, report.to_json()).unwrap_or_else(|e| {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(2);
+        });
+        println!("wrote {path}");
+    }
+}
+
+fn load_report(path: &str) -> trimma::bench_util::BenchReport {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    trimma::bench_util::BenchReport::from_json(&text).unwrap_or_else(|e| {
+        eprintln!("{path}: malformed report: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// `trimma bench-check`: parse + schema-validate a report (CI smoke job).
+fn bench_check(get: &dyn Fn(&str) -> Option<String>) {
+    let path = get("--report").unwrap_or_else(|| {
+        eprintln!("need --report <bench.json>");
+        std::process::exit(2);
+    });
+    let report = load_report(&path);
+    report.validate().unwrap_or_else(|e| {
+        eprintln!("{path}: schema violation: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "{path}: ok (schema v{}, {} records, geomean {:.3} M mem-steps/s)",
+        report.schema_version,
+        report.records.len(),
+        report.geomean_sim_msteps_per_s
+    );
+}
+
+/// `trimma bench-compare`: the CI perf-regression gate. Compares geomean
+/// sim throughput of `--new` against `--baseline`; exits 0 on ok/warn
+/// (regression <= fail threshold), 3 on a hard regression. A baseline
+/// with no recorded sweep (the committed placeholder) skips the check.
+fn bench_compare(get: &dyn Fn(&str) -> Option<String>) {
+    let need = |flag: &str| {
+        get(flag).unwrap_or_else(|| {
+            eprintln!("need {flag} <report.json>");
+            std::process::exit(2);
+        })
+    };
+    let warn_pct: f64 = get("--warn-pct").map(|v| v.parse().expect("--warn-pct")).unwrap_or(10.0);
+    let fail_pct: f64 = get("--fail-pct").map(|v| v.parse().expect("--fail-pct")).unwrap_or(30.0);
+    let baseline = load_report(&need("--baseline"));
+    let new = load_report(&need("--new"));
+    match trimma::bench_util::throughput_ratio(&baseline, &new) {
+        None if baseline.quick != new.quick => {
+            println!(
+                "baseline is a {} report but the new report is {}; skipping the \
+                 comparison — refresh the baseline at matching scale \
+                 (EXPERIMENTS.md §Perf)",
+                if baseline.quick { "--quick" } else { "full-scale" },
+                if new.quick { "--quick" } else { "full-scale" }
+            );
+        }
+        None => {
+            println!(
+                "no recorded baseline geomean to compare against; skipping \
+                 (refresh it per EXPERIMENTS.md §Perf)"
+            );
+        }
+        Some(ratio) => {
+            let delta_pct = (ratio - 1.0) * 100.0;
+            println!(
+                "geomean sim throughput: baseline {:.3} -> new {:.3} M mem-steps/s ({:+.1}%)",
+                baseline.geomean_sim_msteps_per_s, new.geomean_sim_msteps_per_s, delta_pct
+            );
+            if delta_pct < -fail_pct {
+                eprintln!("FAIL: regression exceeds {fail_pct}%");
+                std::process::exit(3);
+            } else if delta_pct < -warn_pct {
+                println!("WARN: regression exceeds {warn_pct}% (soft gate; not failing)");
+            } else {
+                println!("ok");
+            }
+        }
+    }
 }
 
 fn sweep(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {

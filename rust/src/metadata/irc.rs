@@ -67,7 +67,10 @@ impl Irc {
         (key / self.superblock_blocks, (key % self.superblock_blocks) as u32)
     }
 
-    /// Probe both components in parallel (single SRAM latency).
+    /// Probe both components in parallel (single SRAM latency). Runs once
+    /// per LLC miss on Trimma design points; both component probes are
+    /// allocation-free scans over the SoA lanes of [`RemapCache`].
+    #[inline]
     pub fn probe(&mut self, key: BlockId) -> IrcProbe {
         if let Some(v) = self.nonid.probe(key) {
             return IrcProbe::HitNonId(v);
@@ -81,6 +84,7 @@ impl Irc {
     }
 
     /// Fill after an off-chip walk that found a non-identity entry.
+    #[inline]
     pub fn fill_nonid(&mut self, key: BlockId, device: u32) {
         self.nonid.insert(key, device);
         // Keep any IdCache bit for this block consistent (must be 0).

@@ -17,34 +17,24 @@
 //! * Unallocated *reserved* blocks (leaf or intermediate, never the root
 //!   level) are donated to the set as extra cache slots (§3.3); allocation
 //!   takes them back with priority, evicting any data cached there.
+//!
+//! ## Storage
+//!
+//! All per-set state lives in flat, stride-indexed arrays shared across
+//! sets (entry `set * k + idx`, block `set * total_blocks + level_offset[l]
+//! + b`), with the per-block "allocated?" flags packed into a u64 bitset.
+//! The hot `lookup`/`is_identity` paths are a single indexed load (plus one
+//! bit test), with no nested-`Vec` pointer chasing and no per-access
+//! allocation — this sits on the critical path of every simulated LLC miss.
 
 use super::layout::{irt_level_blocks, SetLayout};
 use super::{MetaEvent, IDENTITY};
-
-#[derive(Debug, Clone)]
-struct SetTree {
-    /// Dense entry array over the per-set index space; `IDENTITY` = absent.
-    entries: Vec<u32>,
-    /// Per level (0 = leaf), per block: is the block allocated?
-    /// The root level is implicitly always allocated and has no vector here.
-    alloc: Vec<Vec<bool>>,
-    /// Per level, per block: live-children count. Level 0 counts
-    /// non-identity entries in the leaf; level `l` counts allocated blocks
-    /// of level `l-1`. Maintained for the root level too (no dealloc there,
-    /// but useful for invariants).
-    counts: Vec<Vec<u32>>,
-    /// Allocated non-root blocks (drives metadata size accounting).
-    allocated_nonroot: u64,
-    /// Reserved blocks currently donatable (unallocated, with a real slot).
-    donated: u64,
-}
 
 /// The indirection-based remap table.
 #[derive(Debug, Clone)]
 pub struct IrtTable {
     levels: u32,
-    /// Index-space size (kept for debugging/assertions).
-    #[allow(dead_code)]
+    /// Index-space size per set (entry-array stride).
     k: u64,
     leaf_fanout: u64,
     index_fanout: u64,
@@ -53,10 +43,28 @@ pub struct IrtTable {
     /// Offset of each level's first block within the metadata region
     /// (leaves first, then each index level, root last).
     level_offset: Vec<u64>,
+    /// Sum of `level_blocks` (block-array stride per set).
+    total_blocks: u64,
     data_ways: u64,
     fast_per_set: u64,
     block_bytes: u32,
-    sets: Vec<SetTree>,
+    num_sets: u32,
+    /// Dense entry array over all sets, `set * k + idx`; `IDENTITY` = absent.
+    entries: Vec<u32>,
+    /// Packed per-block allocation bits, bit `set * total_blocks +
+    /// level_offset[l] + b`. Root-level bits are never set (the root is
+    /// implicitly always allocated).
+    alloc: Vec<u64>,
+    /// Live-children count per block, same indexing as `alloc`. Level 0
+    /// counts non-identity entries in the leaf; level `l` counts allocated
+    /// blocks of level `l-1`. Maintained for the root level too (no dealloc
+    /// there, but useful for invariants).
+    counts: Vec<u32>,
+    /// Per set: allocated non-root blocks (drives metadata size accounting).
+    allocated_nonroot: Vec<u64>,
+    /// Per set: reserved blocks currently donatable (unallocated, with a
+    /// real slot).
+    donated: Vec<u64>,
 }
 
 impl IrtTable {
@@ -73,33 +81,26 @@ impl IrtTable {
             level_offset.push(off);
             off += n;
         }
+        let total_blocks: u64 = off;
 
+        // Initial per-set donation: unallocated non-root blocks whose slot
+        // actually exists in the (possibly capped) reserved region.
         let root = levels as usize - 1;
-        let mk_set = || {
-            let mut alloc = Vec::new();
-            let mut counts = Vec::new();
-            let mut donated = 0;
-            for (l, &n) in level_blocks.iter().enumerate() {
-                counts.push(vec![0u32; n as usize]);
-                if l != root {
-                    alloc.push(vec![false; n as usize]);
-                    // Donatable = unallocated blocks whose slot actually
-                    // exists in the (possibly capped) reserved region.
-                    let first_slot = layout.data_ways + level_offset[l];
-                    let fit = if first_slot >= layout.fast_per_set {
-                        0
-                    } else {
-                        (layout.fast_per_set - first_slot).min(n)
-                    };
-                    donated += fit;
+        let mut donated_per_set = 0u64;
+        for (l, &n) in level_blocks.iter().enumerate() {
+            if l != root {
+                let first_slot = layout.data_ways + level_offset[l];
+                donated_per_set += if first_slot >= layout.fast_per_set {
+                    0
                 } else {
-                    alloc.push(Vec::new()); // root: implicitly allocated
-                }
+                    (layout.fast_per_set - first_slot).min(n)
+                };
             }
-            SetTree { entries: vec![IDENTITY; k as usize], alloc, counts, allocated_nonroot: 0, donated }
-        };
+        }
 
-        let sets = (0..layout.num_sets).map(|_| mk_set()).collect();
+        let num_sets = layout.num_sets;
+        let n_entries = (num_sets as u64 * k) as usize;
+        let n_blocks = (num_sets as u64 * total_blocks) as usize;
         IrtTable {
             levels,
             k,
@@ -107,10 +108,16 @@ impl IrtTable {
             index_fanout,
             level_blocks,
             level_offset,
+            total_blocks,
             data_ways: layout.data_ways,
             fast_per_set: layout.fast_per_set,
             block_bytes: layout.block_bytes,
-            sets,
+            num_sets,
+            entries: vec![IDENTITY; n_entries],
+            alloc: vec![0u64; n_blocks.div_ceil(64)],
+            counts: vec![0u32; n_blocks],
+            allocated_nonroot: vec![0; num_sets as usize],
+            donated: vec![donated_per_set; num_sets as usize],
         }
     }
 
@@ -118,26 +125,55 @@ impl IrtTable {
         self.levels
     }
 
+    #[inline]
+    fn entry_index(&self, set: u32, idx: u64) -> usize {
+        (set as u64 * self.k + idx) as usize
+    }
+
+    /// Flat index of block `b` of `level` in `set` (for `counts` and the
+    /// `alloc` bit position).
+    #[inline]
+    fn block_index(&self, set: u32, level: usize, block: u64) -> u64 {
+        set as u64 * self.total_blocks + self.level_offset[level] + block
+    }
+
+    #[inline]
+    fn alloc_bit(&self, set: u32, level: usize, block: u64) -> bool {
+        let p = self.block_index(set, level, block);
+        (self.alloc[(p >> 6) as usize] >> (p & 63)) & 1 != 0
+    }
+
+    #[inline]
+    fn set_alloc_bit(&mut self, set: u32, level: usize, block: u64, on: bool) {
+        let p = self.block_index(set, level, block);
+        let w = &mut self.alloc[(p >> 6) as usize];
+        if on {
+            *w |= 1u64 << (p & 63);
+        } else {
+            *w &= !(1u64 << (p & 63));
+        }
+    }
+
     /// Resolve `idx`: absent entry (or unallocated leaf) means identity.
     #[inline]
     pub fn lookup(&self, set: u32, idx: u64) -> u64 {
-        let e = self.sets[set as usize].entries[idx as usize];
+        let e = self.entries[self.entry_index(set, idx)];
         if e == IDENTITY { idx } else { e as u64 }
     }
 
     /// Identity check with the leaf-allocation shortcut: an unallocated
     /// leaf implies identity for all 64 entries it covers, without touching
-    /// the (large) entry array — the alloc bitmaps are tiny and stay in
+    /// the (large) entry array — the alloc bitset is tiny and stays in
     /// cache, which makes the iRC super-block fill cheap.
     #[inline]
     pub fn is_identity(&self, set: u32, idx: u64) -> bool {
         if self.levels > 1 {
-            let lb = (idx / self.leaf_fanout) as usize;
-            if !self.sets[set as usize].alloc[0][lb] {
+            let lb = idx / self.leaf_fanout;
+            if !self.alloc_bit(set, 0, lb) {
                 return true;
             }
         }
-        self.sets[set as usize].entries[idx as usize] == IDENTITY
+        self.entries[self.entry_index(set, idx)] == IDENTITY
     }
 
     /// True if the leaf block covering `idx` is currently allocated.
@@ -146,8 +182,7 @@ impl IrtTable {
         if self.levels == 1 {
             return true;
         }
-        let lb = (idx / self.leaf_fanout) as usize;
-        self.sets[set as usize].alloc[0][lb]
+        self.alloc_bit(set, 0, idx / self.leaf_fanout)
     }
 
     /// Per-set fast slot of a reserved block `(level, block)`, if it exists
@@ -170,63 +205,57 @@ impl IrtTable {
             self.clear_mapping(set, idx, out);
             return;
         }
-        let (data_ways, fast_per_set) = (self.data_ways, self.fast_per_set);
-        let (leaf_fanout, index_fanout) = (self.leaf_fanout, self.index_fanout);
-        let levels = self.levels as usize;
-        let mut offsets = [0u64; 4];
-        offsets[..levels].copy_from_slice(&self.level_offset);
-        let t = &mut self.sets[set as usize];
-        let prev = t.entries[idx as usize];
-        t.entries[idx as usize] = device as u32;
+        let ei = self.entry_index(set, idx);
+        let prev = self.entries[ei];
+        self.entries[ei] = device as u32;
         if prev != IDENTITY {
             return; // overwrite: counts unchanged
         }
         // identity -> non-identity: bump the leaf count and cascade allocs.
-        let mut b = idx / leaf_fanout;
+        let levels = self.levels as usize;
+        let mut b = idx / self.leaf_fanout;
         for l in 0..levels {
-            t.counts[l][b as usize] += 1;
-            if t.counts[l][b as usize] > 1 || l == levels - 1 {
+            let ci = self.block_index(set, l, b) as usize;
+            self.counts[ci] += 1;
+            if self.counts[ci] > 1 || l == levels - 1 {
                 break; // block already live, or root (always live)
             }
-            t.alloc[l][b as usize] = true;
-            t.allocated_nonroot += 1;
-            let slot = data_ways + offsets[l] + b;
-            if slot < fast_per_set {
-                t.donated -= 1;
+            self.set_alloc_bit(set, l, b, true);
+            self.allocated_nonroot[set as usize] += 1;
+            let slot = self.data_ways + self.level_offset[l] + b;
+            if slot < self.fast_per_set {
+                self.donated[set as usize] -= 1;
                 out.push(MetaEvent::BlockAllocated { slot });
             }
-            b /= index_fanout;
+            b /= self.index_fanout;
         }
     }
 
     /// Restore `idx` to identity. Emits [`MetaEvent::BlockFreed`] for every
     /// reserved block that becomes empty.
     pub fn clear_mapping(&mut self, set: u32, idx: u64, out: &mut Vec<MetaEvent>) {
-        let (data_ways, fast_per_set) = (self.data_ways, self.fast_per_set);
-        let (leaf_fanout, index_fanout) = (self.leaf_fanout, self.index_fanout);
-        let levels = self.levels as usize;
-        let mut offsets = [0u64; 4];
-        offsets[..levels].copy_from_slice(&self.level_offset);
-        let t = &mut self.sets[set as usize];
-        let prev = t.entries[idx as usize];
+        let ei = self.entry_index(set, idx);
+        let prev = self.entries[ei];
         if prev == IDENTITY {
             return;
         }
-        t.entries[idx as usize] = IDENTITY;
-        let mut b = idx / leaf_fanout;
+        self.entries[ei] = IDENTITY;
+        let levels = self.levels as usize;
+        let mut b = idx / self.leaf_fanout;
         for l in 0..levels {
-            t.counts[l][b as usize] -= 1;
-            if t.counts[l][b as usize] > 0 || l == levels - 1 {
+            let ci = self.block_index(set, l, b) as usize;
+            self.counts[ci] -= 1;
+            if self.counts[ci] > 0 || l == levels - 1 {
                 break;
             }
-            t.alloc[l][b as usize] = false;
-            t.allocated_nonroot -= 1;
-            let slot = data_ways + offsets[l] + b;
-            if slot < fast_per_set {
-                t.donated += 1;
+            self.set_alloc_bit(set, l, b, false);
+            self.allocated_nonroot[set as usize] -= 1;
+            let slot = self.data_ways + self.level_offset[l] + b;
+            if slot < self.fast_per_set {
+                self.donated[set as usize] += 1;
                 out.push(MetaEvent::BlockFreed { slot });
             }
-            b /= index_fanout;
+            b /= self.index_fanout;
         }
     }
 
@@ -234,13 +263,13 @@ impl IrtTable {
     /// plus the always-resident root level (levels == 1: everything).
     pub fn metadata_bytes_used(&self) -> u64 {
         if self.levels == 1 {
-            return self.sets.len() as u64 * self.level_blocks[0] * self.block_bytes as u64;
+            return self.num_sets as u64 * self.level_blocks[0] * self.block_bytes as u64;
         }
         let root_blocks = *self.level_blocks.last().unwrap();
         let total: u64 = self
-            .sets
+            .allocated_nonroot
             .iter()
-            .map(|t| t.allocated_nonroot + root_blocks)
+            .map(|&a| a + root_blocks)
             .sum();
         total * self.block_bytes as u64
     }
@@ -258,7 +287,7 @@ impl IrtTable {
                 if l == root {
                     return false;
                 }
-                return !self.sets[set as usize].alloc[l][(off - start) as usize];
+                return !self.alloc_bit(set, l, off - start);
             }
         }
         false
@@ -266,18 +295,20 @@ impl IrtTable {
 
     /// Total donatable blocks across sets (Trimma's extra cache capacity).
     pub fn donated_blocks(&self) -> u64 {
-        self.sets.iter().map(|t| t.donated).sum()
+        self.donated.iter().sum()
     }
 
     /// Donatable (reserved, unallocated, slot-backed) blocks in one set —
     /// the verify oracle checks this against the controller's slot states.
     pub fn donated_blocks_in_set(&self, set: u32) -> u64 {
-        self.sets[set as usize].donated
+        self.donated[set as usize]
     }
 
     /// Live non-identity entries in one set (sum of leaf-level counts).
     pub fn nonidentity_entries(&self, set: u32) -> u64 {
-        self.sets[set as usize].counts[0].iter().map(|&c| c as u64).sum()
+        let base = self.block_index(set, 0, 0) as usize;
+        let n = self.level_blocks[0] as usize;
+        self.counts[base..base + n].iter().map(|&c| c as u64).sum()
     }
 
     /// Allocated leaf blocks in one set (test/stat helper).
@@ -285,7 +316,7 @@ impl IrtTable {
         if self.levels == 1 {
             return self.level_blocks[0];
         }
-        self.sets[set as usize].alloc[0].iter().filter(|&&a| a).count() as u64
+        (0..self.level_blocks[0]).filter(|&b| self.alloc_bit(set, 0, b)).count() as u64
     }
 
     /// Offsets (within the reserved region) of the blocks a walk for `idx`
@@ -302,7 +333,7 @@ impl IrtTable {
 
     /// Reserved blocks per set (worst case, uncapped).
     pub fn reserved_blocks_per_set(&self) -> u64 {
-        self.level_blocks.iter().sum()
+        self.total_blocks
     }
 }
 
@@ -559,5 +590,25 @@ mod tests {
         assert!(t.is_identity(0, 100));
         assert!(!t.leaf_allocated(0, 100));
         assert_eq!(t.nonidentity_entries(0), 0);
+    }
+
+    #[test]
+    fn alloc_bitset_isolates_adjacent_sets_and_levels() {
+        // The packed bitset shares words across sets/levels when block
+        // counts are not multiples of 64: flipping one bit must never leak
+        // into a neighbouring set's or level's view.
+        let mut t = irt(2);
+        let mut ev = Vec::new();
+        let last_leaf = (t.level_blocks[0] - 1) * 64; // final leaf of set 0
+        t.set_mapping(0, last_leaf, 1, &mut ev);
+        assert!(t.leaf_allocated(0, last_leaf));
+        // Set 1's first leaf (adjacent bit range) must be untouched.
+        assert!(!t.leaf_allocated(1, 0));
+        assert_eq!(t.nonidentity_entries(1), 0);
+        // Root level of set 0 reports non-donatable regardless.
+        ev.clear();
+        t.clear_mapping(0, last_leaf, &mut ev);
+        assert_eq!(ev.len(), 1);
+        assert!(!t.leaf_allocated(0, last_leaf));
     }
 }

@@ -3,6 +3,10 @@
 //! a single fast-memory access; the cost is the storage — at a 32:1
 //! slow-to-fast ratio the table consumes ~52% of the fast tier, and it
 //! grows linearly with the slow capacity.
+//!
+//! Entries live in one flat array indexed `set * k + idx` (no per-set
+//! `Vec` indirection): like the iRT, the lookup is a single indexed load
+//! on the simulator's critical path.
 
 use super::layout::{linear_reserved_blocks, SetLayout};
 use super::IDENTITY;
@@ -10,12 +14,13 @@ use super::IDENTITY;
 /// Linear remap table over the unified per-set index space.
 #[derive(Debug, Clone)]
 pub struct LinearTable {
-    /// Index-space size (kept for debugging/assertions).
-    #[allow(dead_code)]
+    /// Index-space size per set (entry-array stride).
     k: u64,
-    /// Dense per-set entry arrays. `IDENTITY` encodes `device == phys`
-    /// internally, but unlike iRT, *storage is charged for every entry*.
-    sets: Vec<Vec<u32>>,
+    num_sets: u32,
+    /// Dense entry array over all sets, `set * k + idx`. `IDENTITY` encodes
+    /// `device == phys` internally, but unlike iRT, *storage is charged for
+    /// every entry*.
+    entries: Vec<u32>,
     reserved_blocks_per_set: u64,
     block_bytes: u32,
 }
@@ -26,33 +31,40 @@ impl LinearTable {
         assert!(k < IDENTITY as u64, "index space exceeds 4 B entry range");
         LinearTable {
             k,
-            sets: vec![vec![IDENTITY; k as usize]; layout.num_sets as usize],
+            num_sets: layout.num_sets,
+            entries: vec![IDENTITY; (layout.num_sets as u64 * k) as usize],
             reserved_blocks_per_set: linear_reserved_blocks(k, layout.block_bytes),
             block_bytes: layout.block_bytes,
         }
     }
 
     #[inline]
+    fn at(&self, set: u32, idx: u64) -> usize {
+        (set as u64 * self.k + idx) as usize
+    }
+
+    #[inline]
     pub fn lookup(&self, set: u32, idx: u64) -> u64 {
-        let e = self.sets[set as usize][idx as usize];
+        let e = self.entries[self.at(set, idx)];
         if e == IDENTITY { idx } else { e as u64 }
     }
 
     #[inline]
     pub fn set_mapping(&mut self, set: u32, idx: u64, device: u64) {
-        self.sets[set as usize][idx as usize] =
-            if device == idx { IDENTITY } else { device as u32 };
+        let i = self.at(set, idx);
+        self.entries[i] = if device == idx { IDENTITY } else { device as u32 };
     }
 
     #[inline]
     pub fn clear_mapping(&mut self, set: u32, idx: u64) {
-        self.sets[set as usize][idx as usize] = IDENTITY;
+        let i = self.at(set, idx);
+        self.entries[i] = IDENTITY;
     }
 
     /// The full table is always resident: `K * 4` bytes per set (rounded to
     /// blocks), regardless of how many mappings are identity.
     pub fn metadata_bytes_used(&self) -> u64 {
-        self.sets.len() as u64 * self.reserved_blocks_per_set * self.block_bytes as u64
+        self.num_sets as u64 * self.reserved_blocks_per_set * self.block_bytes as u64
     }
 
     pub fn reserved_blocks_per_set(&self) -> u64 {
@@ -62,7 +74,11 @@ impl LinearTable {
     /// Live non-identity entries in one set (occupancy introspection for
     /// the verify oracle; storage is charged in full regardless).
     pub fn nonidentity_entries(&self, set: u32) -> u64 {
-        self.sets[set as usize].iter().filter(|&&e| e != IDENTITY).count() as u64
+        let base = self.at(set, 0);
+        self.entries[base..base + self.k as usize]
+            .iter()
+            .filter(|&&e| e != IDENTITY)
+            .count() as u64
     }
 }
 
@@ -96,6 +112,17 @@ mod tests {
         let mut t = LinearTable::new(&layout());
         t.set_mapping(0, 5, 5);
         assert_eq!(t.lookup(0, 5), 5);
+    }
+
+    #[test]
+    fn nonidentity_count_is_per_set() {
+        let mut t = LinearTable::new(&layout());
+        t.set_mapping(2, 10, 20);
+        t.set_mapping(2, 11, 21);
+        t.set_mapping(3, 10, 20);
+        assert_eq!(t.nonidentity_entries(2), 2);
+        assert_eq!(t.nonidentity_entries(3), 1);
+        assert_eq!(t.nonidentity_entries(0), 0);
     }
 
     #[test]

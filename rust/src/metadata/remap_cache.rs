@@ -3,23 +3,28 @@
 //! block id. It stores *every* kind of entry — identity mappings occupy a
 //! full entry (tag + 4 B pointer) just like non-identity ones, which is
 //! exactly the inefficiency iRC attacks.
+//!
+//! Storage is structure-of-arrays: one flat tag array, one value array,
+//! one LRU-timestamp array, all indexed by `set * ways + way`. A probe
+//! touches only the (dense) tag lane plus one timestamp write, instead of
+//! striding over padded per-entry structs — this is the simulator's single
+//! hottest loop, run once per LLC miss. Validity is encoded as
+//! `last_use != 0`: the tick counter starts at 1, so every live entry has
+//! a non-zero timestamp and no separate valid bit is needed.
 
 use crate::types::BlockId;
-
-#[derive(Debug, Clone, Copy, Default)]
-struct Entry {
-    tag: u64,
-    value: u32,
-    valid: bool,
-    last_use: u64,
-}
 
 /// Set-associative LRU cache from physical block id to a 4 B device index.
 #[derive(Debug, Clone)]
 pub struct RemapCache {
     sets: u64,
     ways: u32,
-    lines: Vec<Entry>,
+    /// Tag lane, `set * ways + way`.
+    tags: Vec<u64>,
+    /// Value lane (the 4 B device pointer).
+    vals: Vec<u32>,
+    /// LRU timestamp lane; 0 = invalid entry.
+    last: Vec<u64>,
     tick: u64,
     hash_index: bool,
 }
@@ -34,10 +39,13 @@ impl RemapCache {
     /// al.'s prime-based indexing).
     pub fn with_index(sets: u32, ways: u32, hash_index: bool) -> Self {
         assert!(sets.is_power_of_two());
+        let n = (sets * ways) as usize;
         RemapCache {
             sets: sets as u64,
             ways,
-            lines: vec![Entry::default(); (sets * ways) as usize],
+            tags: vec![0; n],
+            vals: vec![0; n],
+            last: vec![0; n],
             tick: 0,
             hash_index,
         }
@@ -54,14 +62,14 @@ impl RemapCache {
     }
 
     /// Look up `key`; LRU-refreshes on hit.
+    #[inline]
     pub fn probe(&mut self, key: BlockId) -> Option<u32> {
         self.tick += 1;
         let base = (self.set_of(key) * self.ways as u64) as usize;
         for i in base..base + self.ways as usize {
-            let e = &mut self.lines[i];
-            if e.valid && e.tag == key {
-                e.last_use = self.tick;
-                return Some(e.value);
+            if self.last[i] != 0 && self.tags[i] == key {
+                self.last[i] = self.tick;
+                return Some(self.vals[i]);
             }
         }
         None
@@ -74,18 +82,19 @@ impl RemapCache {
         let mut victim = base;
         let mut victim_use = u64::MAX;
         for i in base..base + self.ways as usize {
-            let e = &self.lines[i];
-            if e.valid && e.tag == key {
+            if self.last[i] != 0 && self.tags[i] == key {
                 victim = i;
                 break;
             }
-            let use_key = if e.valid { e.last_use } else { 0 };
-            if use_key < victim_use {
-                victim_use = use_key;
+            // Invalid entries carry timestamp 0 and are claimed first.
+            if self.last[i] < victim_use {
+                victim_use = self.last[i];
                 victim = i;
             }
         }
-        self.lines[victim] = Entry { tag: key, value, valid: true, last_use: self.tick };
+        self.tags[victim] = key;
+        self.vals[victim] = value;
+        self.last[victim] = self.tick;
     }
 
     /// Read-modify-write the value for `key` if present, without LRU
@@ -93,10 +102,9 @@ impl RemapCache {
     pub fn modify(&mut self, key: BlockId, f: impl FnOnce(u32) -> u32) -> Option<u32> {
         let base = (self.set_of(key) * self.ways as u64) as usize;
         for i in base..base + self.ways as usize {
-            let e = &mut self.lines[i];
-            if e.valid && e.tag == key {
-                let prev = e.value;
-                e.value = f(prev);
+            if self.last[i] != 0 && self.tags[i] == key {
+                let prev = self.vals[i];
+                self.vals[i] = f(prev);
                 return Some(prev);
             }
         }
@@ -107,9 +115,8 @@ impl RemapCache {
     pub fn invalidate(&mut self, key: BlockId) -> bool {
         let base = (self.set_of(key) * self.ways as u64) as usize;
         for i in base..base + self.ways as usize {
-            let e = &mut self.lines[i];
-            if e.valid && e.tag == key {
-                e.valid = false;
+            if self.last[i] != 0 && self.tags[i] == key {
+                self.last[i] = 0;
                 return true;
             }
         }
@@ -123,7 +130,7 @@ impl RemapCache {
 
     /// Currently valid entries (occupancy introspection).
     pub fn live_entries(&self) -> u64 {
-        self.lines.iter().filter(|e| e.valid).count() as u64
+        self.last.iter().filter(|&&t| t != 0).count() as u64
     }
 }
 
@@ -171,6 +178,18 @@ mod tests {
         assert!(c.invalidate(10));
         assert!(!c.invalidate(10));
         assert_eq!(c.probe(10), None);
+    }
+
+    #[test]
+    fn invalidated_way_is_reused_first() {
+        let mut c = RemapCache::new(4, 2);
+        c.insert(0, 1);
+        c.insert(4, 2);
+        c.invalidate(0);
+        c.insert(8, 3); // must claim the invalidated way, not evict 4
+        assert_eq!(c.probe(4), Some(2));
+        assert_eq!(c.probe(8), Some(3));
+        assert_eq!(c.live_entries(), 2);
     }
 
     #[test]

@@ -15,9 +15,9 @@
 
 pub mod mapper;
 
-use crate::cachesim::Hierarchy;
+use crate::cachesim::{Hierarchy, MAX_WRITEBACKS};
 use crate::config::SystemConfig;
-use crate::hybrid::{build_controller, Controller};
+use crate::hybrid::{build_controller, Access, Controller};
 use crate::stats::Stats;
 use crate::types::{AccessKind, Cycle};
 use crate::workloads::Workload;
@@ -104,10 +104,22 @@ impl Simulation {
             lat += self.ctrl.access(set, idx, line, acc.kind, now + hr.latency);
         }
         // Posted writebacks: charge banks/stats, do not stall the core.
-        for wb in &hr.writebacks {
-            let (set, idx) = self.mapper.translate(*wb);
-            let line = self.line_of(*wb);
-            self.ctrl.access(set, idx, line, AccessKind::Write, now + lat);
+        // Batched through the block entry point — one virtual dispatch for
+        // the whole (inline, at most MAX_WRITEBACKS-long) list.
+        let wbs = hr.writebacks();
+        if !wbs.is_empty() {
+            let mut batch = [Access::default(); MAX_WRITEBACKS];
+            for (i, wb) in wbs.iter().enumerate() {
+                let (set, idx) = self.mapper.translate(*wb);
+                batch[i] = Access {
+                    set,
+                    idx,
+                    line: self.line_of(*wb),
+                    kind: AccessKind::Write,
+                    now: now + lat,
+                };
+            }
+            self.ctrl.access_block(&batch[..wbs.len()]);
         }
         self.clocks[core] += lat;
         let retired = acc.gap_instrs as u64 + 1;

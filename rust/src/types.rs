@@ -36,8 +36,9 @@ pub enum Tier {
 }
 
 /// Read or write.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub enum AccessKind {
+    #[default]
     Read,
     Write,
 }

@@ -1,0 +1,146 @@
+//! Coverage for the PR-2 perf work: the bench report schema, the batched
+//! `access_block` entry point, and the packed (flat-array / bitset)
+//! iRT/iRC lookups against the `ReferenceRemap` oracle on every
+//! adversarial scenario.
+
+mod common;
+
+use trimma::bench_util::{BenchReport, Record, SCHEMA_VERSION};
+use trimma::config::presets::{self, DesignPoint};
+use trimma::hybrid::{build_controller, Access, Controller};
+use trimma::types::{AccessKind, Rng64};
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+// ---------------- JSON report schema ----------------
+
+#[test]
+fn bench_report_round_trips_through_schema() {
+    let report = BenchReport {
+        schema_version: SCHEMA_VERSION,
+        tag: "pr2".to_string(),
+        quick: false,
+        geomean_sim_msteps_per_s: 2.625,
+        records: vec![
+            Record { label: "irt_lookup".into(), ns_per_iter: 3.5, reps: 5_000_000, throughput: None },
+            Record {
+                label: "sim/trimma-c/adv_set_thrash".into(),
+                ns_per_iter: 2.25e9,
+                reps: 1,
+                throughput: Some(3.125),
+            },
+            Record { label: "dram_access".into(), ns_per_iter: 21.0, reps: 952_380, throughput: None },
+        ],
+    };
+    report.validate().expect("schema-valid by construction");
+    let json = report.to_json();
+    let parsed = BenchReport::from_json(&json).expect("own output must parse");
+    assert_eq!(parsed, report, "round trip must be lossless");
+    parsed.validate().expect("round-tripped report stays valid");
+    // And a second generation is byte-stable (the CI artifact diff relies
+    // on deterministic serialization).
+    assert_eq!(parsed.to_json(), json);
+}
+
+#[test]
+fn bench_report_schema_rejects_drift() {
+    let mut report = BenchReport {
+        schema_version: SCHEMA_VERSION + 1,
+        tag: "future".to_string(),
+        quick: true,
+        geomean_sim_msteps_per_s: 1.0,
+        records: vec![],
+    };
+    assert!(report.validate().is_err(), "unknown schema version must be rejected");
+    report.schema_version = SCHEMA_VERSION;
+    report.validate().expect("placeholder-shaped report (no records) is valid");
+}
+
+// ---------------- access_block == N x access ----------------
+
+fn small_cfg(dp: DesignPoint) -> trimma::config::SystemConfig {
+    let mut cfg = presets::hbm3_ddr5(dp);
+    cfg.hybrid.fast_bytes = 1 << 20;
+    cfg.hybrid.slow_bytes = 32 << 20;
+    cfg.hybrid.num_sets = 4;
+    cfg
+}
+
+/// Deterministic mixed access stream over the slow tier of `cfg`.
+fn stream(cfg: &trimma::config::SystemConfig, n: usize) -> Vec<Access> {
+    let layout = trimma::metadata::SetLayout::for_config(&cfg.hybrid, false);
+    let span = layout.slow_per_set.min(5000);
+    let mut rng = Rng64::new(0xB10C_FEED);
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += 700;
+            Access {
+                set: rng.next_below(cfg.hybrid.num_sets as u64) as u32,
+                idx: layout.fast_per_set + rng.next_below(span),
+                line: 0,
+                kind: if rng.chance(0.3) { AccessKind::Write } else { AccessKind::Read },
+                now: t,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn access_block_matches_single_accesses_stat_for_stat() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+        let cfg = small_cfg(dp);
+        let accesses = stream(&cfg, 6000);
+
+        let mut single = build_controller(&cfg, false);
+        let mut single_lat = 0u64;
+        for a in &accesses {
+            single_lat += single.access(a.set, a.idx, a.line, a.kind, a.now);
+        }
+        single.finalize();
+
+        let mut batched = build_controller(&cfg, false);
+        let mut batched_lat = 0u64;
+        // Uneven chunk size on purpose: exercises partial batches.
+        for chunk in accesses.chunks(7) {
+            batched_lat += batched.access_block(chunk);
+        }
+        batched.finalize();
+
+        assert_eq!(single_lat, batched_lat, "{dp:?}: summed demand latency");
+        assert_eq!(
+            single.stats().canonical(),
+            batched.stats().canonical(),
+            "{dp:?}: access_block must be stat-for-stat identical to N access calls"
+        );
+    }
+}
+
+#[test]
+fn access_block_empty_batch_is_a_no_op() {
+    let cfg = small_cfg(DesignPoint::TrimmaCache);
+    let mut c = build_controller(&cfg, false);
+    assert_eq!(c.access_block(&[]), 0);
+    assert_eq!(c.stats().mem_accesses, 0);
+}
+
+// ---------------- packed lookups vs the oracle ----------------
+
+#[test]
+fn packed_irt_irc_agree_with_reference_oracle_on_all_adversarial_scenarios() {
+    // The flat-array iRT (entry strides + alloc bitset), flat linear
+    // table, and SoA remap caches all sit under these design points; the
+    // CheckedController panics on any translation, classification, or
+    // occupancy disagreement with the ReferenceRemap ground truth, and
+    // sweeps every set at finalize (bijectivity + donated-slot
+    // accounting).
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+        for sc in ADVERSARIAL {
+            let mut cfg = common::tiny(dp);
+            cfg.hybrid.verify = true;
+            cfg.workload.accesses_per_core = 1000;
+            cfg.workload.warmup_per_core = 300;
+            let stats = common::run(dp, &cfg, sc);
+            assert!(stats.mem_accesses > 0, "{dp:?}/{sc}: must reach the controller");
+        }
+    }
+}
