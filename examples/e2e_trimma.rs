@@ -16,7 +16,7 @@
 
 use trimma::config::presets::{self, DesignPoint};
 use trimma::config::SystemConfig;
-use trimma::hybrid::build_controller;
+use trimma::engine::AnyController;
 use trimma::sim::Simulation;
 use trimma::workloads::pjrt::PjrtWorkload;
 use trimma::workloads::suite;
@@ -41,8 +41,8 @@ fn run_one(dp: DesignPoint, workload: &str) -> trimma::sim::SimReport {
         cfg.workload.seed as u32,
     )
     .expect("artifacts missing? run `make artifacts`");
-    // Layer 3: the hybrid memory system under test.
-    let ctrl = build_controller(&cfg, false);
+    // Layer 3: the hybrid memory system under test, enum-dispatched.
+    let ctrl = AnyController::from_config(&cfg, false);
     let t0 = std::time::Instant::now();
     let rep = Simulation::with_controller(&cfg, Box::new(wl), ctrl).run();
     eprintln!(

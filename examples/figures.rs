@@ -14,14 +14,14 @@ fn main() {
     let scale: f64 = args.get(1).map(|s| s.parse().expect("scale")).unwrap_or(0.1);
     println!("regenerating {fig} at scale {scale} ...");
     match figures::run_figure(fig, scale, 0) {
-        Some(tables) => {
+        Ok(tables) => {
             for t in tables {
                 println!("{}", t.markdown());
             }
             println!("(CSV written under results/)");
         }
-        None => {
-            eprintln!("unknown figure '{fig}'. known: {:?}", figures::ALL_FIGURES);
+        Err(e) => {
+            eprintln!("{e}. known figures: {:?}", figures::ALL_FIGURES);
             std::process::exit(2);
         }
     }

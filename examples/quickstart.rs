@@ -1,25 +1,32 @@
-//! Quickstart: build a Trimma-C system on HBM3+DDR5, run PageRank, and
-//! print the headline metrics.
+//! Quickstart: build a Trimma-C system on HBM3+DDR5 through the engine
+//! builder, run PageRank, and print the headline metrics.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use trimma::config::presets::{self, DesignPoint};
-use trimma::sim::Simulation;
-use trimma::workloads;
+use trimma::config::presets::DesignPoint;
+use trimma::engine::{EngineBuilder, MemoryPreset};
 
 fn main() {
-    // A preset mirroring the paper's Table 1 (scaled capacities, 32:1).
-    let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
-    cfg.workload.accesses_per_core = 200_000;
-    cfg.workload.warmup_per_core = 50_000;
-
-    let wl = workloads::by_name("gap_pr", &cfg).expect("workload");
-    println!("running gap_pr on {} ...", cfg.name);
-    let report = Simulation::new(&cfg, wl).run();
+    // One typed path from design point + memory preset + workload to a
+    // running simulation (presets mirror the paper's Table 1, scaled
+    // capacities, 32:1 ratio). Raw config knobs go through `configure`.
+    let report = EngineBuilder::new(DesignPoint::TrimmaCache)
+        .memory(MemoryPreset::Hbm3Ddr5)
+        .workload("gap_pr")
+        .configure(|cfg| {
+            cfg.workload.accesses_per_core = 200_000;
+            cfg.workload.warmup_per_core = 50_000;
+        })
+        .run()
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
 
     let s = &report.stats;
+    println!("ran {} (enum-dispatched engine)", report.name);
     println!("performance (IPC proxy): {:.4}", report.performance());
     println!("fast-mem serve rate:     {:.1}%", s.fast_serve_rate() * 100.0);
     println!("remap-cache hit rate:    {:.1}%", s.rc_hit_rate() * 100.0);

@@ -18,7 +18,8 @@ use crate::bench_util::{Bench, BenchReport, SCHEMA_VERSION};
 use crate::cachesim::Hierarchy;
 use crate::config::presets::{self, DesignPoint};
 use crate::coordinator::geomean;
-use crate::hybrid::{build_controller, Access, Controller};
+use crate::engine::EngineBuilder;
+use crate::hybrid::{Access, Controller};
 use crate::mem::MemDevice;
 use crate::metadata::irc::Irc;
 use crate::metadata::irt::IrtTable;
@@ -109,18 +110,30 @@ pub fn run_hot_paths(b: &mut Bench) {
         gen.gen(3, step)
     });
 
-    // ---- full controller access: single and batched ----
-    let mut ctrl = build_controller(&cfg, false);
-    let f = ctrl.layout().fast_per_set;
-    let span = ctrl.layout().slow_per_set;
+    // ---- full controller access: single and batched, enum vs dyn ----
+    // The same Trimma-C controller driven two ways: through the
+    // enum-dispatched engine session (what the simulation loop
+    // monomorphizes over) and through a boxed `dyn Controller` (the
+    // pre-engine seed path). The paired `<base>/enum` + `<base>/dyn`
+    // labels feed [`dispatch_deltas`] and `trimma bench-dispatch`.
+    let builder = EngineBuilder::new(DesignPoint::TrimmaCache);
+    let mut session = builder.build_session().expect("trimma-c preset");
+    let f = session.layout().fast_per_set;
+    let span = session.layout().slow_per_set;
     let mut now = 0u64;
-    b.iter("trimma_controller_access", || {
+    b.iter("controller_access/enum", || {
         i = i.wrapping_add(104729);
         now += 40;
-        ctrl.access((i % 16) as u32, f + i % span, 0, AccessKind::Read, now)
+        session.push(Access {
+            set: (i % 16) as u32,
+            idx: f + i % span,
+            line: 0,
+            kind: AccessKind::Read,
+            now,
+        })
     });
     let mut batch = [Access::default(); 8];
-    b.iter("trimma_controller_access_block_x8", || {
+    b.iter("controller_access_block_x8/enum", || {
         for slot in batch.iter_mut() {
             i = i.wrapping_add(104729);
             now += 40;
@@ -132,22 +145,81 @@ pub fn run_hot_paths(b: &mut Bench) {
                 now,
             };
         }
-        ctrl.access_block(&batch)
+        session.push_batch(&batch).latency
     });
+
+    let mut dyn_ctrl: Box<dyn Controller> =
+        Box::new(builder.build_controller().expect("trimma-c preset"));
+    b.iter("controller_access/dyn", || {
+        i = i.wrapping_add(104729);
+        now += 40;
+        dyn_ctrl.access((i % 16) as u32, f + i % span, 0, AccessKind::Read, now)
+    });
+    b.iter("controller_access_block_x8/dyn", || {
+        for slot in batch.iter_mut() {
+            i = i.wrapping_add(104729);
+            now += 40;
+            *slot = Access {
+                set: (i % 16) as u32,
+                idx: f + i % span,
+                line: 0,
+                kind: AccessKind::Read,
+                now,
+            };
+        }
+        dyn_ctrl.access_block(&batch)
+    });
+}
+
+/// One `<base>/enum` vs `<base>/dyn` hot-path record pair, compared.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchDelta {
+    /// Base label (e.g. `controller_access`).
+    pub base: String,
+    /// ns/iter through the enum-dispatched engine session.
+    pub enum_ns: f64,
+    /// ns/iter through a boxed `dyn Controller` (the seed path).
+    pub dyn_ns: f64,
+    /// `(dyn / enum - 1) * 100`: positive = dynamic dispatch is slower.
+    pub delta_pct: f64,
+}
+
+/// Pair up the `<base>/enum` + `<base>/dyn` records of `report` (the
+/// dispatch-overhead comparison the CI bench-smoke job prints).
+pub fn dispatch_deltas(report: &BenchReport) -> Vec<DispatchDelta> {
+    let mut out = Vec::new();
+    for r in &report.records {
+        let Some(base) = r.label.strip_suffix("/enum") else { continue };
+        let dyn_label = format!("{base}/dyn");
+        if let Some(d) = report.records.iter().find(|r| r.label == dyn_label) {
+            out.push(DispatchDelta {
+                base: base.to_string(),
+                enum_ns: r.ns_per_iter,
+                dyn_ns: d.ns_per_iter,
+                delta_pct: (d.ns_per_iter / r.ns_per_iter.max(1e-9) - 1.0) * 100.0,
+            });
+        }
+    }
+    out
 }
 
 /// The end-to-end simulation sweep. Each run is recorded on `b` (label
 /// `sim/<design>/<workload>`) with its throughput attached; the returned
 /// vector holds the per-run throughputs in M mem-steps/s, sweep order.
 pub fn run_sim_sweep(b: &mut Bench, quick: bool) -> Vec<f64> {
-    let (accesses, warmup) = if quick { (8_000, 1_000) } else { (40_000, 5_000) };
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
     let mut tputs = Vec::new();
     for dp in SIM_DESIGNS {
         for wl in SIM_WORKLOADS {
-            let mut cfg = presets::hbm3_ddr5(*dp);
-            cfg.workload.accesses_per_core = accesses;
-            cfg.workload.warmup_per_core = warmup;
-            let w = by_name(wl, &cfg).unwrap_or_else(|| panic!("unknown workload {wl}"));
+            let builder = EngineBuilder::new(*dp).configure(move |cfg| {
+                cfg.workload.accesses_per_core = accesses;
+                cfg.workload.warmup_per_core = warmup;
+            });
+            let cfg = builder.build_config().expect("sweep preset");
+            // Workload generation stays outside the timed region (as it
+            // always has); controller + hierarchy construction and the
+            // run itself are what the throughput metric measures.
+            let w = by_name(wl, &cfg).unwrap_or_else(|e| panic!("{e}"));
             let steps = cfg.workload.cores as f64 * (accesses + warmup) as f64;
             let label = format!("sim/{}/{}", dp.label(), wl);
             let (_rep, dt) = b.once(&label, || Simulation::new(&cfg, w).run());
@@ -182,6 +254,8 @@ pub fn full_report(tag: &str, quick: bool) -> BenchReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench_util::Record;
+    use crate::workloads::by_name;
 
     #[test]
     fn sweep_matrix_is_three_by_three_with_adversarial() {
@@ -193,8 +267,35 @@ mod tests {
         for dp in SIM_DESIGNS {
             let cfg = presets::hbm3_ddr5(*dp);
             for wl in SIM_WORKLOADS {
-                assert!(by_name(wl, &cfg).is_some(), "{}/{wl}", dp.label());
+                assert!(by_name(wl, &cfg).is_ok(), "{}/{wl}", dp.label());
             }
         }
+    }
+
+    #[test]
+    fn dispatch_deltas_pairs_enum_and_dyn_records() {
+        let rec = |label: &str, ns: f64| Record {
+            label: label.to_string(),
+            ns_per_iter: ns,
+            reps: 100,
+            throughput: None,
+        };
+        let report = BenchReport {
+            schema_version: SCHEMA_VERSION,
+            tag: "t".into(),
+            quick: true,
+            geomean_sim_msteps_per_s: 0.0,
+            records: vec![
+                rec("irt_lookup", 3.0),
+                rec("controller_access/enum", 40.0),
+                rec("controller_access/dyn", 50.0),
+                rec("controller_access_block_x8/enum", 300.0),
+                // no matching /dyn for the block label: must be skipped
+            ],
+        };
+        let deltas = dispatch_deltas(&report);
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].base, "controller_access");
+        assert!((deltas[0].delta_pct - 25.0).abs() < 1e-9);
     }
 }

@@ -5,9 +5,10 @@
 //! `scale` multiplies the simulated access counts (1.0 = full runs,
 //! 0.1 = the CLI's `--quick`).
 
-use super::{fmt, geomean, pct, run_jobs, Job, JobKind, Table};
+use super::{fmt, geomean, pct, run_jobs, Job, Table};
 use crate::config::presets::{self, DesignPoint};
 use crate::config::{RemapCacheKind, SystemConfig};
+use crate::engine::EngineError;
 use crate::sim::SimReport;
 use crate::workloads::SUITE;
 
@@ -45,21 +46,22 @@ fn preset(tech: Tech, dp: DesignPoint) -> SystemConfig {
     }
 }
 
-/// Run one figure by id. Returns its tables (already saved as CSV).
-pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<Vec<Table>> {
+/// Run one figure by id. Returns its tables (already saved as CSV);
+/// unknown ids surface as [`EngineError::UnknownFigure`].
+pub fn run_figure(id: &str, scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let tables = match id {
-        "fig1" => fig1(scale, threads),
-        "fig7a" => fig7(Tech::Hbm3Ddr5, "fig7a", scale, threads),
-        "fig7b" => fig7(Tech::Ddr5Nvm, "fig7b", scale, threads),
-        "fig8" => fig8(scale, threads),
-        "fig9" => fig9(scale, threads),
-        "fig10" => fig10(scale, threads),
-        "fig11" => fig11(scale, threads),
-        "fig12a" => fig12a(scale, threads),
-        "fig12b" => fig12b(scale, threads),
-        "fig13a" => fig13a(scale, threads),
-        "fig13b" => fig13b(scale, threads),
-        _ => return None,
+        "fig1" => fig1(scale, threads)?,
+        "fig7a" => fig7(Tech::Hbm3Ddr5, "fig7a", scale, threads)?,
+        "fig7b" => fig7(Tech::Ddr5Nvm, "fig7b", scale, threads)?,
+        "fig8" => fig8(scale, threads)?,
+        "fig9" => fig9(scale, threads)?,
+        "fig10" => fig10(scale, threads)?,
+        "fig11" => fig11(scale, threads)?,
+        "fig12a" => fig12a(scale, threads)?,
+        "fig12b" => fig12b(scale, threads)?,
+        "fig13a" => fig13a(scale, threads)?,
+        "fig13b" => fig13b(scale, threads)?,
+        _ => return Err(EngineError::UnknownFigure(id.to_string())),
     };
     for t in &tables {
         let name = t
@@ -71,23 +73,23 @@ pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<Vec<Table>> {
             .to_lowercase();
         let _ = t.save_csv(&name);
     }
-    Some(tables)
+    Ok(tables)
 }
 
 // ---------------------------------------------------------------- fig 1
 
 /// Fig. 1: PageRank performance vs. associativity for Ideal, tag matching,
 /// linear table, and Trimma — normalized to Ideal at associativity 1.
-pub fn fig1(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig1(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let assocs = [1u64, 4, 16, 64, 256, 1024];
     let wl = "gap_pr";
     let mut jobs = Vec::new();
     for &a in &assocs {
-        for (series, dp, kind) in [
-            ("ideal", DesignPoint::Ideal, JobKind::Ideal),
-            ("tag", DesignPoint::AlloyCache, JobKind::TagMatch),
-            ("linear", DesignPoint::LinearCache, JobKind::Normal),
-            ("trimma", DesignPoint::TrimmaCache, JobKind::Normal),
+        for (series, dp, ideal, tag_match) in [
+            ("ideal", DesignPoint::Ideal, true, false),
+            ("tag", DesignPoint::AlloyCache, false, true),
+            ("linear", DesignPoint::LinearCache, false, false),
+            ("trimma", DesignPoint::TrimmaCache, false, false),
         ] {
             let mut cfg = scaled(preset(Tech::Hbm3Ddr5, dp), scale);
             let fast_blocks = cfg.hybrid.fast_blocks();
@@ -96,11 +98,12 @@ pub fn fig1(scale: f64, threads: usize) -> Vec<Table> {
                 label: format!("{series}@{a}"),
                 cfg,
                 workload: wl.into(),
-                kind,
+                ideal,
+                tag_match,
             });
         }
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let base = reps[0].performance(); // ideal @ assoc 1
     let mut t = Table::new(
         "fig1: PageRank speedup vs associativity (norm. ideal@1)",
@@ -116,7 +119,7 @@ pub fn fig1(scale: f64, threads: usize) -> Vec<Table> {
             fmt(r[3].performance() / base),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 // ---------------------------------------------------------------- fig 7
@@ -137,7 +140,7 @@ fn suite_jobs(tech: Tech, dps: &[DesignPoint], scale: f64) -> Vec<Job> {
 
 /// Fig. 7: overall performance, all workloads. Cache designs normalized to
 /// Alloy; flat designs normalized to MemPod.
-pub fn fig7(tech: Tech, name: &str, scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig7(tech: Tech, name: &str, scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let dps = [
         DesignPoint::AlloyCache,
         DesignPoint::LohHill,
@@ -146,7 +149,7 @@ pub fn fig7(tech: Tech, name: &str, scale: f64, threads: usize) -> Vec<Table> {
         DesignPoint::TrimmaFlat,
     ];
     let jobs = suite_jobs(tech, &dps, scale);
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let mut t = Table::new(
         format!("{name}: speedups ({})", match tech {
             Tech::Hbm3Ddr5 => "HBM3+DDR5",
@@ -181,14 +184,14 @@ pub fn fig7(tech: Tech, name: &str, scale: f64, threads: usize) -> Vec<Table> {
         "1.000".into(),
         fmt(geomean(&sf_t)),
     ]);
-    vec![t]
+    Ok(vec![t])
 }
 
 // ---------------------------------------------------------------- fig 8
 
 /// Fig. 8: memory access latency breakdown (metadata / fast / slow), per
 /// design, averaged over the suite, on HBM3+DDR5.
-pub fn fig8(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig8(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let dps = [
         DesignPoint::AlloyCache,
         DesignPoint::LohHill,
@@ -197,7 +200,7 @@ pub fn fig8(scale: f64, threads: usize) -> Vec<Table> {
         DesignPoint::TrimmaFlat,
     ];
     let jobs = suite_jobs(Tech::Hbm3Ddr5, &dps, scale);
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let mut t = Table::new(
         "fig8: AMAT breakdown, cycles/access (HBM3+DDR5)",
         &["workload", "design", "metadata", "fast_data", "slow_data"],
@@ -223,24 +226,24 @@ pub fn fig8(scale: f64, threads: usize) -> Vec<Table> {
             fmt(s / n),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 // ------------------------------------------------------------ figs 9/10
 
-fn flat_pair(scale: f64, threads: usize) -> (Vec<SimReport>, Vec<SimReport>) {
+fn flat_pair(scale: f64, threads: usize) -> Result<(Vec<SimReport>, Vec<SimReport>), EngineError> {
     let jobs_m = suite_jobs(Tech::Hbm3Ddr5, &[DesignPoint::MemPod], scale);
     let jobs_t = suite_jobs(Tech::Hbm3Ddr5, &[DesignPoint::TrimmaFlat], scale);
     let all: Vec<Job> = jobs_m.into_iter().chain(jobs_t).collect();
-    let mut reps = run_jobs(&all, threads);
+    let mut reps = run_jobs(&all, threads)?;
     let t = reps.split_off(SUITE.len());
-    (reps, t)
+    Ok((reps, t))
 }
 
 /// Fig. 9: metadata size at end of run — Trimma iRT vs MemPod linear table,
 /// as a fraction of the fast tier.
-pub fn fig9(scale: f64, threads: usize) -> Vec<Table> {
-    let (mempod, trimma) = flat_pair(scale, threads);
+pub fn fig9(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
+    let (mempod, trimma) = flat_pair(scale, threads)?;
     let mut t = Table::new(
         "fig9: metadata size (fraction of fast memory)",
         &["workload", "linear(mempod)", "irt(trimma)", "saving"],
@@ -260,12 +263,12 @@ pub fn fig9(scale: f64, threads: usize) -> Vec<Table> {
         "-".into(),
         pct(savings.iter().sum::<f64>() / savings.len() as f64),
     ]);
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 10: fast-memory serve rate (a) and bandwidth bloat factor (b).
-pub fn fig10(scale: f64, threads: usize) -> Vec<Table> {
-    let (mempod, trimma) = flat_pair(scale, threads);
+pub fn fig10(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
+    let (mempod, trimma) = flat_pair(scale, threads)?;
     let mut a = Table::new(
         "fig10a: fast memory serve rate",
         &["workload", "mempod", "trimma-f", "delta"],
@@ -288,14 +291,14 @@ pub fn fig10(scale: f64, threads: usize) -> Vec<Table> {
         ]);
     }
     a.row(vec!["MEAN".into(), "-".into(), "-".into(), pct(dsum / n as f64)]);
-    vec![a, b]
+    Ok(vec![a, b])
 }
 
 // ---------------------------------------------------------------- fig 11
 
 /// Fig. 11: conventional remap cache vs iRC on Trimma-F — performance and
 /// remap-cache hit rates.
-pub fn fig11(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig11(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let mk = |rc: RemapCacheKind, tag: &str, wl: &&str| {
         let mut cfg = scaled(preset(Tech::Hbm3Ddr5, DesignPoint::TrimmaFlat), scale);
         cfg.hybrid.remap_cache = rc;
@@ -306,7 +309,7 @@ pub fn fig11(scale: f64, threads: usize) -> Vec<Table> {
         jobs.push(mk(presets::conventional_rc(), "conv", wl));
         jobs.push(mk(presets::irc_rc(), "irc", wl));
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let mut t = Table::new(
         "fig11: conventional RC vs iRC (Trimma-F, HBM3+DDR5)",
         &["workload", "speedup", "conv_hit", "irc_hit", "conv_id_hit", "irc_id_hit"],
@@ -335,13 +338,13 @@ pub fn fig11(scale: f64, threads: usize) -> Vec<Table> {
         "-".into(),
         "-".into(),
     ]);
-    vec![t]
+    Ok(vec![t])
 }
 
 // --------------------------------------------------------------- fig 12
 
 /// Fig. 12a: Trimma speedup vs slow-to-fast capacity ratio.
-pub fn fig12a(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig12a(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let ratios = [8u64, 16, 32, 64];
     let mut jobs = Vec::new();
     for &r in &ratios {
@@ -360,7 +363,7 @@ pub fn fig12a(scale: f64, threads: usize) -> Vec<Table> {
             }
         }
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let mut t = Table::new(
         "fig12a: Trimma speedup vs capacity ratio (geomean)",
         &["ratio", "trimma-f_vs_mempod", "trimma-c_vs_linear"],
@@ -380,11 +383,11 @@ pub fn fig12a(scale: f64, threads: usize) -> Vec<Table> {
             fmt(geomean(&cache)),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 12b: performance vs migration block size, normalized to 256 B.
-pub fn fig12b(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig12b(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let blocks = [64u32, 256, 1024, 4096];
     let mut jobs = Vec::new();
     for &b in &blocks {
@@ -396,7 +399,7 @@ pub fn fig12b(scale: f64, threads: usize) -> Vec<Table> {
             jobs.push(Job::new(format!("b{b}:{wl}"), cfg, wl));
         }
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let n = SENSITIVITY_SUBSET.len();
     let perf: Vec<f64> = blocks
         .iter()
@@ -418,14 +421,14 @@ pub fn fig12b(scale: f64, threads: usize) -> Vec<Table> {
     for (b, p) in blocks.iter().zip(&perf) {
         t.row(vec![b.to_string(), fmt(p / base)]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 // --------------------------------------------------------------- fig 13
 
 /// Fig. 13a: iRT level count ablation (1 = linear, 2 = Trimma, 4 = Tag
 /// Tables-like), normalized to 2-level.
-pub fn fig13a(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig13a(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let levels = [1u32, 2, 4];
     let mut jobs = Vec::new();
     for &lv in &levels {
@@ -435,7 +438,7 @@ pub fn fig13a(scale: f64, threads: usize) -> Vec<Table> {
             jobs.push(Job::new(format!("irt{lv}:{wl}"), cfg, wl));
         }
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let n = SENSITIVITY_SUBSET.len();
     let perf: Vec<f64> = levels
         .iter()
@@ -456,7 +459,7 @@ pub fn fig13a(scale: f64, threads: usize) -> Vec<Table> {
     for (lv, p) in levels.iter().zip(&perf) {
         t.row(vec![lv.to_string(), fmt(p / perf[1])]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// iRC partition for a given fraction of SRAM spent on the IdCache,
@@ -481,7 +484,7 @@ pub fn irc_partition(id_frac: f64) -> RemapCacheKind {
 }
 
 /// Fig. 13b: iRC capacity split between NonIdCache and IdCache.
-pub fn fig13b(scale: f64, threads: usize) -> Vec<Table> {
+pub fn fig13b(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     let fracs = [0.0, 0.125, 0.25, 0.5, 0.75];
     let mut jobs = Vec::new();
     for &f in &fracs {
@@ -491,7 +494,7 @@ pub fn fig13b(scale: f64, threads: usize) -> Vec<Table> {
             jobs.push(Job::new(format!("id{f}:{wl}"), cfg, wl));
         }
     }
-    let reps = run_jobs(&jobs, threads);
+    let reps = run_jobs(&jobs, threads)?;
     let n = SENSITIVITY_SUBSET.len();
     let mut t = Table::new(
         "fig13b: iRC IdCache capacity fraction (norm. 25%, geomean)",
@@ -518,7 +521,7 @@ pub fn fig13b(scale: f64, threads: usize) -> Vec<Table> {
             / n as f64;
         t.row(vec![pct(f), fmt(perf[i] / base), pct(hits)]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -537,7 +540,10 @@ mod tests {
                     | "fig12a" | "fig12b" | "fig13a" | "fig13b"
             ));
         }
-        assert!(run_figure("nope", 1.0, 1).is_none());
+        assert!(matches!(
+            run_figure("nope", 1.0, 1),
+            Err(EngineError::UnknownFigure(id)) if id == "nope"
+        ));
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! ([`figures`]).
 //!
 //! Jobs fan out over `std::thread` workers (one simulation per job; each
-//! worker constructs its own workload/controller, so nothing non-`Send`
-//! crosses threads). Results come back as [`crate::sim::SimReport`]s and
-//! are formatted into [`Table`]s (markdown to stdout, CSV under
-//! `results/`).
+//! worker assembles its own run through [`crate::engine::EngineBuilder`],
+//! so nothing non-`Send` crosses threads). Results come back as
+//! [`crate::sim::SimReport`]s and are formatted into [`Table`]s (markdown
+//! to stdout, CSV under `results/`). Failures (e.g. an unknown workload
+//! name) come back as typed [`EngineError`]s instead of panicking the
+//! worker.
 
 pub mod bench;
 pub mod figures;
@@ -15,54 +17,66 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::SystemConfig;
-use crate::hybrid::{build_controller, maybe_checked, tagmatch::TagMatchController, Controller};
-use crate::sim::{SimReport, Simulation};
-use crate::workloads;
+use crate::engine::{EngineBuilder, EngineError};
+use crate::sim::SimReport;
 
-/// Which controller a job uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum JobKind {
-    /// The configured design point.
-    Normal,
-    /// The metadata-free oracle (Fig. 1 "Ideal").
-    Ideal,
-    /// Generic a-way tag matching (Fig. 1 "tag matching").
-    TagMatch,
-}
-
-/// One simulation to run.
+/// One simulation to run: an explicit config, a workload name, and the
+/// engine's controller-override toggles (the old three-valued `JobKind`
+/// is now the `ideal` / `tag_match` pair, mirroring
+/// [`EngineBuilder::ideal`] and [`EngineBuilder::tag_match`]).
 #[derive(Clone)]
 pub struct Job {
     pub label: String,
     pub cfg: SystemConfig,
     pub workload: String,
-    pub kind: JobKind,
+    /// Run the metadata-free oracle (Fig. 1 "Ideal") instead of the
+    /// configured design point.
+    pub ideal: bool,
+    /// Run generic a-way tag matching (Fig. 1 "tag matching") instead of
+    /// the configured design point.
+    pub tag_match: bool,
 }
 
 impl Job {
+    /// A job for the configured design point.
     pub fn new(label: impl Into<String>, cfg: SystemConfig, workload: &str) -> Self {
-        Job { label: label.into(), cfg, workload: workload.to_string(), kind: JobKind::Normal }
+        Job {
+            label: label.into(),
+            cfg,
+            workload: workload.to_string(),
+            ideal: false,
+            tag_match: false,
+        }
+    }
+
+    /// A job for the metadata-free Ideal oracle.
+    pub fn ideal(label: impl Into<String>, cfg: SystemConfig, workload: &str) -> Self {
+        Job { ideal: true, ..Job::new(label, cfg, workload) }
+    }
+
+    /// A job for the generic tag-matching baseline.
+    pub fn tag_match(label: impl Into<String>, cfg: SystemConfig, workload: &str) -> Self {
+        Job { tag_match: true, ..Job::new(label, cfg, workload) }
+    }
+
+    /// The builder describing this job's run.
+    pub fn builder(&self) -> EngineBuilder {
+        EngineBuilder::from_config(self.cfg.clone())
+            .workload(self.workload.as_str())
+            .ideal(self.ideal)
+            .tag_match(self.tag_match)
     }
 }
 
 /// Run one job to completion.
-pub fn run_job(job: &Job) -> SimReport {
-    let wl = workloads::by_name(&job.workload, &job.cfg)
-        .unwrap_or_else(|| panic!("unknown workload {}", job.workload));
-    let ctrl: Box<dyn Controller> = match job.kind {
-        JobKind::Normal => build_controller(&job.cfg, false),
-        JobKind::Ideal => build_controller(&job.cfg, true),
-        JobKind::TagMatch => {
-            maybe_checked(Box::new(TagMatchController::new(&job.cfg)), &job.cfg)
-        }
-    };
-    let mut sim = Simulation::with_controller(&job.cfg, wl, ctrl);
-    sim.run()
+pub fn run_job(job: &Job) -> Result<SimReport, EngineError> {
+    job.builder().run()
 }
 
 /// Run jobs in parallel across up to `threads` workers (0 = all cores).
-/// Results are returned in job order.
-pub fn run_jobs(jobs: &[Job], threads: usize) -> Vec<SimReport> {
+/// Results are returned in job order; the first failing job's error is
+/// returned (the remaining jobs still run to completion).
+pub fn run_jobs(jobs: &[Job], threads: usize) -> Result<Vec<SimReport>, EngineError> {
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
@@ -71,7 +85,8 @@ pub fn run_jobs(jobs: &[Job], threads: usize) -> Vec<SimReport> {
     .min(jobs.len().max(1));
 
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; jobs.len()]);
+    let results: Mutex<Vec<Option<Result<SimReport, EngineError>>>> =
+        Mutex::new(vec![None; jobs.len()]);
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
@@ -180,11 +195,20 @@ mod tests {
             .iter()
             .map(|w| Job::new(*w, tiny(DesignPoint::TrimmaCache), w))
             .collect();
-        let par = run_jobs(&jobs, 2);
-        let ser: Vec<_> = jobs.iter().map(run_job).collect();
+        let par = run_jobs(&jobs, 2).unwrap();
+        let ser: Vec<_> = jobs.iter().map(|j| run_job(j).unwrap()).collect();
         for (p, s) in par.iter().zip(&ser) {
             assert_eq!(p.stats.max_core_cycles, s.stats.max_core_cycles);
         }
+    }
+
+    #[test]
+    fn unknown_workload_surfaces_as_error_not_panic() {
+        let job = Job::new("bad", tiny(DesignPoint::TrimmaCache), "no_such_workload");
+        let err = run_job(&job).unwrap_err();
+        assert!(matches!(err, crate::engine::EngineError::UnknownWorkload(_)));
+        let jobs = [Job::new("ok", tiny(DesignPoint::TrimmaCache), "gap_pr"), job];
+        assert!(run_jobs(&jobs, 2).is_err());
     }
 
     #[test]
@@ -203,16 +227,19 @@ mod tests {
     }
 
     #[test]
-    fn tagmatch_job_kind_runs() {
+    fn tag_match_job_runs() {
         let mut cfg = tiny(DesignPoint::AlloyCache);
         cfg.hybrid.num_sets = ((cfg.hybrid.fast_bytes / 256) / 64) as u32; // 64-way
-        let job = Job {
-            label: "tag64".into(),
-            cfg,
-            workload: "gap_pr".into(),
-            kind: JobKind::TagMatch,
-        };
-        let rep = run_job(&job);
+        let job = Job::tag_match("tag64", cfg, "gap_pr");
+        let rep = run_job(&job).unwrap();
         assert!(rep.stats.metadata_cycles > 0);
+    }
+
+    #[test]
+    fn ideal_job_runs_oracle() {
+        let job = Job::ideal("ideal", tiny(DesignPoint::Ideal), "gap_pr");
+        let rep = run_job(&job).unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert_eq!(rep.stats.metadata_cycles, 0, "the oracle's lookups are free");
     }
 }

@@ -1,0 +1,317 @@
+//! [`EngineBuilder`]: the one way to assemble a run.
+
+use crate::config::presets::{self, DesignPoint};
+use crate::config::SystemConfig;
+use crate::engine::{AnyController, EngineError, Session};
+use crate::sim::{SimReport, Simulation};
+use crate::workloads;
+
+/// Memory technology combination, mirroring the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryPreset {
+    /// HBM3 fast tier + DDR5 slow tier (the paper's first combination).
+    Hbm3Ddr5,
+    /// DDR5 fast tier + Optane-like NVM slow tier (the second).
+    Ddr5Nvm,
+}
+
+impl MemoryPreset {
+    /// Every preset, in paper order.
+    pub const ALL: &'static [MemoryPreset] = &[MemoryPreset::Hbm3Ddr5, MemoryPreset::Ddr5Nvm];
+
+    /// The CLI spelling (`hbm3+ddr5` / `ddr5+nvm`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemoryPreset::Hbm3Ddr5 => "hbm3+ddr5",
+            MemoryPreset::Ddr5Nvm => "ddr5+nvm",
+        }
+    }
+
+    /// Parse the CLI spelling back; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<MemoryPreset> {
+        MemoryPreset::ALL.iter().copied().find(|m| m.label() == name)
+    }
+
+    /// The ready-made [`SystemConfig`] for `design` on this technology.
+    pub fn preset(&self, design: DesignPoint) -> SystemConfig {
+        match self {
+            MemoryPreset::Hbm3Ddr5 => presets::hbm3_ddr5(design),
+            MemoryPreset::Ddr5Nvm => presets::ddr5_nvm(design),
+        }
+    }
+}
+
+/// Builder for simulation runs: one typed path from *design point +
+/// memory preset + workload + toggles* to a config, a controller, a
+/// streaming [`Session`], or a full trace-driven
+/// [`Simulation`](crate::sim::Simulation).
+///
+/// Replaces the old `build_controller(cfg, ideal)` / `maybe_checked` /
+/// `JobKind` triple-path. All `build_*` methods take `&self`, so one
+/// builder can stamp out many identical runs (the coordinator builds one
+/// per worker thread).
+///
+/// ```no_run
+/// use trimma::config::presets::DesignPoint;
+/// use trimma::engine::{EngineBuilder, MemoryPreset};
+///
+/// let report = EngineBuilder::new(DesignPoint::TrimmaFlat)
+///     .memory(MemoryPreset::Ddr5Nvm)
+///     .workload("ycsb_a")
+///     .verify(true) // shadow the run with the differential remap oracle
+///     .run()
+///     .unwrap();
+/// assert!(report.stats.mem_accesses > 0);
+/// ```
+///
+/// Unknown workload names surface as a typed error instead of a panic:
+///
+/// ```
+/// use trimma::config::presets::DesignPoint;
+/// use trimma::engine::{EngineBuilder, EngineError};
+///
+/// let err = EngineBuilder::new(DesignPoint::TrimmaCache)
+///     .workload("definitely_not_a_workload")
+///     .run()
+///     .unwrap_err();
+/// assert!(matches!(err, EngineError::UnknownWorkload(_)));
+/// assert!(err.to_string().contains("gap_pr")); // lists the valid names
+/// ```
+pub struct EngineBuilder {
+    design: DesignPoint,
+    memory: MemoryPreset,
+    base: Option<SystemConfig>,
+    workload: Option<String>,
+    ideal: bool,
+    verify: bool,
+    tag_match: bool,
+    tweaks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
+}
+
+impl EngineBuilder {
+    /// A builder for `design` on the default HBM3+DDR5 technology.
+    pub fn new(design: DesignPoint) -> Self {
+        EngineBuilder {
+            design,
+            memory: MemoryPreset::Hbm3Ddr5,
+            base: None,
+            workload: None,
+            ideal: false,
+            verify: false,
+            tag_match: false,
+            tweaks: Vec::new(),
+        }
+    }
+
+    /// Seed the builder from an explicit, already-assembled config (the
+    /// CLI's flag-override path and the coordinator's per-job configs).
+    /// Overrides whatever `design`/`memory` would have produced; `ideal`,
+    /// `verify`, `tag_match`, and `configure` tweaks still apply on top.
+    pub fn from_config(cfg: SystemConfig) -> Self {
+        let mut b = EngineBuilder::new(DesignPoint::TrimmaCache);
+        b.base = Some(cfg);
+        b
+    }
+
+    /// Select the design point (ignored after [`EngineBuilder::from_config`]).
+    pub fn design(mut self, design: DesignPoint) -> Self {
+        self.design = design;
+        self
+    }
+
+    /// Select the memory technology combination (ignored after
+    /// [`EngineBuilder::from_config`]).
+    pub fn memory(mut self, memory: MemoryPreset) -> Self {
+        self.memory = memory;
+        self
+    }
+
+    /// Name the workload to simulate (calibrated suite or `adv_*`
+    /// adversarial scenario). Required for [`EngineBuilder::build`] /
+    /// [`EngineBuilder::run`]; validated against
+    /// [`workloads::all_names`](crate::workloads::all_names).
+    pub fn workload(mut self, name: impl Into<String>) -> Self {
+        self.workload = Some(name.into());
+        self
+    }
+
+    /// Build the metadata-free Ideal oracle of Fig. 1 instead of the
+    /// design point's controller (mutually exclusive with `tag_match`).
+    pub fn ideal(mut self, ideal: bool) -> Self {
+        self.ideal = ideal;
+        self
+    }
+
+    /// Shadow the controller with the differential verify oracle
+    /// ([`crate::verify`]); tests and debug runs pay the cost, sweeps
+    /// don't.
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    /// Build the generic a-way tag-matching baseline of Fig. 1 instead of
+    /// the design point's controller (mutually exclusive with `ideal`).
+    pub fn tag_match(mut self, tag_match: bool) -> Self {
+        self.tag_match = tag_match;
+        self
+    }
+
+    /// Queue a raw config tweak, applied (in call order) after the preset
+    /// is materialized — capacities, core counts, access budgets, remap
+    /// cache geometry: anything the typed knobs don't cover.
+    pub fn configure(mut self, f: impl Fn(&mut SystemConfig) + 'static) -> Self {
+        self.tweaks.push(Box::new(f));
+        self
+    }
+
+    /// Materialize and validate the [`SystemConfig`] this builder
+    /// describes, without constructing a controller.
+    pub fn build_config(&self) -> Result<SystemConfig, EngineError> {
+        if self.ideal && self.tag_match {
+            return Err(EngineError::InvalidConfig(
+                "ideal and tag_match are mutually exclusive controller overrides".to_string(),
+            ));
+        }
+        let mut cfg = match &self.base {
+            Some(base) => base.clone(),
+            None => self.memory.preset(self.design),
+        };
+        for tweak in &self.tweaks {
+            tweak(&mut cfg);
+        }
+        cfg.hybrid.verify |= self.verify;
+        cfg.validate().map_err(EngineError::InvalidConfig)?;
+        Ok(cfg)
+    }
+
+    /// Build the enum-dispatched controller for this design point,
+    /// honouring the `ideal` / `tag_match` / `verify` toggles.
+    pub fn build_controller(&self) -> Result<AnyController, EngineError> {
+        let cfg = self.build_config()?;
+        Ok(self.controller_for(&cfg))
+    }
+
+    /// Controller routing against an already-materialized config.
+    fn controller_for(&self, cfg: &SystemConfig) -> AnyController {
+        if self.tag_match {
+            AnyController::tag_match(cfg)
+        } else {
+            AnyController::from_config(cfg, self.ideal)
+        }
+    }
+
+    /// Build a streaming [`Session`] over this builder's controller. The
+    /// session label is the workload name when one is set, the config
+    /// name otherwise.
+    pub fn build_session(&self) -> Result<Session, EngineError> {
+        let cfg = self.build_config()?;
+        let ctrl = self.controller_for(&cfg);
+        let label = self.workload.clone().unwrap_or_else(|| cfg.name.clone());
+        Ok(Session::with_controller(label, ctrl))
+    }
+
+    /// Build the full trace-driven simulation (requires a workload).
+    pub fn build(&self) -> Result<Simulation, EngineError> {
+        let name = self.workload.as_deref().ok_or(EngineError::MissingWorkload)?;
+        let cfg = self.build_config()?;
+        let wl = workloads::by_name(name, &cfg)?;
+        let ctrl = self.controller_for(&cfg);
+        Ok(Simulation::with_controller(&cfg, wl, ctrl))
+    }
+
+    /// Build and run the simulation to completion.
+    pub fn run(&self) -> Result<SimReport, EngineError> {
+        Ok(self.build()?.run())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shrink(cfg: &mut SystemConfig) {
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg.workload.cores = 2;
+        cfg.workload.accesses_per_core = 800;
+        cfg.workload.warmup_per_core = 200;
+    }
+
+    #[test]
+    fn builder_runs_a_tiny_simulation() {
+        let rep = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .workload("adv_drift")
+            .configure(shrink)
+            .run()
+            .unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert_eq!(rep.name, "adv_drift");
+    }
+
+    #[test]
+    fn missing_workload_is_a_typed_error() {
+        let err = EngineBuilder::new(DesignPoint::TrimmaCache).build().unwrap_err();
+        assert_eq!(err, EngineError::MissingWorkload);
+    }
+
+    #[test]
+    fn unknown_workload_lists_valid_names() {
+        let err = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .workload("nope")
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("'nope'"), "{msg}");
+        assert!(msg.contains("gap_pr") && msg.contains("adv_set_thrash"), "{msg}");
+    }
+
+    #[test]
+    fn ideal_and_tag_match_conflict() {
+        let err = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .ideal(true)
+            .tag_match(true)
+            .build_config()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn toggles_route_controllers() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache).configure(shrink);
+        assert_eq!(b.build_controller().unwrap().kind(), "remap");
+        let b = EngineBuilder::new(DesignPoint::AlloyCache)
+            .configure(|cfg| cfg.hybrid.num_sets = (cfg.hybrid.fast_bytes / 256) as u32);
+        assert_eq!(b.build_controller().unwrap().kind(), "alloy");
+        assert_eq!(b.tag_match(true).build_controller().unwrap().kind(), "tag-match");
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache).configure(shrink).verify(true);
+        assert_eq!(b.build_controller().unwrap().kind(), "checked");
+    }
+
+    #[test]
+    fn from_config_keeps_explicit_overrides() {
+        let mut cfg = MemoryPreset::Hbm3Ddr5.preset(DesignPoint::TrimmaFlat);
+        shrink(&mut cfg);
+        let session = EngineBuilder::from_config(cfg.clone()).build_session().unwrap();
+        assert_eq!(session.layout().num_sets, 4);
+        assert_eq!(session.label(), cfg.name);
+    }
+
+    #[test]
+    fn memory_preset_labels_round_trip() {
+        for m in MemoryPreset::ALL {
+            assert_eq!(MemoryPreset::parse(m.label()), Some(*m));
+        }
+        assert_eq!(MemoryPreset::parse("sram+tape"), None);
+    }
+
+    #[test]
+    fn builder_session_and_sim_share_geometry() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache).workload("gap_pr").configure(shrink);
+        let session = b.build_session().unwrap();
+        let sim = b.build().unwrap();
+        assert_eq!(session.layout().num_sets, sim.session().layout().num_sets);
+        assert_eq!(session.controller().kind(), "remap");
+    }
+}

@@ -1,0 +1,234 @@
+//! [`AnyController`]: closed enum dispatch over every controller
+//! implementation, replacing `Box<dyn Controller>` on the hot path.
+
+use crate::config::{MetadataScheme, Mode, SystemConfig};
+use crate::hybrid::alloy::AlloyController;
+use crate::hybrid::lohhill::LohHillController;
+use crate::hybrid::remap::RemapController;
+use crate::hybrid::tagmatch::TagMatchController;
+use crate::hybrid::{Access, Controller};
+use crate::metadata::SetLayout;
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle};
+use crate::verify::CheckedController;
+
+/// Every hybrid-memory controller the engine can run, as one closed enum.
+///
+/// [`Controller`] is still the extension trait (custom controllers remain
+/// pluggable through [`crate::sim::Simulation::with_controller`]), but the
+/// standard design points all route through this enum so that a simulation
+/// loop monomorphized over `AnyController` devirtualizes the per-access
+/// call chain for every design point. The variant sizes differ wildly
+/// (the remap engine owns every table and free stack; Alloy is a flat tag
+/// array), but exactly one value exists per simulation and it is never
+/// moved per access, so the enum is sized by its largest variant on
+/// purpose rather than boxing the hot variants behind another pointer.
+#[allow(clippy::large_enum_variant)]
+pub enum AnyController {
+    /// The general remap-table engine: Trimma-C/F, MemPod, the linear
+    /// cache design, and the metadata-free Ideal oracle.
+    Remap(RemapController),
+    /// Alloy Cache (direct-mapped, tag+data in one burst).
+    Alloy(AlloyController),
+    /// Loh-Hill Cache (tags-in-row, perfect MissMap).
+    LohHill(LohHillController),
+    /// Generic a-way tag matching (the Fig. 1 "tag matching" series).
+    TagMatch(TagMatchController),
+    /// Any of the above shadowed by the differential verify oracle
+    /// (boxed: the wrapper nests a full `AnyController` inside itself).
+    Checked(Box<CheckedController<AnyController>>),
+}
+
+impl AnyController {
+    /// Route a system configuration to its controller implementation —
+    /// the single successor of the old `build_controller(cfg, ideal)` /
+    /// `maybe_checked` pair. `ideal = true` builds the metadata-free
+    /// oracle of Fig. 1 regardless of `cfg.hybrid.scheme`; with
+    /// `cfg.hybrid.verify` the controller is shadowed by the
+    /// [`CheckedController`] oracle.
+    pub fn from_config(cfg: &SystemConfig, ideal: bool) -> AnyController {
+        let inner = match (ideal, cfg.hybrid.scheme, cfg.hybrid.mode) {
+            (true, _, _) => AnyController::Remap(RemapController::new(cfg, true)),
+            (_, MetadataScheme::TagAlloy, Mode::Cache) => {
+                AnyController::Alloy(AlloyController::new(cfg))
+            }
+            (_, MetadataScheme::TagLohHill, Mode::Cache) => {
+                AnyController::LohHill(LohHillController::new(cfg))
+            }
+            _ => AnyController::Remap(RemapController::new(cfg, false)),
+        };
+        inner.maybe_checked(cfg)
+    }
+
+    /// The generic a-way tag-matching baseline (`cfg.hybrid.num_sets`
+    /// encodes the associativity), verify-wrapped when the config asks.
+    pub fn tag_match(cfg: &SystemConfig) -> AnyController {
+        AnyController::TagMatch(TagMatchController::new(cfg)).maybe_checked(cfg)
+    }
+
+    /// Wrap `self` in the verify oracle when `cfg.hybrid.verify` is set
+    /// (idempotent: an already-checked controller is returned unchanged).
+    pub fn maybe_checked(self, cfg: &SystemConfig) -> AnyController {
+        if cfg.hybrid.verify && !matches!(self, AnyController::Checked(_)) {
+            AnyController::Checked(Box::new(CheckedController::new(self, cfg)))
+        } else {
+            self
+        }
+    }
+
+    /// Short label of the active variant (diagnostics / bench labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AnyController::Remap(_) => "remap",
+            AnyController::Alloy(_) => "alloy",
+            AnyController::LohHill(_) => "loh-hill",
+            AnyController::TagMatch(_) => "tag-match",
+            AnyController::Checked(_) => "checked",
+        }
+    }
+}
+
+impl Controller for AnyController {
+    #[inline]
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        match self {
+            AnyController::Remap(c) => c.access(set, idx, line, kind, now),
+            AnyController::Alloy(c) => c.access(set, idx, line, kind, now),
+            AnyController::LohHill(c) => c.access(set, idx, line, kind, now),
+            AnyController::TagMatch(c) => c.access(set, idx, line, kind, now),
+            AnyController::Checked(c) => c.access(set, idx, line, kind, now),
+        }
+    }
+
+    #[inline]
+    fn access_block(&mut self, batch: &[Access]) -> Cycle {
+        match self {
+            AnyController::Remap(c) => c.access_block(batch),
+            AnyController::Alloy(c) => c.access_block(batch),
+            AnyController::LohHill(c) => c.access_block(batch),
+            AnyController::TagMatch(c) => c.access_block(batch),
+            AnyController::Checked(c) => c.access_block(batch),
+        }
+    }
+
+    fn finalize(&mut self) {
+        match self {
+            AnyController::Remap(c) => c.finalize(),
+            AnyController::Alloy(c) => c.finalize(),
+            AnyController::LohHill(c) => c.finalize(),
+            AnyController::TagMatch(c) => c.finalize(),
+            AnyController::Checked(c) => c.finalize(),
+        }
+    }
+
+    fn reset_stats(&mut self) {
+        match self {
+            AnyController::Remap(c) => c.reset_stats(),
+            AnyController::Alloy(c) => c.reset_stats(),
+            AnyController::LohHill(c) => c.reset_stats(),
+            AnyController::TagMatch(c) => c.reset_stats(),
+            AnyController::Checked(c) => c.reset_stats(),
+        }
+    }
+
+    fn stats(&self) -> &Stats {
+        match self {
+            AnyController::Remap(c) => c.stats(),
+            AnyController::Alloy(c) => c.stats(),
+            AnyController::LohHill(c) => c.stats(),
+            AnyController::TagMatch(c) => c.stats(),
+            AnyController::Checked(c) => c.stats(),
+        }
+    }
+
+    fn layout(&self) -> &SetLayout {
+        match self {
+            AnyController::Remap(c) => c.layout(),
+            AnyController::Alloy(c) => c.layout(),
+            AnyController::LohHill(c) => c.layout(),
+            AnyController::TagMatch(c) => c.layout(),
+            AnyController::Checked(c) => c.layout(),
+        }
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        match self {
+            AnyController::Remap(c) => c.debug_translate(set, idx),
+            AnyController::Alloy(c) => c.debug_translate(set, idx),
+            AnyController::LohHill(c) => c.debug_translate(set, idx),
+            AnyController::TagMatch(c) => c.debug_translate(set, idx),
+            AnyController::Checked(c) => c.debug_translate(set, idx),
+        }
+    }
+
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        match self {
+            AnyController::Remap(c) => c.debug_check_set(set),
+            AnyController::Alloy(c) => c.debug_check_set(set),
+            AnyController::LohHill(c) => c.debug_check_set(set),
+            AnyController::TagMatch(c) => c.debug_check_set(set),
+            AnyController::Checked(c) => c.debug_check_set(set),
+        }
+    }
+
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        match self {
+            AnyController::Remap(c) => c.debug_nonidentity_entries(set),
+            AnyController::Alloy(c) => c.debug_nonidentity_entries(set),
+            AnyController::LohHill(c) => c.debug_nonidentity_entries(set),
+            AnyController::TagMatch(c) => c.debug_nonidentity_entries(set),
+            AnyController::Checked(c) => c.debug_nonidentity_entries(set),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    #[test]
+    fn from_config_builds_every_preset() {
+        for dp in DesignPoint::ALL {
+            let cfg = presets::hbm3_ddr5(*dp);
+            let ideal = *dp == DesignPoint::Ideal;
+            let c = AnyController::from_config(&cfg, ideal);
+            assert_eq!(c.stats().mem_accesses, 0);
+            assert!(!matches!(c, AnyController::Checked(_)), "{dp:?}: verify off by default");
+        }
+    }
+
+    #[test]
+    fn variant_routing_matches_design_point() {
+        let alloy = AnyController::from_config(&presets::hbm3_ddr5(DesignPoint::AlloyCache), false);
+        assert_eq!(alloy.kind(), "alloy");
+        let lh = AnyController::from_config(&presets::hbm3_ddr5(DesignPoint::LohHill), false);
+        assert_eq!(lh.kind(), "loh-hill");
+        for dp in [
+            DesignPoint::TrimmaCache,
+            DesignPoint::TrimmaFlat,
+            DesignPoint::MemPod,
+            DesignPoint::LinearCache,
+        ] {
+            let c = AnyController::from_config(&presets::hbm3_ddr5(dp), false);
+            assert_eq!(c.kind(), "remap", "{dp:?}");
+        }
+        let tm = AnyController::tag_match(&presets::hbm3_ddr5(DesignPoint::AlloyCache));
+        assert_eq!(tm.kind(), "tag-match");
+    }
+
+    #[test]
+    fn verify_toggle_wraps_once() {
+        let cfg = presets::with_verify(presets::hbm3_ddr5(DesignPoint::TrimmaCache));
+        let c = AnyController::from_config(&cfg, false);
+        assert_eq!(c.kind(), "checked");
+        // Idempotent: re-wrapping an already-checked controller is a no-op.
+        let c = c.maybe_checked(&cfg);
+        match &c {
+            AnyController::Checked(inner) => {
+                assert_eq!(inner.inner().kind(), "remap", "exactly one oracle layer");
+            }
+            other => panic!("expected checked, got {}", other.kind()),
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! The public front door of the simulator: a builder-first, statically
+//! dispatched session API.
+//!
+//! Historically a run was assembled through three overlapping mechanisms:
+//! `hybrid::build_controller(cfg, ideal)` (an `ideal: bool` threaded
+//! through every caller), `hybrid::maybe_checked` (manual verify-oracle
+//! wrapping), and `coordinator::JobKind` (a third spelling of the same
+//! choice for the sweep harness) — all of them meeting in a
+//! `Box<dyn Controller>` whose virtual dispatch sat on the per-access hot
+//! path. This module replaces that triple-path with one coherent, typed
+//! API:
+//!
+//! * [`EngineBuilder`] — the single way to assemble a run: typed design
+//!   point, memory preset, workload, and the `ideal` / `verify` /
+//!   `tag_match` toggles, with `configure` closures for raw
+//!   [`SystemConfig`](crate::config::SystemConfig) tweaks.
+//! * [`AnyController`] — an enum over every controller implementation.
+//!   `access` and `access_block` dispatch through a match, so once the
+//!   simulation loop is monomorphized over `AnyController` the per-access
+//!   call chain is fully devirtualized for **all** design points, not just
+//!   the remap engine.
+//! * [`Session`] — a streaming consumer of controller-level
+//!   [`Access`](crate::hybrid::Access)es: `push_batch(&[Access]) ->
+//!   Completion`, `finish() -> SimReport`. Trace generation is decoupled
+//!   from simulation: the trace-driven [`Simulation`](crate::sim::Simulation)
+//!   engine, the bench suite, the adversarial scenario drivers, and any
+//!   future sharded/async driver all feed accesses through this one entry
+//!   point.
+//!
+//! ```no_run
+//! use trimma::config::presets::DesignPoint;
+//! use trimma::engine::EngineBuilder;
+//!
+//! let report = EngineBuilder::new(DesignPoint::TrimmaCache)
+//!     .workload("gap_pr")
+//!     .run()
+//!     .unwrap();
+//! println!("IPC-proxy perf: {:.4}", report.performance());
+//! ```
+#![deny(missing_docs)]
+
+mod builder;
+mod controller;
+mod session;
+
+pub use builder::{EngineBuilder, MemoryPreset};
+pub use controller::AnyController;
+pub use session::{Completion, Session};
+
+use crate::workloads::UnknownWorkload;
+
+/// Everything that can go wrong while assembling or running an engine.
+///
+/// The CLI surfaces these with a non-zero exit code; library callers can
+/// match on the variants (all payloads are plain data, so the error is
+/// `Send + Sync` and travels across the coordinator's worker threads).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The requested workload name is not in the calibrated suite or the
+    /// adversarial scenario set. The payload lists every valid name.
+    UnknownWorkload(UnknownWorkload),
+    /// A simulation was requested from a builder with no workload set.
+    MissingWorkload,
+    /// The assembled [`SystemConfig`](crate::config::SystemConfig) failed
+    /// validation, or the builder toggles contradict each other.
+    InvalidConfig(String),
+    /// The requested figure id is not part of the evaluation
+    /// (see `coordinator::figures::ALL_FIGURES`).
+    UnknownFigure(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnknownWorkload(e) => write!(f, "{e}"),
+            EngineError::MissingWorkload => {
+                write!(f, "no workload set: call EngineBuilder::workload(..) before build()/run()")
+            }
+            EngineError::InvalidConfig(e) => write!(f, "invalid config: {e}"),
+            EngineError::UnknownFigure(id) => write!(f, "unknown figure '{id}'"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<UnknownWorkload> for EngineError {
+    fn from(e: UnknownWorkload) -> Self {
+        EngineError::UnknownWorkload(e)
+    }
+}

@@ -1,0 +1,224 @@
+//! [`Session`]: the streaming front door of the simulation — controllers
+//! consume [`Access`] batches pushed by whatever driver generates them.
+
+use crate::engine::AnyController;
+use crate::hybrid::{Access, Controller};
+use crate::metadata::SetLayout;
+use crate::sim::SimReport;
+use crate::stats::Stats;
+use crate::types::Cycle;
+
+/// Result of one [`Session::push_batch`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    /// Accesses consumed from the batch.
+    pub accesses: u64,
+    /// Summed demand latency of the batch, in cycles.
+    pub latency: Cycle,
+}
+
+/// A streaming simulation session over one controller.
+///
+/// Decouples trace generation from simulation: the trace-driven
+/// [`Simulation`](crate::sim::Simulation) engine, the bench suite, the
+/// adversarial scenario drivers, and future sharded/async drivers all feed
+/// controller-level [`Access`]es through `push` / `push_batch` and collect
+/// the end-of-run [`SimReport`] from `finish`. The controller type is a
+/// generic parameter (defaulting to the enum-dispatched
+/// [`AnyController`]), so the per-access call chain monomorphizes — no
+/// virtual dispatch on the hot path.
+///
+/// ```
+/// use trimma::config::presets::DesignPoint;
+/// use trimma::engine::EngineBuilder;
+/// use trimma::hybrid::Access;
+/// use trimma::types::AccessKind;
+///
+/// let mut session = EngineBuilder::new(DesignPoint::TrimmaCache)
+///     .configure(|cfg| {
+///         cfg.hybrid.fast_bytes = 1 << 20;
+///         cfg.hybrid.slow_bytes = 32 << 20;
+///         cfg.hybrid.num_sets = 4;
+///     })
+///     .build_session()
+///     .unwrap();
+/// let slow = session.layout().fast_per_set; // first slow-tier index
+/// let batch: Vec<Access> = (0..64)
+///     .map(|n| Access {
+///         set: 0,
+///         idx: slow + n,
+///         line: 0,
+///         kind: AccessKind::Read,
+///         now: n * 700,
+///     })
+///     .collect();
+/// let done = session.push_batch(&batch);
+/// assert_eq!(done.accesses, 64);
+/// assert!(done.latency > 0);
+/// let report = session.finish();
+/// assert_eq!(report.stats.mem_accesses, 64);
+/// ```
+pub struct Session<C: Controller = AnyController> {
+    ctrl: C,
+    label: String,
+    pushed: u64,
+}
+
+impl<C: Controller> Session<C> {
+    /// Wrap an explicit controller (the escape hatch mirroring
+    /// [`Simulation::with_controller`](crate::sim::Simulation::with_controller)).
+    /// Standard design points come from
+    /// [`EngineBuilder::build_session`](crate::engine::EngineBuilder::build_session).
+    pub fn with_controller(label: impl Into<String>, ctrl: C) -> Self {
+        Session { ctrl, label: label.into(), pushed: 0 }
+    }
+
+    /// Feed one demand access; returns its demand latency in cycles.
+    #[inline]
+    pub fn push(&mut self, a: Access) -> Cycle {
+        self.pushed += 1;
+        self.ctrl.access(a.set, a.idx, a.line, a.kind, a.now)
+    }
+
+    /// Feed a batch of accesses in order, exactly as `batch.len()`
+    /// [`Session::push`] calls would (stat-for-stat), through the
+    /// controller's batched entry point — one dispatch for the whole
+    /// batch.
+    #[inline]
+    pub fn push_batch(&mut self, batch: &[Access]) -> Completion {
+        self.pushed += batch.len() as u64;
+        Completion { accesses: batch.len() as u64, latency: self.ctrl.access_block(batch) }
+    }
+
+    /// Total accesses pushed since construction (warmup included).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// The session label (workload name for trace-driven runs).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Replace the session label.
+    pub fn set_label(&mut self, label: impl Into<String>) {
+        self.label = label.into();
+    }
+
+    /// The wrapped controller.
+    pub fn controller(&self) -> &C {
+        &self.ctrl
+    }
+
+    /// Mutable access to the wrapped controller (debug hooks, warmup).
+    pub fn controller_mut(&mut self) -> &mut C {
+        &mut self.ctrl
+    }
+
+    /// The controller's set layout (geometry for building accesses).
+    pub fn layout(&self) -> &SetLayout {
+        self.ctrl.layout()
+    }
+
+    /// Live statistics (finalized gauges only after [`Session::finish`]).
+    pub fn stats(&self) -> &Stats {
+        self.ctrl.stats()
+    }
+
+    /// Reset statistics at the end of warmup; structural state is kept.
+    /// The [`Session::pushed`] counter keeps counting across the reset.
+    pub fn reset_stats(&mut self) {
+        self.ctrl.reset_stats();
+    }
+
+    /// Finalize in place and snapshot the report, keeping the session
+    /// alive (used by drivers that add their own counters afterwards).
+    /// Prefer [`Session::finish`] when the session is done.
+    pub fn report(&mut self) -> SimReport {
+        self.ctrl.finalize();
+        SimReport { name: self.label.clone(), stats: self.ctrl.stats().clone() }
+    }
+
+    /// Finalize the controller (end-of-run gauges, verify sweeps) and
+    /// return the end-of-run report.
+    pub fn finish(mut self) -> SimReport {
+        self.report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+    use crate::engine::AnyController;
+    use crate::types::AccessKind;
+
+    fn tiny_cfg() -> crate::config::SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg
+    }
+
+    fn stream(layout: &SetLayout, n: u64) -> Vec<Access> {
+        (0..n)
+            .map(|i| Access {
+                set: (i % 4) as u32,
+                idx: layout.fast_per_set + (i * 37) % 3000,
+                line: 0,
+                kind: if i % 3 == 0 { AccessKind::Write } else { AccessKind::Read },
+                now: i * 700,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn push_batch_matches_push_stat_for_stat() {
+        let cfg = tiny_cfg();
+        let layout = *AnyController::from_config(&cfg, false).layout();
+        let accesses = stream(&layout, 4000);
+
+        let mut single = Session::with_controller("s", AnyController::from_config(&cfg, false));
+        let mut lat_single = 0;
+        for a in &accesses {
+            lat_single += single.push(*a);
+        }
+        let rep_single = single.finish();
+
+        let mut batched = Session::with_controller("b", AnyController::from_config(&cfg, false));
+        let mut lat_batched = 0;
+        for chunk in accesses.chunks(7) {
+            let done = batched.push_batch(chunk);
+            assert_eq!(done.accesses, chunk.len() as u64);
+            lat_batched += done.latency;
+        }
+        assert_eq!(batched.pushed(), 4000);
+        let rep_batched = batched.finish();
+
+        assert_eq!(lat_single, lat_batched);
+        assert_eq!(rep_single.stats.canonical(), rep_batched.stats.canonical());
+    }
+
+    #[test]
+    fn finish_carries_label_and_finalized_gauges() {
+        let cfg = tiny_cfg();
+        let mut s = Session::with_controller("adv_demo", AnyController::from_config(&cfg, false));
+        let accesses = stream(s.layout(), 500);
+        s.push_batch(&accesses);
+        let rep = s.finish();
+        assert_eq!(rep.name, "adv_demo");
+        assert!(rep.stats.metadata_bytes_reserved > 0, "finalize must snapshot gauges");
+    }
+
+    #[test]
+    fn reset_stats_keeps_pushed_counter() {
+        let cfg = tiny_cfg();
+        let mut s = Session::with_controller("w", AnyController::from_config(&cfg, false));
+        let accesses = stream(s.layout(), 100);
+        s.push_batch(&accesses);
+        s.reset_stats();
+        assert_eq!(s.stats().mem_accesses, 0);
+        assert_eq!(s.pushed(), 100);
+    }
+}

@@ -23,7 +23,6 @@ pub mod mea;
 pub mod remap;
 pub mod tagmatch;
 
-use crate::config::{MetadataScheme, Mode, SystemConfig};
 use crate::metadata::SetLayout;
 use crate::stats::Stats;
 use crate::types::{AccessKind, Cycle};
@@ -53,9 +52,10 @@ pub trait Controller {
     /// single [`Controller::access`] calls would (stat-for-stat — the
     /// perf-harness tests lock this equivalence), returning the summed
     /// demand latency. The simulation engine routes posted LLC writebacks
-    /// through this to amortize virtual dispatch; controllers with a
-    /// monomorphic inner loop (e.g. [`remap::RemapController`]) override
-    /// it so the per-access work is devirtualized.
+    /// through this ([`crate::engine::Session::push_batch`]) to amortize
+    /// dispatch; controllers with a monomorphic inner loop (e.g.
+    /// [`remap::RemapController`]) override it so the per-access work is
+    /// fully inlined.
     fn access_block(&mut self, batch: &[Access]) -> Cycle {
         let mut total = 0;
         for a in batch {
@@ -101,43 +101,48 @@ pub trait Controller {
     }
 }
 
-/// Build the controller for a system configuration. `ideal = true` builds
-/// the metadata-free oracle of Fig. 1 regardless of `cfg.hybrid.scheme`.
-/// With `cfg.hybrid.verify` the controller is shadowed by the
-/// [`crate::verify::CheckedController`] oracle.
-pub fn build_controller(cfg: &SystemConfig, ideal: bool) -> Box<dyn Controller> {
-    let inner: Box<dyn Controller> = match (ideal, cfg.hybrid.scheme, cfg.hybrid.mode) {
-        (true, _, _) => Box::new(remap::RemapController::new(cfg, true)),
-        (_, MetadataScheme::TagAlloy, Mode::Cache) => Box::new(alloy::AlloyController::new(cfg)),
-        (_, MetadataScheme::TagLohHill, Mode::Cache) => {
-            Box::new(lohhill::LohHillController::new(cfg))
-        }
-        _ => Box::new(remap::RemapController::new(cfg, false)),
-    };
-    maybe_checked(inner, cfg)
-}
-
-/// Wrap `inner` in the verify oracle when the config asks for it.
-pub fn maybe_checked(inner: Box<dyn Controller>, cfg: &SystemConfig) -> Box<dyn Controller> {
-    if cfg.hybrid.verify {
-        Box::new(crate::verify::CheckedController::new(inner, cfg))
-    } else {
-        inner
+/// Boxed controllers forward every method to the boxed value, overrides
+/// included, so `Box<SomeController>` (or a legacy `Box<dyn Controller>`)
+/// is itself a [`Controller`]. The standard design points route through
+/// the statically dispatched [`crate::engine::AnyController`] instead —
+/// this impl exists for custom controllers and for the dispatch-overhead
+/// comparison benches, which deliberately measure the dynamic path.
+impl<T: Controller + ?Sized> Controller for Box<T> {
+    #[inline]
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        (**self).access(set, idx, line, kind, now)
     }
-}
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::presets::{self, DesignPoint};
+    #[inline]
+    fn access_block(&mut self, batch: &[Access]) -> Cycle {
+        (**self).access_block(batch)
+    }
 
-    #[test]
-    fn factory_builds_every_preset() {
-        for dp in DesignPoint::ALL {
-            let cfg = presets::hbm3_ddr5(*dp);
-            let ideal = *dp == DesignPoint::Ideal;
-            let c = build_controller(&cfg, ideal);
-            assert_eq!(c.stats().mem_accesses, 0);
-        }
+    fn finalize(&mut self) {
+        (**self).finalize()
+    }
+
+    fn reset_stats(&mut self) {
+        (**self).reset_stats()
+    }
+
+    fn stats(&self) -> &Stats {
+        (**self).stats()
+    }
+
+    fn layout(&self) -> &SetLayout {
+        (**self).layout()
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        (**self).debug_translate(set, idx)
+    }
+
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        (**self).debug_check_set(set)
+    }
+
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        (**self).debug_nonidentity_entries(set)
     }
 }

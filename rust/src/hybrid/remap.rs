@@ -944,8 +944,8 @@ impl Controller for RemapController {
         self.do_access(set, idx, line, kind, now)
     }
 
-    /// Batched entry point: one virtual dispatch, then a monomorphic loop
-    /// over [`Self::do_access`] — stat-for-stat identical to `N` single
+    /// Batched entry point: one dispatch, then a monomorphic loop over
+    /// `Self::do_access` — stat-for-stat identical to `N` single
     /// `access` calls (locked by `rust/tests/perf_harness.rs`).
     fn access_block(&mut self, batch: &[Access]) -> Cycle {
         let mut total = 0;

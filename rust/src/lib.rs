@@ -13,13 +13,20 @@
 //!   sector-cache-style `IdCache` holding 1-bit-per-block identity vectors.
 //!
 //! Around those we rebuild every substrate the paper's evaluation depends
-//! on: DRAM/HBM/NVM device timing ([`mem`]), a CPU cache hierarchy
-//! ([`cachesim`]), cache-mode and flat-mode hybrid memory controllers plus
-//! the Alloy-Cache, Loh-Hill-Cache, and MemPod baselines ([`hybrid`]),
-//! calibrated synthetic workload generators standing in for SPEC CPU 2017 /
-//! GAP / silo / memcached ([`workloads`]), a 16-core trace-driven simulation
-//! engine ([`sim`]), and an experiment coordinator that regenerates every
-//! figure in the paper ([`coordinator`]).
+//! on: DRAM/HBM/NVM device timing, a CPU cache hierarchy, cache-mode and
+//! flat-mode hybrid memory controllers plus the Alloy-Cache, Loh-Hill-Cache,
+//! and MemPod baselines ([`hybrid`]), calibrated synthetic workload
+//! generators standing in for SPEC CPU 2017 / GAP / silo / memcached
+//! ([`workloads`]), a 16-core trace-driven simulation engine ([`sim`]), and
+//! an experiment coordinator that regenerates every figure in the paper
+//! ([`coordinator`]).
+//!
+//! The public front door is [`engine`]: a typed [`engine::EngineBuilder`]
+//! assembles every run (design point, memory preset, workload, and the
+//! `ideal` / `verify` / `tag_match` toggles), and the enum-dispatched
+//! [`engine::AnyController`] keeps virtual dispatch off the per-access hot
+//! path for every design point. Streaming drivers feed accesses through
+//! [`engine::Session`].
 //!
 //! The AOT-compiled JAX/Pallas trace generator is loaded through
 //! [`runtime`] (PJRT CPU client); Python never runs at simulation time.
@@ -27,21 +34,22 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use trimma::config::presets;
-//! use trimma::sim::Simulation;
+//! use trimma::prelude::*;
 //!
-//! let cfg = presets::hbm3_ddr5(presets::DesignPoint::TrimmaCache);
-//! let mut sim = Simulation::new(&cfg, trimma::workloads::by_name("gap_pr", &cfg).unwrap());
-//! let report = sim.run();
+//! let report = EngineBuilder::new(DesignPoint::TrimmaCache)
+//!     .workload("gap_pr")
+//!     .run()
+//!     .unwrap();
 //! println!("IPC-proxy perf: {:.4}", report.performance());
 //! ```
 
 pub mod bench_util;
-pub mod cachesim;
+pub(crate) mod cachesim;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod hybrid;
-pub mod mem;
+pub(crate) mod mem;
 pub mod metadata;
 pub mod runtime;
 pub mod sim;
@@ -51,3 +59,19 @@ pub mod verify;
 pub mod workloads;
 
 pub use config::SystemConfig;
+pub use engine::{AnyController, EngineBuilder, EngineError, Session};
+
+/// One-stop imports for driving the simulator: the engine front door plus
+/// the handful of types every driver touches.
+pub mod prelude {
+    pub use crate::config::presets::DesignPoint;
+    pub use crate::config::SystemConfig;
+    pub use crate::engine::{
+        AnyController, Completion, EngineBuilder, EngineError, MemoryPreset, Session,
+    };
+    pub use crate::hybrid::{Access, Controller};
+    pub use crate::sim::{SimReport, Simulation};
+    pub use crate::stats::Stats;
+    pub use crate::types::AccessKind;
+    pub use crate::workloads::Workload;
+}

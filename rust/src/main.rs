@@ -3,7 +3,7 @@
 //! ```text
 //! trimma list                               available workloads / presets
 //! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
-//!            [--accesses N] [--ideal] [--ratio R] [--block B]
+//!            [--accesses N] [--ideal] [--verify] [--ratio R] [--block B]
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
@@ -12,6 +12,7 @@
 //! trimma bench-check --report bench.json    validate a report's schema
 //! trimma bench-compare --baseline B --new N [--warn-pct 10] [--fail-pct 30]
 //!                                           CI regression gate
+//! trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
 //! trimma analyze --workload gap_pr          hotness analysis via the AOT
 //!                                           artifact (PJRT; no python)
 //! trimma dump-config --design trimma-c [--mem hbm3+ddr5]
@@ -19,20 +20,21 @@
 
 use trimma::config::presets::{self, DesignPoint};
 use trimma::config::SystemConfig;
-use trimma::coordinator::{figures, fmt, pct, run_job, Job, JobKind};
+use trimma::coordinator::{bench::dispatch_deltas, figures, fmt, pct, run_job, Job};
 
 const USAGE: &str = "\
 trimma — Trimma (PACT'24) hybrid-memory metadata simulator
 
   trimma list                               workloads / designs / figures
   trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
-             [--accesses N] [--cores N] [--ideal] [--ratio R] [--block B]
+             [--accesses N] [--cores N] [--ideal] [--verify] [--ratio R] [--block B]
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
   trimma bench-check --report bench.json
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
+  trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
   trimma analyze --workload gap_pr          AOT hotness artifact via PJRT
   trimma dump-config --design trimma-c [--mem hbm3+ddr5]";
 
@@ -54,6 +56,7 @@ fn main() {
         "bench" => bench(&get, &has),
         "bench-check" => bench_check(&get),
         "bench-compare" => bench_compare(&get),
+        "bench-dispatch" => bench_dispatch(&get),
         "analyze" => analyze(&get),
         "dump-config" => {
             let cfg = build_cfg(&get);
@@ -114,18 +117,22 @@ fn list() {
     println!("memories:  hbm3+ddr5 ddr5+nvm");
     println!("figures:   {}", figures::ALL_FIGURES.join(" "));
     println!("workloads:");
-    for w in trimma::workloads::SUITE {
+    for w in trimma::workloads::all_names() {
         println!("  {w}");
     }
 }
 
 fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
-    let cfg = build_cfg(get);
+    let mut cfg = build_cfg(get);
+    cfg.hybrid.verify |= has("--verify");
     let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
-    let kind = if has("--ideal") { JobKind::Ideal } else { JobKind::Normal };
-    let job = Job { label: format!("{}:{}", cfg.name, wl), cfg, workload: wl, kind };
+    let mut job = Job::new(format!("{}:{}", cfg.name, wl), cfg, &wl);
+    job.ideal = has("--ideal");
     let t0 = std::time::Instant::now();
-    let rep = run_job(&job);
+    let rep = run_job(&job).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     let dt = t0.elapsed();
     let s = &rep.stats;
     println!("== {} / {} ==", job.cfg.name, rep.name);
@@ -169,6 +176,7 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
         report.tag,
         if quick { ", quick" } else { "" }
     );
+    print_dispatch_deltas(&report);
     if let Some(path) = get("--json") {
         report.validate().unwrap_or_else(|e| {
             eprintln!("internal error: generated report fails its own schema: {e}");
@@ -180,6 +188,33 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
         });
         println!("wrote {path}");
     }
+}
+
+/// Print the dyn-vs-enum dispatch comparison from a report's paired
+/// `<base>/enum` + `<base>/dyn` hot-path records (positive delta = the
+/// boxed `dyn Controller` path is slower than the enum-dispatched one).
+fn print_dispatch_deltas(report: &trimma::bench_util::BenchReport) {
+    let deltas = dispatch_deltas(report);
+    if deltas.is_empty() {
+        println!("dispatch delta: no enum/dyn record pairs in this report");
+        return;
+    }
+    for d in deltas {
+        println!(
+            "dispatch delta {:<28} enum {:>8.1} ns  dyn {:>8.1} ns  ({:+.1}% for dyn)",
+            d.base, d.enum_ns, d.dyn_ns, d.delta_pct
+        );
+    }
+}
+
+/// `trimma bench-dispatch`: re-read a bench report and print the
+/// dyn-vs-enum dispatch delta (the CI bench-smoke job's summary step).
+fn bench_dispatch(get: &dyn Fn(&str) -> Option<String>) {
+    let path = get("--report").unwrap_or_else(|| {
+        eprintln!("need --report <bench.json>");
+        std::process::exit(2);
+    });
+    print_dispatch_deltas(&load_report(&path));
 }
 
 fn load_report(path: &str) -> trimma::bench_util::BenchReport {
@@ -275,13 +310,16 @@ fn sweep(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     for f in figs {
         let t0 = std::time::Instant::now();
         match figures::run_figure(&f, scale, threads) {
-            Some(tables) => {
+            Ok(tables) => {
                 for t in tables {
                     println!("{}", t.markdown());
                 }
                 eprintln!("[{f}] done in {:.1}s (CSV under results/)", t0.elapsed().as_secs_f64());
             }
-            None => eprintln!("unknown figure '{f}' (see `trimma list`)"),
+            Err(e) => {
+                eprintln!("{e} (see `trimma list`)");
+                std::process::exit(2);
+            }
         }
     }
 }
@@ -298,13 +336,13 @@ fn compare(get: &dyn Fn(&str) -> Option<String>) {
         if let Some(n) = get("--accesses") {
             cfg.workload.accesses_per_core = n.parse().expect("--accesses");
         }
-        let job = Job {
-            label: format!("{d}:{wl}"),
-            cfg,
-            workload: wl.clone(),
-            kind: if d.trim() == "ideal" { JobKind::Ideal } else { JobKind::Normal },
-        };
-        rows.push((d.trim().to_string(), run_job(&job)));
+        let mut job = Job::new(format!("{d}:{wl}"), cfg, &wl);
+        job.ideal = d.trim() == "ideal";
+        let rep = run_job(&job).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        rows.push((d.trim().to_string(), rep));
     }
     let base = rows[0].1.performance();
     println!(

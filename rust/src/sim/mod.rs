@@ -3,7 +3,7 @@
 //!
 //! Each core is an in-order stream: it retires `gap_instrs` non-memory
 //! instructions (at [`NONMEM_CPI`] cycles each), then issues one memory
-//! access through its private L1/L2 and the shared LLC ([`crate::cachesim`]);
+//! access through its private L1/L2 and the shared LLC (`crate::cachesim`);
 //! LLC misses go to the hybrid memory controller, whose demand latency
 //! stalls the core. Dirty LLC evictions are posted writes: they reach the
 //! controller (and occupy memory banks) without stalling.
@@ -12,12 +12,20 @@
 //! clock, so cross-core contention on shared banks is modelled in rough
 //! timestamp order. Performance = instructions / slowest-core-cycles, whose
 //! ratio between designs is the paper's weighted-speedup comparison.
+//!
+//! The controller side is a streaming [`Session`]: the trace/cache front
+//! end produces controller-level [`Access`]es and pushes them through
+//! [`Session::push`] / [`Session::push_batch`]. [`Simulation`] is generic
+//! over the controller type (defaulting to the enum-dispatched
+//! [`AnyController`]), so the whole per-access chain monomorphizes — no
+//! virtual dispatch on the hot path for any design point.
 
 pub mod mapper;
 
 use crate::cachesim::{Hierarchy, MAX_WRITEBACKS};
 use crate::config::SystemConfig;
-use crate::hybrid::{build_controller, Access, Controller};
+use crate::engine::{AnyController, Session};
+use crate::hybrid::{Access, Controller};
 use crate::stats::Stats;
 use crate::types::{AccessKind, Cycle};
 use crate::workloads::Workload;
@@ -27,9 +35,9 @@ use mapper::AddrMapper;
 pub const NONMEM_CPI: f64 = 0.4;
 
 /// A complete single-workload simulation.
-pub struct Simulation {
+pub struct Simulation<C: Controller = AnyController> {
     hierarchy: Hierarchy,
-    ctrl: Box<dyn Controller>,
+    session: Session<C>,
     mapper: AddrMapper,
     workload: Box<dyn Workload>,
     clocks: Vec<Cycle>,
@@ -53,26 +61,32 @@ impl SimReport {
     }
 }
 
-impl Simulation {
+impl Simulation<AnyController> {
+    /// Simulate `cfg`'s design point on `workload`. Prefer assembling
+    /// through [`crate::engine::EngineBuilder`], which also resolves the
+    /// workload by name.
     pub fn new(cfg: &SystemConfig, workload: Box<dyn Workload>) -> Self {
-        Self::with_controller(cfg, workload, build_controller(cfg, false))
+        Self::with_controller(cfg, workload, AnyController::from_config(cfg, false))
     }
 
     /// Build with the metadata-free Ideal oracle (Fig. 1's upper bound).
     pub fn new_ideal(cfg: &SystemConfig, workload: Box<dyn Workload>) -> Self {
-        Self::with_controller(cfg, workload, build_controller(cfg, true))
+        Self::with_controller(cfg, workload, AnyController::from_config(cfg, true))
     }
+}
 
-    pub fn with_controller(
-        cfg: &SystemConfig,
-        workload: Box<dyn Workload>,
-        ctrl: Box<dyn Controller>,
-    ) -> Self {
+impl<C: Controller> Simulation<C> {
+    /// Build with an explicit controller (custom [`Controller`]
+    /// implementations plug in here; the dispatch-parity tests drive a
+    /// boxed `dyn Controller` through the same loop this way).
+    pub fn with_controller(cfg: &SystemConfig, workload: Box<dyn Workload>, ctrl: C) -> Self {
         let cores = cfg.workload.cores;
+        let mapper = AddrMapper::new(*ctrl.layout(), cfg.hybrid.mode);
+        let session = Session::with_controller(workload.name().to_string(), ctrl);
         Simulation {
             hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
-            mapper: AddrMapper::new(*ctrl.layout(), cfg.hybrid.mode),
-            ctrl,
+            mapper,
+            session,
             workload,
             clocks: vec![0; cores as usize],
             instrs: vec![0; cores as usize],
@@ -81,6 +95,11 @@ impl Simulation {
             warmup_per_core: cfg.workload.warmup_per_core,
             block_bytes: cfg.hybrid.block_bytes,
         }
+    }
+
+    /// The underlying streaming session (controller, layout, stats).
+    pub fn session(&self) -> &Session<C> {
+        &self.session
     }
 
     /// 64 B line offset within the migration block.
@@ -101,11 +120,17 @@ impl Simulation {
         if hr.llc_miss {
             let (set, idx) = self.mapper.translate(acc.addr);
             let line = self.line_of(acc.addr);
-            lat += self.ctrl.access(set, idx, line, acc.kind, now + hr.latency);
+            lat += self.session.push(Access {
+                set,
+                idx,
+                line,
+                kind: acc.kind,
+                now: now + hr.latency,
+            });
         }
         // Posted writebacks: charge banks/stats, do not stall the core.
-        // Batched through the block entry point — one virtual dispatch for
-        // the whole (inline, at most MAX_WRITEBACKS-long) list.
+        // Batched through the session's block entry point — one dispatch
+        // for the whole (inline, at most MAX_WRITEBACKS-long) list.
         let wbs = hr.writebacks();
         if !wbs.is_empty() {
             let mut batch = [Access::default(); MAX_WRITEBACKS];
@@ -119,7 +144,7 @@ impl Simulation {
                     now: now + lat,
                 };
             }
-            self.ctrl.access_block(&batch[..wbs.len()]);
+            self.session.push_batch(&batch[..wbs.len()]);
         }
         self.clocks[core] += lat;
         let retired = acc.gap_instrs as u64 + 1;
@@ -135,7 +160,7 @@ impl Simulation {
                 self.step(core);
             }
         }
-        self.ctrl.reset_stats();
+        self.session.reset_stats();
         let warm_clocks = self.clocks.clone();
         for i in self.instrs.iter_mut() {
             *i = 0;
@@ -161,26 +186,25 @@ impl Simulation {
             }
         }
 
-        self.ctrl.finalize();
-        let mut stats = self.ctrl.stats().clone();
-        stats.instructions = self.instrs.iter().sum();
-        stats.max_core_cycles = self
+        let mut rep = self.session.report();
+        rep.stats.instructions = self.instrs.iter().sum();
+        rep.stats.max_core_cycles = self
             .clocks
             .iter()
             .zip(&warm_clocks)
             .map(|(c, w)| c - w)
             .max()
             .unwrap_or(0);
-        stats.total_core_cycles = self
+        rep.stats.total_core_cycles = self
             .clocks
             .iter()
             .zip(&warm_clocks)
             .map(|(c, w)| c - w)
             .sum();
-        stats.l1_hits = self.hierarchy.l1_hits();
-        stats.l2_hits = self.hierarchy.l2_hits();
-        stats.llc_hits = self.hierarchy.llc_hits();
-        SimReport { name: self.workload.name().to_string(), stats }
+        rep.stats.l1_hits = self.hierarchy.l1_hits();
+        rep.stats.l2_hits = self.hierarchy.l2_hits();
+        rep.stats.llc_hits = self.hierarchy.llc_hits();
+        rep
     }
 }
 
@@ -261,5 +285,16 @@ mod tests {
             let rep = sim.run();
             assert!(rep.stats.mem_accesses > 0, "{dp:?}");
         }
+    }
+
+    #[test]
+    fn boxed_dyn_controller_still_plugs_in() {
+        // The generic loop accepts a legacy boxed trait object; parity
+        // with the enum path is locked in tests/engine_parity.rs.
+        let cfg = tiny_cfg(DesignPoint::TrimmaCache);
+        let wl = crate::workloads::by_name("gap_pr", &cfg).unwrap();
+        let ctrl: Box<dyn Controller> = Box::new(AnyController::from_config(&cfg, false));
+        let rep = Simulation::with_controller(&cfg, wl, ctrl).run();
+        assert!(rep.stats.mem_accesses > 0);
     }
 }

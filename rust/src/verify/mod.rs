@@ -18,10 +18,13 @@
 //!   implies bijectivity — no lost, no aliased blocks) plus a cross-check
 //!   of the table's own occupancy bookkeeping against the entries the
 //!   sweep observes.
-//! * [`CheckedController`] — a transparent [`Controller`] wrapper wiring
-//!   the oracle into any design point. Enabled by
-//!   `cfg.hybrid.verify = true` (see [`crate::config::presets::with_verify`]);
-//!   tests and debug runs pay the cost, benches and figure sweeps do not.
+//! * [`CheckedController`] — a transparent verifying wrapper, generic over
+//!   the wrapped controller so the checked path stays statically
+//!   dispatched. The engine wires it in as the `Checked` variant of
+//!   [`crate::engine::AnyController`] whenever `cfg.hybrid.verify = true`
+//!   (see [`crate::config::presets::with_verify`] and
+//!   [`crate::engine::EngineBuilder::verify`]); tests and debug runs pay
+//!   the cost, benches and figure sweeps do not.
 //!
 //! Controllers expose three debug hooks ([`Controller::debug_translate`],
 //! [`Controller::debug_check_set`], [`Controller::debug_nonidentity_entries`]);
@@ -35,6 +38,7 @@
 //! seeded mutation in `hybrid/remap.rs` (e.g. skipping the inverse-entry
 //! write on a swap) fails the scenario tests immediately.
 
+use crate::engine::AnyController;
 use crate::hybrid::Controller;
 use crate::metadata::SetLayout;
 use crate::stats::Stats;
@@ -77,7 +81,8 @@ impl Snap {
 
 /// The ground-truth remap model: a dead-simple view of what a correct
 /// logical->physical map must look like, checked against whatever the
-/// controller reports through its debug hooks.
+/// controller reports through its debug hooks. All checks are generic
+/// over the controller type (`?Sized`, so `&dyn Controller` works too).
 #[derive(Debug, Clone)]
 pub struct ReferenceRemap {
     layout: SetLayout,
@@ -90,9 +95,9 @@ impl ReferenceRemap {
     }
 
     /// Check one observed mapping `idx -> device` of `set`.
-    fn check_mapping(
+    fn check_mapping<C: Controller + ?Sized>(
         &self,
-        ctrl: &dyn Controller,
+        ctrl: &C,
         set: u32,
         idx: u64,
         device: u64,
@@ -126,9 +131,9 @@ impl ReferenceRemap {
     /// immediately before the access (what the lookup must have resolved);
     /// `pre`/`post` are the stats snapshots around it.
     #[allow(clippy::too_many_arguments)]
-    fn check_access(
+    fn check_access<C: Controller + ?Sized>(
         &self,
-        ctrl: &dyn Controller,
+        ctrl: &C,
         set: u32,
         idx: u64,
         kind: AccessKind,
@@ -206,7 +211,7 @@ impl ReferenceRemap {
     /// space (=> the mapping is a bijection; no block is lost or aliased),
     /// tier-crossing for every non-identity entry, and agreement between
     /// the table's occupancy bookkeeping and the observed entries.
-    pub fn sweep_set(&self, ctrl: &dyn Controller, set: u32) {
+    pub fn sweep_set<C: Controller + ?Sized>(&self, ctrl: &C, set: u32) {
         let k = self.layout.indices_per_set();
         if ctrl.debug_translate(set, 0).is_none() {
             return; // tag-matching baseline: nothing to sweep
@@ -234,16 +239,22 @@ impl ReferenceRemap {
 }
 
 /// Transparent verifying wrapper around any controller. See module docs.
-pub struct CheckedController {
-    inner: Box<dyn Controller>,
+///
+/// Generic over the wrapped controller (default: the enum-dispatched
+/// [`AnyController`], which nests it as its `Checked` variant), so even
+/// the verified path involves no `Box<dyn Controller>`. Custom mutant
+/// controllers plug in directly in tests: `CheckedController::new(mutant,
+/// &cfg)`.
+pub struct CheckedController<C: Controller = AnyController> {
+    inner: C,
     oracle: ReferenceRemap,
     layout: SetLayout,
     accesses: u64,
     sweep_cursor: u32,
 }
 
-impl CheckedController {
-    pub fn new(inner: Box<dyn Controller>, cfg: &crate::config::SystemConfig) -> Self {
+impl<C: Controller> CheckedController<C> {
+    pub fn new(inner: C, cfg: &crate::config::SystemConfig) -> Self {
         let layout = *inner.layout();
         CheckedController {
             oracle: ReferenceRemap::new(layout, cfg.hybrid.subblock),
@@ -254,31 +265,35 @@ impl CheckedController {
         }
     }
 
+    /// The wrapped controller.
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
     /// Run the full verification (every set) immediately.
     pub fn verify_all_sets(&self) {
         for set in 0..self.layout.num_sets {
-            self.oracle.sweep_set(&*self.inner, set);
+            self.oracle.sweep_set(&self.inner, set);
         }
     }
 }
 
-impl Controller for CheckedController {
+impl<C: Controller> Controller for CheckedController<C> {
     fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
         let pre = Snap::of(self.inner.stats());
         let pre_dev = self.inner.debug_translate(set, idx);
         if let Some(d0) = pre_dev {
-            self.oracle.check_mapping(&*self.inner, set, idx, d0, "before access");
+            self.oracle.check_mapping(&self.inner, set, idx, d0, "before access");
         }
         let lat = self.inner.access(set, idx, line, kind, now);
         let post = Snap::of(self.inner.stats());
-        self.oracle
-            .check_access(&*self.inner, set, idx, kind, lat, pre_dev, pre, post);
+        self.oracle.check_access(&self.inner, set, idx, kind, lat, pre_dev, pre, post);
 
         self.accesses += 1;
         if self.accesses % SWEEP_EVERY == 0 {
             let s = self.sweep_cursor;
             self.sweep_cursor = (self.sweep_cursor + 1) % self.layout.num_sets;
-            self.oracle.sweep_set(&*self.inner, s);
+            self.oracle.sweep_set(&self.inner, s);
         }
         lat
     }
@@ -317,7 +332,7 @@ impl Controller for CheckedController {
 mod tests {
     use super::*;
     use crate::config::presets::{self, DesignPoint};
-    use crate::hybrid::{build_controller, Controller};
+    use crate::engine::AnyController;
 
     fn small(dp: DesignPoint) -> crate::config::SystemConfig {
         let mut cfg = presets::hbm3_ddr5(dp);
@@ -332,9 +347,9 @@ mod tests {
     fn checked_controller_is_transparent() {
         // Same accesses, same latencies and stats as the bare controller.
         let mut cfg = small(DesignPoint::TrimmaCache);
-        let mut checked = build_controller(&cfg, false);
+        let mut checked = AnyController::from_config(&cfg, false);
         cfg.hybrid.verify = false;
-        let mut bare = build_controller(&cfg, false);
+        let mut bare = AnyController::from_config(&cfg, false);
         let f = bare.layout().fast_per_set;
         let mut t = 0;
         for n in 0..500u64 {
@@ -353,7 +368,7 @@ mod tests {
     #[test]
     fn oracle_accepts_correct_controller_storm() {
         let cfg = small(DesignPoint::TrimmaCache);
-        let mut c = build_controller(&cfg, false);
+        let mut c = AnyController::from_config(&cfg, false);
         let f = c.layout().fast_per_set;
         let mut rng = crate::types::Rng64::new(0xFEED);
         let mut t = 0;
@@ -370,7 +385,7 @@ mod tests {
     #[test]
     fn oracle_sweeps_flat_mode_swaps() {
         let cfg = small(DesignPoint::TrimmaFlat);
-        let mut c = build_controller(&cfg, false);
+        let mut c = AnyController::from_config(&cfg, false);
         let f = c.layout().fast_per_set;
         let mut t = 0;
         // Hammer a few slow blocks across MEA epochs to force swaps, then

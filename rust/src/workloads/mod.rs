@@ -10,8 +10,8 @@
 //! `(stream, step)`* — a counter-based hash pipeline — which is exactly
 //! what lets the same algorithm run as the AOT-compiled Pallas kernel
 //! (python/compile/kernels/trace_gen.py) loaded through
-//! [`crate::runtime`]; [`pjrt::PjrtWorkload`] wraps that artifact behind
-//! the same [`Workload`] trait.
+//! [`crate::runtime`]; `pjrt::PjrtWorkload` (behind the `pjrt` feature)
+//! wraps that artifact behind the same [`Workload`] trait.
 
 pub mod adversarial;
 #[cfg(feature = "pjrt")]
@@ -57,15 +57,53 @@ pub const SUITE: &[&str] = &[
     "ycsb_b",
 ];
 
+/// Every buildable workload name: the calibrated suite ([`SUITE`]) first,
+/// then the adversarial scenarios ([`adversarial::ADVERSARIAL`]).
+pub fn all_names() -> impl Iterator<Item = &'static str> {
+    SUITE.iter().chain(adversarial::ADVERSARIAL.iter()).copied()
+}
+
+/// The error returned by [`by_name`] for a name that is neither in the
+/// calibrated suite nor an adversarial scenario. Its `Display` output
+/// lists every valid name, so surfacing it verbatim (as the CLI does) is
+/// self-documenting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownWorkload {
+    /// The name that failed to resolve.
+    pub name: String,
+}
+
+impl UnknownWorkload {
+    /// Wrap the offending name.
+    pub fn new(name: impl Into<String>) -> Self {
+        UnknownWorkload { name: name.into() }
+    }
+}
+
+impl std::fmt::Display for UnknownWorkload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown workload '{}'; valid names: {}",
+            self.name,
+            all_names().collect::<Vec<_>>().join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownWorkload {}
+
 /// Build a workload by name for a system configuration (footprints scale
 /// with the configured capacities). Covers the calibrated suite and the
-/// `adv_*` adversarial scenarios ([`adversarial::ADVERSARIAL`]). Returns
-/// `None` for unknown names.
+/// `adv_*` adversarial scenarios ([`adversarial::ADVERSARIAL`]); unknown
+/// names return an [`UnknownWorkload`] error listing the valid ones.
 pub fn by_name(
     name: &str,
     cfg: &crate::config::SystemConfig,
-) -> Option<Box<dyn Workload>> {
-    suite::build(name, cfg).or_else(|| adversarial::build(name, cfg))
+) -> Result<Box<dyn Workload>, UnknownWorkload> {
+    suite::build(name, cfg)
+        .or_else(|| adversarial::build(name, cfg))
+        .ok_or_else(|| UnknownWorkload::new(name))
 }
 
 #[cfg(test)]
@@ -77,11 +115,16 @@ mod tests {
     fn suite_is_complete() {
         let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
         for name in SUITE {
-            let wl = by_name(name, &cfg).unwrap_or_else(|| panic!("missing {name}"));
+            let wl = by_name(name, &cfg).unwrap_or_else(|e| panic!("missing {name}: {e}"));
             assert_eq!(wl.name(), *name);
             assert!(wl.footprint_bytes() > 0);
         }
-        assert!(by_name("nonexistent", &cfg).is_none());
+        let err = by_name("nonexistent", &cfg).unwrap_err();
+        assert_eq!(err.name, "nonexistent");
+        let msg = err.to_string();
+        for name in all_names() {
+            assert!(msg.contains(name), "error must list '{name}'");
+        }
     }
 
     #[test]

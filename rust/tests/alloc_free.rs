@@ -13,7 +13,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use trimma::config::presets::{self, DesignPoint};
-use trimma::hybrid::{build_controller, Controller};
+use trimma::engine::AnyController;
+use trimma::hybrid::Controller;
 use trimma::types::{AccessKind, Rng64};
 
 static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
@@ -46,7 +47,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTING: CountingAlloc = CountingAlloc;
 
-fn drive(c: &mut Box<dyn Controller>, rng: &mut Rng64, t: &mut u64, n: u64, span: u64) {
+fn drive<C: Controller>(c: &mut C, rng: &mut Rng64, t: &mut u64, n: u64, span: u64) {
     let f = c.layout().fast_per_set;
     let sets = c.layout().num_sets as u64;
     for _ in 0..n {
@@ -65,7 +66,8 @@ fn translate_path_is_allocation_free_in_steady_state() {
         cfg.hybrid.fast_bytes = 1 << 20;
         cfg.hybrid.slow_bytes = 32 << 20;
         cfg.hybrid.num_sets = 4;
-        let mut c = build_controller(&cfg, false);
+        // The enum-dispatched engine path must stay allocation-free too.
+        let mut c = AnyController::from_config(&cfg, false);
         let span = c.layout().slow_per_set.min(6000);
         let mut rng = Rng64::new(0xA110C ^ dp as u64);
         let mut t = 0u64;

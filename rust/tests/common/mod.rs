@@ -34,8 +34,7 @@ pub fn tiny(dp: DesignPoint) -> SystemConfig {
 /// Run `dp` on workload `wl` under `cfg` (handles the Ideal oracle's
 /// special construction) and return the end-of-run stats.
 pub fn run(dp: DesignPoint, cfg: &SystemConfig, wl: &str) -> Stats {
-    let w = workloads::by_name(wl, cfg)
-        .unwrap_or_else(|| panic!("unknown workload {wl}"));
+    let w = workloads::by_name(wl, cfg).unwrap_or_else(|e| panic!("{e}"));
     let mut sim = if dp == DesignPoint::Ideal {
         Simulation::new_ideal(cfg, w)
     } else {

@@ -7,7 +7,7 @@
 mod common;
 
 use trimma::config::presets::DesignPoint;
-use trimma::coordinator::{run_jobs, Job, JobKind};
+use trimma::coordinator::{run_jobs, Job};
 
 #[test]
 fn every_design_point_is_run_to_run_deterministic() {
@@ -38,15 +38,14 @@ fn run_jobs_thread_count_invariant() {
     // on one worker or on every core.
     let jobs: Vec<Job> = DesignPoint::ALL
         .iter()
-        .map(|dp| Job {
-            label: dp.label().to_string(),
-            cfg: common::tiny(*dp),
-            workload: "adv_pointer_chase".to_string(),
-            kind: if *dp == DesignPoint::Ideal { JobKind::Ideal } else { JobKind::Normal },
+        .map(|dp| {
+            let mut job = Job::new(dp.label(), common::tiny(*dp), "adv_pointer_chase");
+            job.ideal = *dp == DesignPoint::Ideal;
+            job
         })
         .collect();
-    let serial = run_jobs(&jobs, 1);
-    let parallel = run_jobs(&jobs, 0); // 0 = all cores
+    let serial = run_jobs(&jobs, 1).unwrap();
+    let parallel = run_jobs(&jobs, 0).unwrap(); // 0 = all cores
     assert_eq!(serial.len(), parallel.len());
     for ((s, p), job) in serial.iter().zip(&parallel).zip(&jobs) {
         assert_eq!(

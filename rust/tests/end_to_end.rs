@@ -4,7 +4,7 @@
 
 use trimma::config::presets::{self, DesignPoint};
 use trimma::config::{MetadataScheme, SystemConfig};
-use trimma::coordinator::{figures, run_job, run_jobs, Job, JobKind};
+use trimma::coordinator::{figures, run_job, run_jobs, Job};
 use trimma::sim::Simulation;
 use trimma::workloads;
 
@@ -105,7 +105,7 @@ fn capacity_ratio_sweep_runs() {
 
 #[test]
 fn figure_harness_produces_tables_and_csv() {
-    let tables = figures::run_figure("fig9", 0.01, 0).unwrap();
+    let tables = figures::run_figure("fig9", 0.01, 0).expect("fig9 must run");
     assert_eq!(tables.len(), 1);
     assert!(tables[0].columns.contains(&"irt(trimma)".to_string()));
     assert_eq!(tables[0].rows.len(), workloads::SUITE.len() + 1); // + MEAN
@@ -116,15 +116,10 @@ fn figure_harness_produces_tables_and_csv() {
 fn parallel_jobs_deterministic() {
     let jobs: Vec<Job> = ["gap_pr", "ycsb_b", "519.lbm_r"]
         .iter()
-        .map(|w| Job {
-            label: w.to_string(),
-            cfg: small(DesignPoint::TrimmaFlat, 3000),
-            workload: w.to_string(),
-            kind: JobKind::Normal,
-        })
+        .map(|w| Job::new(w.to_string(), small(DesignPoint::TrimmaFlat, 3000), w))
         .collect();
-    let a = run_jobs(&jobs, 3);
-    let b: Vec<_> = jobs.iter().map(run_job).collect();
+    let a = run_jobs(&jobs, 3).unwrap();
+    let b: Vec<_> = jobs.iter().map(|j| run_job(j).unwrap()).collect();
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.stats.max_core_cycles, y.stats.max_core_cycles);
         assert_eq!(x.stats.fast_served, y.stats.fast_served);

@@ -1,0 +1,94 @@
+//! Dispatch parity: the enum-dispatched `engine::AnyController` must
+//! reproduce the seed `Box<dyn Controller>` path byte for byte.
+//!
+//! The golden harness (`tests/golden.rs`) locks the enum path's stat
+//! vectors against `tests/golden/stats.json`; this file closes the loop
+//! by driving the *same* controllers through a boxed `dyn Controller`
+//! (the pre-engine dispatch mechanism, kept alive by the blanket
+//! `impl Controller for Box<T>`) and asserting canonical stat equality on
+//! every design point x adversarial scenario. Together they prove the
+//! devirtualization refactor changed dispatch only — not one counter.
+
+mod common;
+
+use trimma::config::presets::DesignPoint;
+use trimma::engine::{AnyController, EngineBuilder};
+use trimma::hybrid::Controller;
+use trimma::sim::Simulation;
+use trimma::stats::Stats;
+use trimma::workloads::{self, adversarial::ADVERSARIAL};
+
+/// Run `dp` on `wl` with the controller driven through a boxed trait
+/// object — the seed dispatch path.
+fn run_dyn(dp: DesignPoint, cfg: &trimma::config::SystemConfig, wl: &str) -> Stats {
+    let w = workloads::by_name(wl, cfg).unwrap_or_else(|e| panic!("{e}"));
+    let ctrl: Box<dyn Controller> =
+        Box::new(AnyController::from_config(cfg, dp == DesignPoint::Ideal));
+    Simulation::with_controller(cfg, w, ctrl).run().stats
+}
+
+#[test]
+fn enum_dispatch_matches_dyn_dispatch_byte_for_byte() {
+    for dp in DesignPoint::ALL {
+        for sc in ADVERSARIAL {
+            let cfg = common::tiny(*dp);
+            let enum_stats = common::run(*dp, &cfg, sc).canonical();
+            let dyn_stats = run_dyn(*dp, &cfg, sc).canonical();
+            assert_eq!(
+                enum_stats, dyn_stats,
+                "{}/{sc}: enum-dispatched engine diverged from the boxed dyn path",
+                dp.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn builder_route_matches_direct_construction() {
+    // EngineBuilder -> Session -> report must equal the hand-assembled
+    // Simulation::new path on a representative design point per mode.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::AlloyCache] {
+        let cfg = common::tiny(dp);
+        let direct = common::run(dp, &cfg, "adv_set_thrash").canonical();
+        let built = EngineBuilder::from_config(cfg.clone())
+            .workload("adv_set_thrash")
+            .run()
+            .unwrap()
+            .stats
+            .canonical();
+        assert_eq!(direct, built, "{}: builder route diverged", dp.label());
+    }
+}
+
+#[test]
+fn builder_ideal_toggle_matches_new_ideal() {
+    let cfg = common::tiny(DesignPoint::Ideal);
+    let direct = common::run(DesignPoint::Ideal, &cfg, "adv_drift").canonical();
+    let built = EngineBuilder::from_config(cfg.clone())
+        .workload("adv_drift")
+        .ideal(true)
+        .run()
+        .unwrap()
+        .stats
+        .canonical();
+    assert_eq!(direct, built, "ideal toggle must match Simulation::new_ideal");
+}
+
+#[test]
+fn verify_toggle_is_observation_only_through_builder() {
+    let cfg = common::tiny(DesignPoint::TrimmaFlat);
+    let plain = EngineBuilder::from_config(cfg.clone())
+        .workload("adv_migration_storm")
+        .run()
+        .unwrap()
+        .stats
+        .canonical();
+    let verified = EngineBuilder::from_config(cfg)
+        .workload("adv_migration_storm")
+        .verify(true)
+        .run()
+        .unwrap()
+        .stats
+        .canonical();
+    assert_eq!(plain, verified, "the oracle must not perturb a single counter");
+}

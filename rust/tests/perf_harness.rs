@@ -7,7 +7,8 @@ mod common;
 
 use trimma::bench_util::{BenchReport, Record, SCHEMA_VERSION};
 use trimma::config::presets::{self, DesignPoint};
-use trimma::hybrid::{build_controller, Access, Controller};
+use trimma::engine::AnyController;
+use trimma::hybrid::{Access, Controller};
 use trimma::types::{AccessKind, Rng64};
 use trimma::workloads::adversarial::ADVERSARIAL;
 
@@ -91,14 +92,14 @@ fn access_block_matches_single_accesses_stat_for_stat() {
         let cfg = small_cfg(dp);
         let accesses = stream(&cfg, 6000);
 
-        let mut single = build_controller(&cfg, false);
+        let mut single = AnyController::from_config(&cfg, false);
         let mut single_lat = 0u64;
         for a in &accesses {
             single_lat += single.access(a.set, a.idx, a.line, a.kind, a.now);
         }
         single.finalize();
 
-        let mut batched = build_controller(&cfg, false);
+        let mut batched = AnyController::from_config(&cfg, false);
         let mut batched_lat = 0u64;
         // Uneven chunk size on purpose: exercises partial batches.
         for chunk in accesses.chunks(7) {
@@ -118,7 +119,7 @@ fn access_block_matches_single_accesses_stat_for_stat() {
 #[test]
 fn access_block_empty_batch_is_a_no_op() {
     let cfg = small_cfg(DesignPoint::TrimmaCache);
-    let mut c = build_controller(&cfg, false);
+    let mut c = AnyController::from_config(&cfg, false);
     assert_eq!(c.access_block(&[]), 0);
     assert_eq!(c.stats().mem_accesses, 0);
 }

@@ -161,8 +161,8 @@ fn oracle_kills_missing_inverse_entry() {
         c
     };
     let layout = SetLayout::for_config(&cfg.hybrid, false);
-    let broken: Box<dyn Controller> = Box::new(ForgottenInverse::new(layout));
-    let mut checked = CheckedController::new(broken, &cfg);
+    // The generic wrapper takes the mutant directly — no boxing needed.
+    let mut checked = CheckedController::new(ForgottenInverse::new(layout), &cfg);
     let slow_idx = layout.fast_per_set + 7;
     let result = catch_unwind(AssertUnwindSafe(|| {
         // Miss installs the one-sided mapping; the post-access involution
@@ -223,8 +223,7 @@ fn oracle_kills_wrong_tier_serve() {
         c
     };
     let layout = SetLayout::for_config(&cfg.hybrid, false);
-    let mut checked =
-        CheckedController::new(Box::new(WrongTier { layout, stats: Stats::default() }), &cfg);
+    let mut checked = CheckedController::new(WrongTier { layout, stats: Stats::default() }, &cfg);
     let slow_idx = layout.fast_per_set + 3;
     let result = catch_unwind(AssertUnwindSafe(|| {
         checked.access(0, slow_idx, 0, AccessKind::Read, 0);
@@ -234,7 +233,7 @@ fn oracle_kills_wrong_tier_serve() {
 
 #[test]
 fn oracle_end_to_end_through_simulation() {
-    // Full stack: Simulation -> build_controller -> CheckedController.
+    // Full stack: Simulation -> AnyController::Checked -> controller.
     let mut cfg = common::tiny(DesignPoint::TrimmaFlat);
     cfg.hybrid.verify = true;
     let wl = workloads::by_name("adv_migration_storm", &cfg).unwrap();

@@ -1,0 +1,26 @@
+#!/usr/bin/env sh
+# Record the perf baseline and the golden stat snapshots on a machine with
+# a Rust toolchain, making the CI perf gate and golden-drift guard live.
+# See EXPERIMENTS.md §Perf (baseline refresh) and ROADMAP.md open items.
+#
+# Usage: ./scripts/record_baseline.sh   (from the repository root)
+set -eu
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — run this on a machine with a Rust toolchain" >&2
+    exit 1
+fi
+
+echo "==> recording BENCH_baseline.json (quick suite, tag 'baseline')"
+cargo run --release -- bench --quick --tag baseline --json BENCH_baseline.json
+
+echo "==> blessing rust/tests/golden/stats.json"
+TRIMMA_BLESS=1 cargo test -q --test golden
+
+echo "==> verifying the blessed snapshots are stable"
+cargo test -q --test golden
+
+echo
+echo "Done. Commit the refreshed files:"
+echo "  git add BENCH_baseline.json rust/tests/golden/stats.json"
+git status --short BENCH_baseline.json rust/tests/golden/stats.json
