@@ -4,7 +4,7 @@
 //! emits the schema-versioned JSON report the CI perf gate consumes.
 
 use trimma::bench_util::Bench;
-use trimma::coordinator::bench::{run_hot_paths, run_sim_sweep};
+use trimma::coordinator::bench::{run_hot_paths, run_sharded_sweep, run_sim_sweep, SHARD_COUNTS};
 use trimma::coordinator::geomean;
 
 fn main() {
@@ -12,4 +12,5 @@ fn main() {
     run_hot_paths(&mut b);
     let tputs = run_sim_sweep(&mut b, false);
     println!("  -> geomean {:.2} M mem-steps/s over the sim sweep", geomean(&tputs));
+    run_sharded_sweep(&mut b, false, SHARD_COUNTS);
 }

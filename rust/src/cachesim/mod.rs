@@ -224,6 +224,13 @@ impl Hierarchy {
         res
     }
 
+    /// Total demand accesses issued into the hierarchy (L1 hits + misses
+    /// over all cores) — the `cache_accesses` stat of the end-of-run
+    /// report.
+    pub fn accesses(&self) -> u64 {
+        self.l1.iter().map(|c| c.hits + c.misses).sum()
+    }
+
     pub fn l1_hits(&self) -> u64 {
         self.l1.iter().map(|c| c.hits).sum()
     }

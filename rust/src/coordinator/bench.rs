@@ -25,7 +25,7 @@ use crate::metadata::irc::Irc;
 use crate::metadata::irt::IrtTable;
 use crate::metadata::remap_cache::RemapCache;
 use crate::metadata::SetLayout;
-use crate::sim::Simulation;
+use crate::sim::{ShardedSimulation, Simulation};
 use crate::types::{AccessKind, Rng64};
 use crate::workloads::synth::TraceGen;
 use crate::workloads::{by_name, suite};
@@ -232,8 +232,87 @@ pub fn run_sim_sweep(b: &mut Bench, quick: bool) -> Vec<f64> {
     tputs
 }
 
+/// Shard counts the full sharded-session sweep measures.
+pub const SHARD_COUNTS: &[usize] = &[1, 2, 4, 8];
+
+/// Shard counts to measure for a run: `--quick` keeps it to
+/// `{1, max(2, shards)}` so CI smoke stays fast; full runs measure
+/// [`SHARD_COUNTS`] plus the explicitly requested count.
+pub fn shard_counts(quick: bool, shards: usize) -> Vec<usize> {
+    let mut counts: Vec<usize> = if quick {
+        vec![1, shards.max(2)]
+    } else {
+        let mut v = SHARD_COUNTS.to_vec();
+        if shards > 1 {
+            v.push(shards);
+        }
+        v
+    };
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+/// The sharded end-to-end sweep: the same [`SIM_DESIGNS`] x
+/// [`SIM_WORKLOADS`] matrix as [`run_sim_sweep`], driven through the
+/// open-loop sharded path (`engine::sharded`) at each count in `counts`.
+/// Records one `sharded_session/<n>` label per count with the aggregate
+/// throughput attached, prints the session-throughput speedup over the
+/// first count (conventionally 1 shard), and returns the
+/// `(count, M mem-steps/s)` pairs.
+///
+/// Unlike the closed-loop sweep, *all* construction (workloads, slice
+/// sessions, front ends) happens outside the timed region: slice
+/// construction is single-threaded and identical for every count, so
+/// timing it would add a constant serial term that deflates the measured
+/// N-shard speedup — the number the scaling claim is read off.
+pub fn run_sharded_sweep(b: &mut Bench, quick: bool, counts: &[usize]) -> Vec<(usize, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let mut out = Vec::new();
+    for &n in counts {
+        let mut sims: Vec<ShardedSimulation> = Vec::new();
+        let mut steps = 0.0;
+        for dp in SIM_DESIGNS {
+            for wl in SIM_WORKLOADS {
+                let builder = EngineBuilder::new(*dp)
+                    .workload(*wl)
+                    .shards(n)
+                    .configure(move |cfg| {
+                        cfg.workload.accesses_per_core = accesses;
+                        cfg.workload.warmup_per_core = warmup;
+                    });
+                let cfg = builder.build_config().expect("sweep preset");
+                steps += cfg.workload.cores as f64 * (accesses + warmup) as f64;
+                let workload = by_name(wl, &cfg).unwrap_or_else(|e| panic!("{e}"));
+                let session = builder.build_sharded().expect("sharded session");
+                sims.push(ShardedSimulation::new(&cfg, workload, session));
+            }
+        }
+        let label = format!("sharded_session/{n}");
+        let (_done, dt) = b.once(&label, move || {
+            for sim in sims {
+                sim.run();
+            }
+        });
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((n, msteps));
+    }
+    if let Some(&(base_n, base)) = out.first() {
+        for &(n, t) in out.iter().skip(1) {
+            println!(
+                "  sharded session throughput at {n} shards: {:.2}x over {base_n}",
+                t / base.max(1e-12)
+            );
+        }
+    }
+    out
+}
+
 /// Run the whole suite and package it as a schema-versioned report.
-pub fn full_report(tag: &str, quick: bool) -> BenchReport {
+/// `shards` feeds [`shard_counts`] for the sharded-session sweep.
+pub fn full_report(tag: &str, quick: bool, shards: usize) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
         Bench::with_target("trimma-bench", 50e6)
@@ -242,6 +321,7 @@ pub fn full_report(tag: &str, quick: bool) -> BenchReport {
     };
     run_hot_paths(&mut b);
     let tputs = run_sim_sweep(&mut b, quick);
+    run_sharded_sweep(&mut b, quick, &shard_counts(quick, shards));
     BenchReport {
         schema_version: SCHEMA_VERSION,
         tag: tag.to_string(),
@@ -270,6 +350,16 @@ mod tests {
                 assert!(by_name(wl, &cfg).is_ok(), "{}/{wl}", dp.label());
             }
         }
+    }
+
+    #[test]
+    fn shard_counts_cover_quick_and_full() {
+        assert_eq!(shard_counts(true, 2), vec![1, 2]);
+        assert_eq!(shard_counts(true, 1), vec![1, 2]);
+        assert_eq!(shard_counts(true, 8), vec![1, 8]);
+        assert_eq!(shard_counts(false, 1), vec![1, 2, 4, 8]);
+        assert_eq!(shard_counts(false, 6), vec![1, 2, 4, 6, 8]);
+        assert_eq!(shard_counts(false, 4), vec![1, 2, 4, 8]);
     }
 
     #[test]

@@ -100,6 +100,7 @@ pub fn fig1(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
                 workload: wl.into(),
                 ideal,
                 tag_match,
+                shards: 0,
             });
         }
     }

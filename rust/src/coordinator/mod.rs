@@ -8,13 +8,12 @@
 //! [`crate::sim::SimReport`]s and are formatted into [`Table`]s (markdown
 //! to stdout, CSV under `results/`). Failures (e.g. an unknown workload
 //! name) come back as typed [`EngineError`]s instead of panicking the
-//! worker.
+//! worker — all of them, aggregated per sweep in a [`JobFailures`].
 
 pub mod bench;
 pub mod figures;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::config::SystemConfig;
 use crate::engine::{EngineBuilder, EngineError};
@@ -35,6 +34,12 @@ pub struct Job {
     /// Run generic a-way tag matching (Fig. 1 "tag matching") instead of
     /// the configured design point.
     pub tag_match: bool,
+    /// `0` (the default) runs the classic closed-loop simulation;
+    /// `n >= 1` runs the open-loop sharded path with `n` worker threads
+    /// ([`EngineBuilder::run_sharded`](crate::engine::EngineBuilder::run_sharded)).
+    /// The two execution models' timing stats are not comparable — see
+    /// DESIGN.md §9.
+    pub shards: usize,
 }
 
 impl Job {
@@ -46,6 +51,7 @@ impl Job {
             workload: workload.to_string(),
             ideal: false,
             tag_match: false,
+            shards: 0,
         }
     }
 
@@ -59,23 +65,44 @@ impl Job {
         Job { tag_match: true, ..Job::new(label, cfg, workload) }
     }
 
+    /// Run this job through the open-loop sharded path with `shards`
+    /// worker threads instead of the classic closed-loop simulation.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
     /// The builder describing this job's run.
     pub fn builder(&self) -> EngineBuilder {
         EngineBuilder::from_config(self.cfg.clone())
             .workload(self.workload.as_str())
             .ideal(self.ideal)
             .tag_match(self.tag_match)
+            .shards(self.shards.max(1))
     }
 }
 
-/// Run one job to completion.
+/// Run one job to completion (sharded when [`Job::shards`] asks for it).
 pub fn run_job(job: &Job) -> Result<SimReport, EngineError> {
-    job.builder().run()
+    if job.shards > 0 {
+        job.builder().run_sharded()
+    } else {
+        job.builder().run()
+    }
 }
 
+pub use crate::engine::JobFailures;
+
 /// Run jobs in parallel across up to `threads` workers (0 = all cores).
-/// Results are returned in job order; the first failing job's error is
-/// returned (the remaining jobs still run to completion).
+/// Results are returned in job order. Every failing job is reported (the
+/// remaining jobs still run to completion): errors come back as one
+/// [`JobFailures`] listing each failing label, wrapped in
+/// [`EngineError::Jobs`].
+///
+/// Result collection is contention-free: each worker pulls job indices
+/// off one shared atomic counter and collects `(index, result)` pairs
+/// into its own buffer; the buffers are merged after the workers join,
+/// so no lock is touched while simulations run.
 pub fn run_jobs(jobs: &[Job], threads: usize) -> Result<Vec<SimReport>, EngineError> {
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -85,26 +112,44 @@ pub fn run_jobs(jobs: &[Job], threads: usize) -> Result<Vec<SimReport>, EngineEr
     .min(jobs.len().max(1));
 
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Result<SimReport, EngineError>>>> =
-        Mutex::new(vec![None; jobs.len()]);
+    let mut slots: Vec<Option<Result<SimReport, EngineError>>> = Vec::new();
+    slots.resize_with(jobs.len(), || None);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let rep = run_job(&jobs[i]);
-                results.lock().unwrap()[i] = Some(rep);
-            });
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        out.push((i, run_job(&jobs[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("job worker panicked") {
+                slots[i] = Some(r);
+            }
         }
     });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("job completed"))
-        .collect()
+
+    let mut reports = Vec::with_capacity(jobs.len());
+    let mut failures = Vec::new();
+    for (job, slot) in jobs.iter().zip(slots) {
+        match slot.expect("every job index was claimed by a worker") {
+            Ok(rep) => reports.push(rep),
+            Err(e) => failures.push((job.label.clone(), e)),
+        }
+    }
+    if failures.is_empty() {
+        Ok(reports)
+    } else {
+        Err(JobFailures { failures }.into())
+    }
 }
 
 /// A result table: markdown for the terminal, CSV for `results/`.
@@ -157,12 +202,24 @@ impl Table {
     }
 }
 
-/// Geometric mean of positive values.
+/// Geometric mean of the **positive** values in `vals`. Zero, negative,
+/// and non-finite entries are skipped (`ln(0) = -inf` would otherwise
+/// poison the whole mean into `0` or `NaN`); if nothing positive remains,
+/// the result is `0.0`. Callers averaging throughputs thus degrade
+/// gracefully when one cell of a sweep records nothing.
 pub fn geomean(vals: &[f64]) -> f64 {
-    if vals.is_empty() {
+    let mut sum = 0.0;
+    let mut n = 0u32;
+    for &v in vals {
+        if v > 0.0 && v.is_finite() {
+            sum += v.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
         return 0.0;
     }
-    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+    (sum / n as f64).exp()
 }
 
 /// Format helpers used across figures.
@@ -212,10 +269,49 @@ mod tests {
     }
 
     #[test]
+    fn run_jobs_reports_every_failure_with_labels() {
+        let jobs = [
+            Job::new("bad-one", tiny(DesignPoint::TrimmaCache), "nope_1"),
+            Job::new("fine", tiny(DesignPoint::TrimmaCache), "gap_pr"),
+            Job::new("bad-two", tiny(DesignPoint::TrimmaCache), "nope_2"),
+        ];
+        let err = run_jobs(&jobs, 2).unwrap_err();
+        let crate::engine::EngineError::Jobs(fails) = &err else {
+            panic!("expected EngineError::Jobs, got {err}");
+        };
+        assert_eq!(fails.failures.len(), 2);
+        assert_eq!(fails.failures[0].0, "bad-one");
+        assert_eq!(fails.failures[1].0, "bad-two");
+        let msg = err.to_string();
+        assert!(msg.contains("bad-one") && msg.contains("bad-two"), "{msg}");
+        assert!(msg.contains("2 job(s) failed"), "{msg}");
+    }
+
+    #[test]
+    fn sharded_job_runs_open_loop() {
+        let job =
+            Job::new("sharded", tiny(DesignPoint::TrimmaCache), "adv_drift").with_shards(2);
+        let rep = run_job(&job).unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.instructions > 0);
+    }
+
+    #[test]
     fn geomean_basics() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
         assert_eq!(geomean(&[]), 0.0);
         assert!((geomean(&[3.0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_skips_zero_and_negative_inputs() {
+        // ln(0) = -inf used to poison the mean to 0; ln of a negative is
+        // NaN and poisoned it to NaN. Both are now skipped.
+        assert!((geomean(&[2.0, 8.0, 0.0]) - 4.0).abs() < 1e-9);
+        assert!((geomean(&[2.0, 8.0, -3.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[0.0]), 0.0);
+        assert_eq!(geomean(&[-1.0, 0.0]), 0.0);
+        assert!((geomean(&[f64::NAN, 5.0]) - 5.0).abs() < 1e-9);
     }
 
     #[test]

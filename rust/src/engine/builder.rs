@@ -2,8 +2,10 @@
 
 use crate::config::presets::{self, DesignPoint};
 use crate::config::SystemConfig;
+use crate::engine::sharded::{self, ShardPlan, ShardedSession};
 use crate::engine::{AnyController, EngineError, Session};
-use crate::sim::{SimReport, Simulation};
+use crate::metadata::SetLayout;
+use crate::sim::{ShardedSimulation, SimReport, Simulation};
 use crate::workloads;
 
 /// Memory technology combination, mirroring the paper's Table 1.
@@ -85,6 +87,7 @@ pub struct EngineBuilder {
     ideal: bool,
     verify: bool,
     tag_match: bool,
+    shards: usize,
     tweaks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
 }
 
@@ -99,6 +102,7 @@ impl EngineBuilder {
             ideal: false,
             verify: false,
             tag_match: false,
+            shards: 1,
             tweaks: Vec::new(),
         }
     }
@@ -157,6 +161,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Worker-thread count for the sharded execution path
+    /// ([`EngineBuilder::build_sharded`] / [`EngineBuilder::run_sharded`];
+    /// clamped to the [`ShardPlan`]'s slice count at build time). Has no
+    /// effect on the classic closed-loop [`EngineBuilder::run`] path.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
     /// Queue a raw config tweak, applied (in call order) after the preset
     /// is materialized — capacities, core counts, access budgets, remap
     /// cache geometry: anything the typed knobs don't cover.
@@ -209,6 +222,46 @@ impl EngineBuilder {
         let ctrl = self.controller_for(&cfg);
         let label = self.workload.clone().unwrap_or_else(|| cfg.name.clone());
         Ok(Session::with_controller(label, ctrl))
+    }
+
+    /// Build a sharded session over this builder's configuration: one
+    /// slice [`Session`] per [`ShardPlan`] slice, each running the
+    /// [`sharded::slice_config`] sub-config (same per-set geometry,
+    /// `1/num_slices` of the sets, capacities, and remap-cache SRAM),
+    /// honouring the `ideal` / `tag_match` / `verify` toggles.
+    pub fn build_sharded(&self) -> Result<ShardedSession, EngineError> {
+        let cfg = self.build_config()?;
+        // The layout must match what `controller_for` will build: tag
+        // matching reserves no metadata region; `ideal` skips it too.
+        let layout = SetLayout::for_config(&cfg.hybrid, self.tag_match || self.ideal);
+        let plan = ShardPlan::new(&layout, self.shards);
+        let mut sessions = Vec::with_capacity(plan.num_slices() as usize);
+        for slice in 0..plan.num_slices() {
+            let sub = sharded::slice_config(&cfg, &plan, slice);
+            sub.validate().map_err(EngineError::InvalidConfig)?;
+            let ctrl = self.controller_for(&sub);
+            debug_assert_eq!(
+                ctrl.layout().fast_per_set,
+                layout.fast_per_set,
+                "slice layout must keep the full config's per-set geometry"
+            );
+            let label = sub.name.clone();
+            sessions.push(Session::with_controller(label, ctrl));
+        }
+        let label = self.workload.clone().unwrap_or_else(|| cfg.name.clone());
+        Ok(ShardedSession::assemble(label, layout, plan, sessions))
+    }
+
+    /// Build and run the **sharded, open-loop** simulation of this
+    /// builder's workload across [`EngineBuilder::shards`] worker threads
+    /// (see [`sharded`](crate::engine::sharded) for the execution model
+    /// and its determinism guarantee). Requires a workload.
+    pub fn run_sharded(&self) -> Result<SimReport, EngineError> {
+        let name = self.workload.as_deref().ok_or(EngineError::MissingWorkload)?;
+        let cfg = self.build_config()?;
+        let wl = workloads::by_name(name, &cfg)?;
+        let session = self.build_sharded()?;
+        Ok(ShardedSimulation::new(&cfg, wl, session).run())
     }
 
     /// Build the full trace-driven simulation (requires a workload).
@@ -296,6 +349,32 @@ mod tests {
         let session = EngineBuilder::from_config(cfg.clone()).build_session().unwrap();
         assert_eq!(session.layout().num_sets, 4);
         assert_eq!(session.label(), cfg.name);
+    }
+
+    #[test]
+    fn build_sharded_slices_share_per_set_geometry() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache).configure(shrink).shards(2);
+        let s = b.build_sharded().unwrap();
+        assert_eq!(s.plan().num_sets(), 4);
+        assert_eq!(s.plan().num_shards(), 2);
+        assert_eq!(s.sessions().len(), s.plan().num_slices() as usize);
+        for sess in s.sessions() {
+            assert_eq!(sess.layout().fast_per_set, s.full_layout().fast_per_set);
+            assert_eq!(sess.layout().num_sets, s.plan().sets_per_slice());
+        }
+    }
+
+    #[test]
+    fn run_sharded_runs_a_tiny_simulation() {
+        let rep = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .workload("adv_drift")
+            .configure(shrink)
+            .shards(2)
+            .run_sharded()
+            .unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.instructions > 0);
+        assert_eq!(rep.name, "adv_drift");
     }
 
     #[test]

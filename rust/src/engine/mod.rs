@@ -23,9 +23,14 @@
 //!   [`Access`](crate::hybrid::Access)es: `push_batch(&[Access]) ->
 //!   Completion`, `finish() -> SimReport`. Trace generation is decoupled
 //!   from simulation: the trace-driven [`Simulation`](crate::sim::Simulation)
-//!   engine, the bench suite, the adversarial scenario drivers, and any
-//!   future sharded/async driver all feed accesses through this one entry
-//!   point.
+//!   engine, the bench suite, the adversarial scenario drivers, and the
+//!   sharded driver all feed accesses through this one entry point.
+//! * [`sharded`] — set-partitioned parallel execution of a **single**
+//!   run: a [`ShardPlan`] cuts the set space into contiguous slices, a
+//!   [`ShardedSession`] owns one `Session` per slice, and lock-free SPSC
+//!   batch queues fan the (single-threaded) front end's access stream out
+//!   to worker threads, with a deterministic gauge-summing merge
+//!   (`EngineBuilder::shards(n)` + `build_sharded`/`run_sharded`).
 //!
 //! ```no_run
 //! use trimma::config::presets::DesignPoint;
@@ -42,12 +47,38 @@
 mod builder;
 mod controller;
 mod session;
+pub mod sharded;
 
 pub use builder::{EngineBuilder, MemoryPreset};
 pub use controller::AnyController;
 pub use session::{Completion, Session};
+pub use sharded::{ShardFeeder, ShardPlan, ShardedSession};
 
 use crate::workloads::UnknownWorkload;
+
+/// Every failure of a `coordinator::run_jobs` sweep: `(job label, error)`
+/// pairs in job order — all of them, not just the first, so one pass over
+/// a long sweep reports every casualty. Defined here (next to
+/// [`EngineError`], which carries it as [`EngineError::Jobs`]) so the
+/// engine stays free of coordinator dependencies; the coordinator
+/// re-exports it as `coordinator::JobFailures`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobFailures {
+    /// `(label, error)` of each failing job, in job order.
+    pub failures: Vec<(String, EngineError)>,
+}
+
+impl std::fmt::Display for JobFailures {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} job(s) failed:", self.failures.len())?;
+        for (label, e) in &self.failures {
+            write!(f, "\n  {label}: {e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for JobFailures {}
 
 /// Everything that can go wrong while assembling or running an engine.
 ///
@@ -67,6 +98,10 @@ pub enum EngineError {
     /// The requested figure id is not part of the evaluation
     /// (see `coordinator::figures::ALL_FIGURES`).
     UnknownFigure(String),
+    /// One or more jobs of a coordinator sweep failed; the payload lists
+    /// every failing job's label and error (not just the first), so a
+    /// long sweep reports all its casualties in one pass.
+    Jobs(JobFailures),
 }
 
 impl std::fmt::Display for EngineError {
@@ -78,6 +113,7 @@ impl std::fmt::Display for EngineError {
             }
             EngineError::InvalidConfig(e) => write!(f, "invalid config: {e}"),
             EngineError::UnknownFigure(id) => write!(f, "unknown figure '{id}'"),
+            EngineError::Jobs(e) => write!(f, "{e}"),
         }
     }
 }
@@ -87,5 +123,11 @@ impl std::error::Error for EngineError {}
 impl From<UnknownWorkload> for EngineError {
     fn from(e: UnknownWorkload) -> Self {
         EngineError::UnknownWorkload(e)
+    }
+}
+
+impl From<JobFailures> for EngineError {
+    fn from(e: JobFailures) -> Self {
+        EngineError::Jobs(e)
     }
 }

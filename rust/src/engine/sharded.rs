@@ -1,0 +1,817 @@
+//! Sharded set-partitioned execution: one workload's post-LLC access
+//! stream split across worker threads, with a deterministic merge.
+//!
+//! Trimma's remap state is set-local by construction — the iRT, the iRC,
+//! and the remap caches are all indexed `set * k + idx` — so disjoint set
+//! ranges of a single run can be simulated concurrently. This module
+//! provides the machinery:
+//!
+//! * [`ShardPlan`] — contiguous set-range partitions derived from the
+//!   run's [`SetLayout`]. The partition has two layers: **slices** (the
+//!   unit of simulation state, fixed by the geometry alone) and
+//!   **shards** (the unit of parallelism, a contiguous group of slices
+//!   per worker thread).
+//! * [`slice_config`] — the per-slice sub-config: set count, tier
+//!   capacities, and remap-cache geometry all scaled by the slice's share
+//!   of the set space, so metadata sizing, donated-slot accounting, and
+//!   bank state stay set-local inside each slice.
+//! * [`ShardedSession`] — owns one [`Session`]`<`[`AnyController`]`>` per
+//!   slice and fans a single access stream out to them, either inline
+//!   ([`ShardedSession::push_batch`]) or across worker threads over
+//!   lock-free SPSC batch queues ([`ShardedSession::run_stream`]).
+//!
+//! ## Why the merge is deterministic
+//!
+//! The statistics of a sharded run are byte-identical for **every** shard
+//! count (the `rust/tests/sharded_parity.rs` matrix locks this) because
+//! nothing observable depends on the worker count:
+//!
+//! 1. the slice partition is derived from the geometry only — changing
+//!    the shard count regroups slices onto threads but never changes
+//!    which sets share simulation state;
+//! 2. each access is routed to its slice's queue by the single-threaded
+//!    front end, and each queue is FIFO, so every slice consumes exactly
+//!    the serial order restricted to its own sets;
+//! 3. slices share no state (each owns its controller, tables, remap
+//!    caches, and device bank clocks via its sub-config), so cross-thread
+//!    timing can only change wall-clock speed, never results;
+//! 4. the merge ([`crate::stats::Stats::merge_shard`]) sums counters and
+//!    storage gauges over the fixed slice order.
+//!
+//! The trade-off: the sharded driver is an **open-loop** throughput mode.
+//! The front end charges a constant nominal memory latency per LLC miss
+//! instead of feeding each access's simulated latency back into the core
+//! clocks (that feedback would serialize the pipeline — the next access's
+//! timestamp would depend on the previous access's result). Sharded runs
+//! are therefore mutually comparable and deterministic, but their timing
+//! stats are not comparable with the closed-loop
+//! [`Simulation::run`](crate::sim::Simulation::run) path; see DESIGN.md
+//! §9.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::{RemapCacheKind, SystemConfig};
+use crate::engine::{AnyController, Completion, Session};
+use crate::hybrid::Access;
+use crate::metadata::SetLayout;
+use crate::sim::SimReport;
+use crate::stats::Stats;
+use crate::types::Cycle;
+
+/// Accesses buffered per slice before a batch message is enqueued.
+const BATCH_ACCESSES: usize = 128;
+/// SPSC queue capacity (messages) per shard.
+const QUEUE_MSGS: usize = 512;
+
+/// How a run's set space is partitioned for sharded execution.
+///
+/// Two independent layers:
+///
+/// * **Slices** — the unit of simulation state. The set space is cut into
+///   `num_slices` contiguous equal ranges — the largest count within
+///   [`ShardPlan::MAX_SLICES`] that tiles the set space exactly, i.e.
+///   `min(num_sets, 64)` (a power of two) for every validated config —
+///   each simulated by its own [`Session`] built from a [`slice_config`]
+///   sub-config. The slice partition depends only on the geometry, never
+///   on the requested worker count — that invariance is what makes the
+///   merged statistics identical for every shard count.
+/// * **Shards** — the unit of parallelism. The requested worker count is
+///   clamped to `[1, num_slices]` and each shard drives a contiguous
+///   group of slices (sizes differ by at most one) over one SPSC queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    num_sets: u32,
+    num_slices: u32,
+    sets_per_slice: u32,
+    num_shards: u32,
+}
+
+impl ShardPlan {
+    /// Upper bound on the slice count (and so on useful parallelism).
+    pub const MAX_SLICES: u32 = 64;
+
+    /// Plan for `layout`'s set space with (up to) `shards` workers.
+    pub fn new(layout: &SetLayout, shards: usize) -> ShardPlan {
+        let num_sets = layout.num_sets;
+        // Largest slice count within MAX_SLICES that tiles the set space
+        // exactly. Validated configs have power-of-two set counts, so
+        // this is min(num_sets, MAX_SLICES) in one step; the walk-down
+        // keeps the tiling invariant (and with it in-bounds routing) for
+        // any layout a caller hands us.
+        let mut num_slices = num_sets.min(Self::MAX_SLICES);
+        while num_sets % num_slices != 0 {
+            num_slices -= 1;
+        }
+        let num_shards = (shards.max(1) as u32).min(num_slices);
+        ShardPlan {
+            num_sets,
+            num_slices,
+            sets_per_slice: num_sets / num_slices,
+            num_shards,
+        }
+    }
+
+    /// Sets in the planned set space.
+    pub fn num_sets(&self) -> u32 {
+        self.num_sets
+    }
+
+    /// Number of slices (state partitions); a power of two.
+    pub fn num_slices(&self) -> u32 {
+        self.num_slices
+    }
+
+    /// Contiguous sets per slice; a power of two.
+    pub fn sets_per_slice(&self) -> u32 {
+        self.sets_per_slice
+    }
+
+    /// Worker threads the plan will use (requested count clamped to the
+    /// slice count).
+    pub fn num_shards(&self) -> u32 {
+        self.num_shards
+    }
+
+    /// The slice owning global `set`.
+    #[inline]
+    pub fn slice_of(&self, set: u32) -> u32 {
+        set / self.sets_per_slice
+    }
+
+    /// `set` relabelled into its slice's local set space.
+    #[inline]
+    pub fn local_set(&self, set: u32) -> u32 {
+        set % self.sets_per_slice
+    }
+
+    /// The shard driving `slice` (slices group contiguously, sizes
+    /// differing by at most one).
+    #[inline]
+    pub fn shard_of_slice(&self, slice: u32) -> u32 {
+        ((slice as u64 * self.num_shards as u64) / self.num_slices as u64) as u32
+    }
+
+    /// The contiguous slice range shard `shard` drives.
+    pub fn shard_slices(&self, shard: u32) -> Range<u32> {
+        let lo = (shard as u64 * self.num_slices as u64).div_ceil(self.num_shards as u64);
+        let hi = ((shard as u64 + 1) * self.num_slices as u64).div_ceil(self.num_shards as u64);
+        lo as u32..hi as u32
+    }
+
+    /// The contiguous global set range shard `shard` drives.
+    pub fn shard_sets(&self, shard: u32) -> Range<u32> {
+        let s = self.shard_slices(shard);
+        s.start * self.sets_per_slice..s.end * self.sets_per_slice
+    }
+
+    /// The contiguous global set range of `slice`.
+    pub fn slice_sets(&self, slice: u32) -> Range<u32> {
+        slice * self.sets_per_slice..(slice + 1) * self.sets_per_slice
+    }
+
+    /// Route a global set: `(owning slice, local set within it)`. Panics
+    /// if `set` is outside the planned set space — sharding must never
+    /// cross a set boundary.
+    #[inline]
+    pub fn route_set(&self, set: u32) -> (u32, u32) {
+        assert!(
+            set < self.num_sets,
+            "access set {set} outside the planned set space ({} sets)",
+            self.num_sets
+        );
+        (self.slice_of(set), self.local_set(set))
+    }
+
+    /// Route a global-set access: `(owning slice, access relabelled into
+    /// the slice's local set space)`. Panics if `a.set` is outside the
+    /// planned set space (see [`ShardPlan::route_set`]).
+    #[inline]
+    pub fn route(&self, a: Access) -> (u32, Access) {
+        let (slice, local) = self.route_set(a.set);
+        (slice, Access { set: local, ..a })
+    }
+}
+
+/// The sub-config slice `slice` simulates: the full config with set
+/// count, tier capacities, and remap-cache geometry divided by the slice
+/// count (the per-set geometry — ways, metadata reservation, slow blocks
+/// per set — is unchanged, so each slice sees exactly its sets' share of
+/// the machine). Validity follows from the full config's: slice and set
+/// counts are powers of two, so every division here is exact.
+pub fn slice_config(cfg: &SystemConfig, plan: &ShardPlan, slice: u32) -> SystemConfig {
+    let frac = plan.num_slices() as u64;
+    let mut sub = cfg.clone();
+    sub.name = format!("{}/slice{}", cfg.name, slice);
+    sub.hybrid.num_sets = plan.sets_per_slice();
+    sub.hybrid.fast_bytes = cfg.hybrid.fast_bytes / frac;
+    sub.hybrid.slow_bytes = cfg.hybrid.slow_bytes / frac;
+    sub.hybrid.remap_cache = scale_remap_cache(cfg.hybrid.remap_cache, frac);
+    sub
+}
+
+/// Scale an SRAM remap-cache geometry down by `frac` (sets, not ways, so
+/// associativity — and with it per-set conflict behaviour — is kept).
+/// When the cache divides evenly (every preset does: 2048/256 sets vs at
+/// most 64 slices), the slices' summed SRAM matches the full config's
+/// budget exactly. A cache with fewer sets than there are slices clamps
+/// at one set per slice — the sub-configs stay constructible, at the
+/// cost of modelling proportionally more aggregate SRAM than configured
+/// (shard-count parity is unaffected: every count uses the same slicing).
+fn scale_remap_cache(kind: RemapCacheKind, frac: u64) -> RemapCacheKind {
+    let scale = |sets: u32| ((sets as u64 / frac).max(1)) as u32;
+    match kind {
+        RemapCacheKind::None => RemapCacheKind::None,
+        RemapCacheKind::Conventional { sets, ways } => {
+            RemapCacheKind::Conventional { sets: scale(sets), ways }
+        }
+        RemapCacheKind::Irc { nonid_sets, nonid_ways, id_sets, id_ways, superblock_blocks } => {
+            RemapCacheKind::Irc {
+                nonid_sets: scale(nonid_sets),
+                nonid_ways,
+                id_sets: scale(id_sets),
+                id_ways,
+                superblock_blocks,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- SPSC
+
+/// One message on a shard's queue.
+enum ShardMsg {
+    /// A batch of accesses for one slice, already relabelled to the
+    /// slice's local set space.
+    Batch { slice: u32, batch: Vec<Access> },
+    /// End-of-warmup marker: reset the shard's slice statistics.
+    ResetStats,
+}
+
+/// A bounded single-producer single-consumer ring. Lock-free: producer
+/// and consumer each own one index; the only cross-thread communication
+/// is an acquire/release pair per operation.
+struct SpscInner<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next slot to pop (written by the consumer only).
+    head: AtomicUsize,
+    /// Next slot to push (written by the producer only).
+    tail: AtomicUsize,
+    /// Set (release) when the producer disconnects. The consumer may only
+    /// conclude "no more data is coming" after an acquire-load of this
+    /// flag: that load synchronizes with the producer's final release, so
+    /// every earlier slot write and tail store is visible before the
+    /// consumer's last drain — a bare refcount probe would give no such
+    /// happens-before edge and could drop queued batches on weakly
+    /// ordered CPUs.
+    closed: AtomicBool,
+}
+
+// Safety: the ring is shared between exactly one producer and one
+// consumer (enforced by the non-Clone Producer/Consumer handles), and
+// every slot is written before the release-store that publishes it.
+unsafe impl<T: Send> Sync for SpscInner<T> {}
+
+impl<T> Drop for SpscInner<T> {
+    fn drop(&mut self) {
+        let mut i = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        while i != tail {
+            // Safety: slots in [head, tail) hold initialized values.
+            unsafe { (*self.buf[i & self.mask].get()).assume_init_drop() };
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+struct Producer<T>(Arc<SpscInner<T>>);
+struct Consumer<T>(Arc<SpscInner<T>>);
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        // Publish the disconnect *after* every push (release pairs with
+        // the consumer's acquire in `recv`).
+        self.0.closed.store(true, Ordering::Release);
+    }
+}
+
+fn spsc_channel<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    assert!(capacity.is_power_of_two());
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..capacity).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(SpscInner {
+        buf,
+        mask: capacity - 1,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (Producer(Arc::clone(&inner)), Consumer(inner))
+}
+
+impl<T> Producer<T> {
+    fn try_push(&mut self, v: T) -> Result<(), T> {
+        let tail = self.0.tail.load(Ordering::Relaxed);
+        let head = self.0.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.0.buf.len() {
+            return Err(v);
+        }
+        // Safety: the slot at `tail` is unoccupied (checked above) and we
+        // are the only producer.
+        unsafe { (*self.0.buf[tail & self.0.mask].get()).write(v) };
+        self.0.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Push, spinning (with yields) while the ring is full. Panics if the
+    /// consumer vanished with the ring full (a worker died mid-run) —
+    /// best-effort deadlock-into-panic conversion, not a data channel.
+    fn send(&mut self, mut v: T) {
+        loop {
+            match self.try_push(v) {
+                Ok(()) => return,
+                Err(back) => {
+                    v = back;
+                    assert!(
+                        Arc::strong_count(&self.0) > 1,
+                        "sharded worker disappeared with its queue full"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+impl<T> Consumer<T> {
+    fn try_pop(&mut self) -> Option<T> {
+        let head = self.0.head.load(Ordering::Relaxed);
+        let tail = self.0.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        // Safety: the slot at `head` was published by the producer's
+        // release-store and we are the only consumer.
+        let v = unsafe { (*self.0.buf[head & self.0.mask].get()).assume_init_read() };
+        self.0.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+
+    /// Pop, spinning while the ring is empty; `None` once the producer
+    /// handle is dropped and the ring is drained.
+    fn recv(&mut self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            // Acquire pairs with the producer-drop release: after seeing
+            // `closed`, every push that preceded the disconnect is
+            // visible, so one more pop attempt cannot miss data (the
+            // caller loops on `recv`, draining any remaining messages one
+            // per call).
+            if self.0.closed.load(Ordering::Acquire) {
+                return self.try_pop();
+            }
+            spins += 1;
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- session
+
+/// The single-threaded feed handle passed to the closure of
+/// [`ShardedSession::run_stream`]: the trace/cache front end pushes
+/// global-set accesses here and they are routed, batched, and enqueued to
+/// the owning shard's queue.
+pub struct ShardFeeder {
+    plan: ShardPlan,
+    producers: Vec<Producer<ShardMsg>>,
+    bufs: Vec<Vec<Access>>,
+    pushed: u64,
+}
+
+impl ShardFeeder {
+    fn new(plan: ShardPlan, producers: Vec<Producer<ShardMsg>>) -> ShardFeeder {
+        ShardFeeder {
+            plan,
+            producers,
+            bufs: (0..plan.num_slices()).map(|_| Vec::with_capacity(BATCH_ACCESSES)).collect(),
+            pushed: 0,
+        }
+    }
+
+    /// Feed one access (global set space). Routed to its slice; panics if
+    /// the set is outside the planned set space.
+    #[inline]
+    pub fn push(&mut self, a: Access) {
+        let (slice, local) = self.plan.route(a);
+        self.push_routed(slice, local);
+    }
+
+    /// Feed one already-routed access: `slice` owns it and `a.set` is the
+    /// *local* set within that slice — the shard-aware mapper
+    /// ([`AddrMapper::translate_sliced`](crate::sim::mapper::AddrMapper::translate_sliced))
+    /// produces exactly these coordinates, saving a second routing
+    /// division on the per-miss hot path.
+    #[inline]
+    pub fn push_routed(&mut self, slice: u32, a: Access) {
+        debug_assert!(slice < self.plan.num_slices());
+        debug_assert!(a.set < self.plan.sets_per_slice());
+        self.pushed += 1;
+        let buf = &mut self.bufs[slice as usize];
+        buf.push(a);
+        if buf.len() == BATCH_ACCESSES {
+            self.flush_slice(slice);
+        }
+    }
+
+    /// End-of-warmup: flush all pending batches, then tell every shard to
+    /// reset its slices' statistics. In-stream ordering is preserved per
+    /// slice, so the reset point is deterministic.
+    pub fn reset_stats(&mut self) {
+        self.flush_all();
+        for p in &mut self.producers {
+            p.send(ShardMsg::ResetStats);
+        }
+    }
+
+    fn flush_slice(&mut self, slice: u32) {
+        if self.bufs[slice as usize].is_empty() {
+            return;
+        }
+        let batch = std::mem::replace(
+            &mut self.bufs[slice as usize],
+            Vec::with_capacity(BATCH_ACCESSES),
+        );
+        let shard = self.plan.shard_of_slice(slice);
+        self.producers[shard as usize].send(ShardMsg::Batch { slice, batch });
+    }
+
+    fn flush_all(&mut self) {
+        for slice in 0..self.plan.num_slices() {
+            self.flush_slice(slice);
+        }
+    }
+
+    /// Flush everything and disconnect the queues (workers exit once
+    /// drained). Returns the total accesses pushed.
+    fn close(&mut self) -> u64 {
+        self.flush_all();
+        self.producers.clear();
+        self.pushed
+    }
+}
+
+/// A sharded simulation session: one [`Session`] per slice of the
+/// [`ShardPlan`], fed by routing a single access stream over the set
+/// space. Built through
+/// [`EngineBuilder::build_sharded`](crate::engine::EngineBuilder::build_sharded).
+///
+/// Driving it inline ([`ShardedSession::push_batch`]) and across worker
+/// threads ([`ShardedSession::run_stream`]) produce byte-identical merged
+/// statistics; so does every shard count (see the module docs for why).
+pub struct ShardedSession {
+    plan: ShardPlan,
+    full_layout: SetLayout,
+    sessions: Vec<Session<AnyController>>,
+    label: String,
+    pushed: u64,
+}
+
+impl ShardedSession {
+    pub(crate) fn assemble(
+        label: String,
+        full_layout: SetLayout,
+        plan: ShardPlan,
+        sessions: Vec<Session<AnyController>>,
+    ) -> ShardedSession {
+        assert_eq!(sessions.len(), plan.num_slices() as usize);
+        ShardedSession { plan, full_layout, sessions, label, pushed: 0 }
+    }
+
+    /// The set partition this session runs under.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The full (unsliced) run geometry — what drivers build global-set
+    /// accesses against.
+    pub fn full_layout(&self) -> &SetLayout {
+        &self.full_layout
+    }
+
+    /// The session label (workload name for trace-driven runs).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The per-slice sessions, in slice order (introspection/tests).
+    pub fn sessions(&self) -> &[Session<AnyController>] {
+        &self.sessions
+    }
+
+    /// Total accesses pushed since construction (warmup included).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Feed a batch of global-set accesses inline (no threads), routing
+    /// each to its slice in order. The serial reference the threaded
+    /// [`ShardedSession::run_stream`] path is locked against.
+    pub fn push_batch(&mut self, batch: &[Access]) -> Completion {
+        let mut latency: Cycle = 0;
+        for a in batch {
+            let (slice, local) = self.plan.route(*a);
+            latency += self.sessions[slice as usize].push(local);
+        }
+        self.pushed += batch.len() as u64;
+        Completion { accesses: batch.len() as u64, latency }
+    }
+
+    /// Reset every slice's statistics (end of warmup; inline driving).
+    pub fn reset_stats(&mut self) {
+        for s in &mut self.sessions {
+            s.reset_stats();
+        }
+    }
+
+    /// Drive the session with `feed` across `plan.num_shards()` worker
+    /// threads: each shard owns a contiguous group of slices and consumes
+    /// its own SPSC queue; `feed` runs on the calling thread and pushes
+    /// the (single) access stream through the [`ShardFeeder`].
+    ///
+    /// Returns the combined [`Completion`] (accesses fed, summed demand
+    /// latency), exactly what the equivalent [`ShardedSession::push_batch`]
+    /// calls would return.
+    pub fn run_stream<F>(&mut self, feed: F) -> Completion
+    where
+        F: FnOnce(&mut ShardFeeder),
+    {
+        let plan = self.plan;
+        // Hand each shard its contiguous group of slice sessions.
+        let mut groups: Vec<Vec<Session<AnyController>>> = Vec::new();
+        {
+            let mut it = std::mem::take(&mut self.sessions).into_iter();
+            for shard in 0..plan.num_shards() {
+                let n = plan.shard_slices(shard).len();
+                groups.push(it.by_ref().take(n).collect());
+            }
+        }
+        let mut producers = Vec::with_capacity(plan.num_shards() as usize);
+        let mut rigs = Vec::with_capacity(plan.num_shards() as usize);
+        for (shard, group) in groups.into_iter().enumerate() {
+            let (p, c) = spsc_channel::<ShardMsg>(QUEUE_MSGS);
+            producers.push(p);
+            rigs.push((c, plan.shard_slices(shard as u32).start, group));
+        }
+
+        let mut total = Completion { accesses: 0, latency: 0 };
+        let mut returned: Vec<Vec<Session<AnyController>>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rigs
+                .into_iter()
+                .map(|(c, first, group)| s.spawn(move || shard_worker(c, first, group)))
+                .collect();
+            let mut feeder = ShardFeeder::new(plan, producers);
+            feed(&mut feeder);
+            feeder.close();
+            for h in handles {
+                let (sessions, accesses, latency) = h.join().expect("shard worker panicked");
+                returned.push(sessions);
+                total.accesses += accesses;
+                total.latency += latency;
+            }
+        });
+        self.sessions = returned.into_iter().flatten().collect();
+        self.pushed += total.accesses;
+        total
+    }
+
+    /// Finalize every slice and merge their statistics (counters and
+    /// storage gauges summed over the fixed slice order, per
+    /// [`Stats::merge_shard`]) into one end-of-run report.
+    pub fn finish(self) -> SimReport {
+        let mut merged = Stats::default();
+        for s in self.sessions {
+            let rep = s.finish();
+            merged.merge_shard(&rep.stats);
+        }
+        SimReport { name: self.label, stats: merged }
+    }
+}
+
+/// One shard's worker loop: drain the queue, applying each batch to the
+/// owning slice session, until the feeder disconnects.
+fn shard_worker(
+    mut rx: Consumer<ShardMsg>,
+    first_slice: u32,
+    mut sessions: Vec<Session<AnyController>>,
+) -> (Vec<Session<AnyController>>, u64, Cycle) {
+    let mut accesses = 0u64;
+    let mut latency: Cycle = 0;
+    while let Some(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Batch { slice, batch } => {
+                let done = sessions[(slice - first_slice) as usize].push_batch(&batch);
+                accesses += done.accesses;
+                latency += done.latency;
+            }
+            ShardMsg::ResetStats => {
+                for s in &mut sessions {
+                    s.reset_stats();
+                }
+            }
+        }
+    }
+    (sessions, accesses, latency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+    use crate::engine::EngineBuilder;
+    use crate::types::AccessKind;
+
+    fn tiny_cfg(sets: u32) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = sets;
+        cfg
+    }
+
+    fn layout_of(sets: u32) -> SetLayout {
+        SetLayout::new(sets, 1 << 20, 32 << 20, 256, 0)
+    }
+
+    #[test]
+    fn plan_covers_the_set_space_contiguously() {
+        for (sets, shards) in [(4u32, 1usize), (4, 7), (16, 7), (64, 5), (4096, 9), (128, 128)] {
+            let plan = ShardPlan::new(&layout_of(sets), shards);
+            assert_eq!(plan.num_slices() * plan.sets_per_slice(), plan.num_sets());
+            assert!(plan.num_slices() <= ShardPlan::MAX_SLICES);
+            assert!(plan.num_slices().is_power_of_two());
+            assert!(plan.num_shards() >= 1 && plan.num_shards() <= plan.num_slices());
+            // Shards cover 0..num_slices contiguously and non-emptily.
+            let mut next = 0u32;
+            for shard in 0..plan.num_shards() {
+                let r = plan.shard_slices(shard);
+                assert_eq!(r.start, next, "{sets}/{shards}: gap before shard {shard}");
+                assert!(!r.is_empty(), "{sets}/{shards}: empty shard {shard}");
+                for slice in r.clone() {
+                    assert_eq!(plan.shard_of_slice(slice), shard);
+                }
+                next = r.end;
+            }
+            assert_eq!(next, plan.num_slices());
+            // Set routing round-trips.
+            for set in 0..plan.num_sets() {
+                let slice = plan.slice_of(set);
+                assert!(plan.slice_sets(slice).contains(&set));
+                assert_eq!(
+                    slice * plan.sets_per_slice() + plan.local_set(set),
+                    set,
+                    "set {set}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_clamps_shards_to_slices() {
+        let plan = ShardPlan::new(&layout_of(4), 7);
+        assert_eq!(plan.num_slices(), 4);
+        assert_eq!(plan.num_shards(), 4);
+        let plan = ShardPlan::new(&layout_of(4096), 0);
+        assert_eq!(plan.num_slices(), 64);
+        assert_eq!(plan.num_shards(), 1);
+    }
+
+    #[test]
+    fn slice_config_scales_geometry_not_per_set_shape() {
+        let cfg = tiny_cfg(16);
+        let plan = ShardPlan::new(&layout_of(16), 4);
+        let full = SetLayout::for_config(&cfg.hybrid, false);
+        for slice in 0..plan.num_slices() {
+            let sub = slice_config(&cfg, &plan, slice);
+            sub.validate().unwrap_or_else(|e| panic!("slice {slice}: {e}"));
+            assert_eq!(sub.hybrid.num_sets, plan.sets_per_slice());
+            let sl = SetLayout::for_config(&sub.hybrid, false);
+            assert_eq!(sl.fast_per_set, full.fast_per_set, "slice {slice}");
+            assert_eq!(sl.slow_per_set, full.slow_per_set, "slice {slice}");
+            assert_eq!(sl.meta_per_set, full.meta_per_set, "slice {slice}");
+        }
+        // SRAM budget is divided across slices, associativity kept.
+        let sub = slice_config(&cfg, &plan, 0);
+        match (cfg.hybrid.remap_cache, sub.hybrid.remap_cache) {
+            (
+                RemapCacheKind::Irc { nonid_sets, nonid_ways, id_sets, .. },
+                RemapCacheKind::Irc {
+                    nonid_sets: sub_nonid,
+                    nonid_ways: sub_ways,
+                    id_sets: sub_id,
+                    ..
+                },
+            ) => {
+                assert_eq!(sub_nonid, nonid_sets / plan.num_slices());
+                assert_eq!(sub_id, id_sets / plan.num_slices());
+                assert_eq!(sub_ways, nonid_ways);
+            }
+            other => panic!("unexpected remap cache kinds: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spsc_round_trips_in_order_across_threads() {
+        let (mut tx, mut rx) = spsc_channel::<u64>(8);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..10_000u64 {
+                    tx.send(i);
+                }
+            });
+            let mut expect = 0u64;
+            while let Some(v) = rx.recv() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+            assert_eq!(expect, 10_000);
+        });
+    }
+
+    #[test]
+    fn spsc_drop_releases_undelivered_messages() {
+        let payload = Arc::new(());
+        let (mut tx, rx) = spsc_channel::<Arc<()>>(8);
+        tx.try_push(Arc::clone(&payload)).unwrap();
+        tx.try_push(Arc::clone(&payload)).unwrap();
+        assert_eq!(Arc::strong_count(&payload), 3);
+        drop(tx);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&payload), 1);
+    }
+
+    fn stream(layout: &SetLayout, n: u64) -> Vec<Access> {
+        (0..n)
+            .map(|i| Access {
+                set: (i % layout.num_sets as u64) as u32,
+                idx: layout.fast_per_set + (i * 37) % layout.slow_per_set,
+                line: 0,
+                kind: if i % 3 == 0 { AccessKind::Write } else { AccessKind::Read },
+                now: i * 450,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_stream_matches_inline_routing() {
+        let cfg = tiny_cfg(16);
+        let build = || {
+            EngineBuilder::from_config(cfg.clone())
+                .shards(3)
+                .build_sharded()
+                .expect("sharded session")
+        };
+        let mut inline = build();
+        let accesses = stream(inline.full_layout(), 6000);
+        let d1 = inline.push_batch(&accesses[..4000]);
+        inline.reset_stats();
+        let d2 = inline.push_batch(&accesses[4000..]);
+        let rep_inline = inline.finish();
+
+        let mut threaded = build();
+        let run = threaded.run_stream(|feed| {
+            for a in &accesses[..4000] {
+                feed.push(*a);
+            }
+            feed.reset_stats();
+            for a in &accesses[4000..] {
+                feed.push(*a);
+            }
+        });
+        assert_eq!(threaded.pushed(), 6000);
+        let rep_threaded = threaded.finish();
+
+        assert_eq!(d1.accesses + d2.accesses, run.accesses);
+        assert_eq!(d1.latency + d2.latency, run.latency);
+        assert_eq!(rep_inline.stats.canonical(), rep_threaded.stats.canonical());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the planned set space")]
+    fn routing_rejects_out_of_range_sets() {
+        let plan = ShardPlan::new(&layout_of(4), 2);
+        let _ = plan.route(Access { set: 4, ..Access::default() });
+    }
+}

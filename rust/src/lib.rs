@@ -26,7 +26,9 @@
 //! `ideal` / `verify` / `tag_match` toggles), and the enum-dispatched
 //! [`engine::AnyController`] keeps virtual dispatch off the per-access hot
 //! path for every design point. Streaming drivers feed accesses through
-//! [`engine::Session`].
+//! [`engine::Session`]; [`engine::sharded`] splits one run's set space
+//! across worker threads (`EngineBuilder::shards(n)`) with a
+//! deterministic, shard-count-invariant merge.
 //!
 //! The AOT-compiled JAX/Pallas trace generator is loaded through
 //! [`runtime`] (PJRT CPU client); Python never runs at simulation time.
@@ -68,9 +70,10 @@ pub mod prelude {
     pub use crate::config::SystemConfig;
     pub use crate::engine::{
         AnyController, Completion, EngineBuilder, EngineError, MemoryPreset, Session,
+        ShardPlan, ShardedSession,
     };
     pub use crate::hybrid::{Access, Controller};
-    pub use crate::sim::{SimReport, Simulation};
+    pub use crate::sim::{ShardedSimulation, SimReport, Simulation};
     pub use crate::stats::Stats;
     pub use crate::types::AccessKind;
     pub use crate::workloads::Workload;

@@ -4,9 +4,11 @@
 //! trimma list                               available workloads / presets
 //! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
 //!            [--accesses N] [--ideal] [--verify] [--ratio R] [--block B]
+//!            [--shards N]                  N>0: open-loop sharded run
+//!                                          across N worker threads
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
-//! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
+//! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
 //!                                           hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json    validate a report's schema
@@ -28,10 +30,11 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma list                               workloads / designs / figures
   trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
              [--accesses N] [--cores N] [--ideal] [--verify] [--ratio R] [--block B]
+             [--shards N]   N>0: open-loop sharded run across N workers
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
-  trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json]
+  trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
   trimma bench-check --report bench.json
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -128,6 +131,18 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
     let mut job = Job::new(format!("{}:{}", cfg.name, wl), cfg, &wl);
     job.ideal = has("--ideal");
+    if let Some(n) = get("--shards") {
+        job.shards = n.parse().expect("--shards");
+        if job.shards > 0 {
+            println!(
+                "(sharded open-loop mode: {} worker thread(s); timing stats are \
+                 comparable between sharded runs, not with closed-loop runs)",
+                job.shards
+            );
+        } else {
+            println!("(--shards 0: classic closed-loop run)");
+        }
+    }
     let t0 = std::time::Instant::now();
     let rep = run_job(&job).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -168,7 +183,8 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
 fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let quick = has("--quick");
     let tag = get("--tag").unwrap_or_else(|| if quick { "quick".into() } else { "full".into() });
-    let report = trimma::coordinator::bench::full_report(&tag, quick);
+    let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(2);
+    let report = trimma::coordinator::bench::full_report(&tag, quick, shards);
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
         report.geomean_sim_msteps_per_s,

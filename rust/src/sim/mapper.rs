@@ -86,6 +86,25 @@ impl AddrMapper {
         }
     }
 
+    /// Shard-aware translation — the sharded front end's per-miss path
+    /// (`sim::ShardedSimulation`): translate `addr` and route the
+    /// resulting global `(set, idx)` through `plan`, returning
+    /// `(slice, local set, idx)` — the slice that owns the access plus
+    /// the coordinates in that slice's local set space, ready for
+    /// `ShardFeeder::push_routed`. Per-set indices are slice-invariant
+    /// (slices keep the full config's per-set geometry), so only the set
+    /// is relabelled; panics if the set ever leaves the planned space.
+    #[inline]
+    pub fn translate_sliced(
+        &mut self,
+        addr: PhysAddr,
+        plan: &crate::engine::sharded::ShardPlan,
+    ) -> (u32, u32, u64) {
+        let (set, idx) = self.translate(addr);
+        let (slice, local) = plan.route_set(set);
+        (slice, local, idx)
+    }
+
     fn allocate(&mut self) -> u64 {
         if self.mode == Mode::Flat && self.next_fast_page < self.fast_pages {
             let p = self.next_fast_page;
@@ -173,6 +192,23 @@ mod tests {
         for p in 0..(m.fast_pages + 10) {
             let (_, idx) = m.translate(p * 4096);
             assert!(!l.is_meta_idx(idx), "page {p} hit the metadata region");
+        }
+    }
+
+    #[test]
+    fn sliced_translation_matches_plain_translation() {
+        use crate::engine::sharded::ShardPlan;
+        let l = layout();
+        let plan = ShardPlan::new(&l, 2);
+        let mut a = AddrMapper::new(l, Mode::Cache);
+        let mut b = AddrMapper::new(l, Mode::Cache);
+        for p in 0..64u64 {
+            let addr = p * 4096 + 128;
+            let (set, idx) = a.translate(addr);
+            let (slice, local, idx2) = b.translate_sliced(addr, &plan);
+            assert_eq!(idx, idx2);
+            assert_eq!(plan.slice_of(set), slice);
+            assert_eq!(slice * plan.sets_per_slice() + local, set);
         }
     }
 

@@ -19,13 +19,21 @@
 //! over the controller type (defaulting to the enum-dispatched
 //! [`AnyController`]), so the whole per-access chain monomorphizes — no
 //! virtual dispatch on the hot path for any design point.
+//!
+//! [`ShardedSimulation`] is the parallel sibling: the same front end,
+//! run open-loop, with post-LLC accesses routed by set into a
+//! [`ShardedSession`]'s per-slice worker queues
+//! ([`crate::engine::sharded`]); its merged statistics are byte-identical
+//! for every shard count.
 
 pub mod mapper;
 
 use crate::cachesim::{Hierarchy, MAX_WRITEBACKS};
 use crate::config::SystemConfig;
+use crate::engine::sharded::{ShardFeeder, ShardedSession};
 use crate::engine::{AnyController, Session};
 use crate::hybrid::{Access, Controller};
+use crate::mem::MemDevice;
 use crate::stats::Stats;
 use crate::types::{AccessKind, Cycle};
 use crate::workloads::Workload;
@@ -204,7 +212,189 @@ impl<C: Controller> Simulation<C> {
         rep.stats.l1_hits = self.hierarchy.l1_hits();
         rep.stats.l2_hits = self.hierarchy.l2_hits();
         rep.stats.llc_hits = self.hierarchy.llc_hits();
+        rep.stats.cache_accesses = self.hierarchy.accesses();
         rep
+    }
+}
+
+/// The sharded run path: the same trace/cache front end as [`Simulation`],
+/// but **open-loop** — post-LLC accesses are routed by set into a
+/// [`ShardedSession`]'s per-slice queues and simulated on worker threads,
+/// while the core clocks advance by a constant nominal memory latency per
+/// LLC miss instead of the controller's simulated latency.
+///
+/// Dropping the latency feedback is what buys parallelism: with it, the
+/// next access's timestamp depends on the previous access's simulated
+/// result and the pipeline serializes at depth one. Without it, the whole
+/// access stream (addresses, interleaving, and timestamps) is a pure
+/// function of config + workload, so every slice sees an identical
+/// sub-stream no matter how many workers drain the queues — the merged
+/// stats are byte-identical across shard counts (locked by
+/// `rust/tests/sharded_parity.rs`). Timing-derived stats are therefore
+/// mutually comparable between sharded runs but **not** with the
+/// closed-loop [`Simulation::run`]; see DESIGN.md §9.
+pub struct ShardedSimulation {
+    frontend: Frontend,
+    session: ShardedSession,
+}
+
+/// The single-threaded trace/cache front end of a sharded run.
+struct Frontend {
+    hierarchy: Hierarchy,
+    mapper: AddrMapper,
+    plan: crate::engine::sharded::ShardPlan,
+    workload: Box<dyn Workload>,
+    clocks: Vec<Cycle>,
+    warm_clocks: Vec<Cycle>,
+    instrs: Vec<u64>,
+    cores: u32,
+    accesses_per_core: u64,
+    warmup_per_core: u64,
+    block_bytes: u32,
+    /// Constant per-miss clock charge (the fast tier's unloaded 64 B
+    /// latency): keeps timestamps controller-independent.
+    nominal_mem_lat: Cycle,
+}
+
+impl ShardedSimulation {
+    /// Assemble the sharded run for `cfg`'s workload knobs over an
+    /// already-built [`ShardedSession`] (from
+    /// [`EngineBuilder::build_sharded`](crate::engine::EngineBuilder::build_sharded),
+    /// which is also the preferred way to construct the whole thing via
+    /// [`EngineBuilder::run_sharded`](crate::engine::EngineBuilder::run_sharded)).
+    pub fn new(cfg: &SystemConfig, workload: Box<dyn Workload>, session: ShardedSession) -> Self {
+        let cores = cfg.workload.cores;
+        let mapper = AddrMapper::new(*session.full_layout(), cfg.hybrid.mode);
+        let nominal_mem_lat = MemDevice::new(cfg.fast_mem).unloaded_latency(64);
+        ShardedSimulation {
+            frontend: Frontend {
+                hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
+                mapper,
+                plan: *session.plan(),
+                workload,
+                clocks: vec![0; cores as usize],
+                warm_clocks: vec![0; cores as usize],
+                instrs: vec![0; cores as usize],
+                cores,
+                accesses_per_core: cfg.workload.accesses_per_core,
+                warmup_per_core: cfg.workload.warmup_per_core,
+                block_bytes: cfg.hybrid.block_bytes,
+                nominal_mem_lat,
+            },
+            session,
+        }
+    }
+
+    /// The underlying sharded session (plan, slices, layout).
+    pub fn session(&self) -> &ShardedSession {
+        &self.session
+    }
+
+    /// Run warmup + measurement across the plan's worker threads and
+    /// return the merged report.
+    pub fn run(mut self) -> SimReport {
+        let frontend = &mut self.frontend;
+        self.session.run_stream(|feed| frontend.run(feed));
+        let mut rep = self.session.finish();
+        let fe = &self.frontend;
+        rep.stats.instructions = fe.instrs.iter().sum();
+        rep.stats.max_core_cycles = fe
+            .clocks
+            .iter()
+            .zip(&fe.warm_clocks)
+            .map(|(c, w)| c - w)
+            .max()
+            .unwrap_or(0);
+        rep.stats.total_core_cycles = fe
+            .clocks
+            .iter()
+            .zip(&fe.warm_clocks)
+            .map(|(c, w)| c - w)
+            .sum();
+        rep.stats.l1_hits = fe.hierarchy.l1_hits();
+        rep.stats.l2_hits = fe.hierarchy.l2_hits();
+        rep.stats.llc_hits = fe.hierarchy.llc_hits();
+        rep.stats.cache_accesses = fe.hierarchy.accesses();
+        rep
+    }
+}
+
+impl Frontend {
+    /// 64 B line offset within the migration block.
+    #[inline]
+    fn line_of(&self, addr: u64) -> u32 {
+        ((addr % self.block_bytes as u64) / 64) as u32
+    }
+
+    /// Advance one access on `core`, feeding post-LLC traffic to the
+    /// shards. Mirrors [`Simulation::step`] except the clock charge for an
+    /// LLC miss is the nominal latency, not the controller's answer.
+    fn step(&mut self, core: usize, feed: &mut ShardFeeder) {
+        let acc = self.workload.next(core);
+        let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
+        self.clocks[core] += gap_cycles;
+        let now = self.clocks[core];
+
+        let hr = self.hierarchy.access(core, acc.addr, acc.kind);
+        let mut lat = hr.latency;
+        if hr.llc_miss {
+            let (slice, set, idx) = self.mapper.translate_sliced(acc.addr, &self.plan);
+            feed.push_routed(slice, Access {
+                set,
+                idx,
+                line: self.line_of(acc.addr),
+                kind: acc.kind,
+                now: now + hr.latency,
+            });
+            lat += self.nominal_mem_lat;
+        }
+        for wb in hr.writebacks() {
+            let (slice, set, idx) = self.mapper.translate_sliced(*wb, &self.plan);
+            feed.push_routed(slice, Access {
+                set,
+                idx,
+                line: self.line_of(*wb),
+                kind: AccessKind::Write,
+                now: now + lat,
+            });
+        }
+        self.clocks[core] += lat;
+        self.instrs[core] += acc.gap_instrs as u64 + 1;
+    }
+
+    /// Warmup + measurement over the feed: the same schedule as
+    /// [`Simulation::run`] (round-robin warmup, laggard-core
+    /// measurement), with the stats reset routed through the stream so
+    /// each slice resets at a deterministic point of its sub-stream.
+    fn run(&mut self, feed: &mut ShardFeeder) {
+        for _ in 0..self.warmup_per_core {
+            for core in 0..self.cores as usize {
+                self.step(core, feed);
+            }
+        }
+        feed.reset_stats();
+        self.warm_clocks.copy_from_slice(&self.clocks);
+        for i in self.instrs.iter_mut() {
+            *i = 0;
+        }
+
+        let mut remaining: Vec<u64> = vec![self.accesses_per_core; self.cores as usize];
+        let mut live = self.cores as usize;
+        while live > 0 {
+            let mut core = usize::MAX;
+            let mut best = Cycle::MAX;
+            for c in 0..self.cores as usize {
+                if remaining[c] > 0 && self.clocks[c] < best {
+                    best = self.clocks[c];
+                    core = c;
+                }
+            }
+            self.step(core, feed);
+            remaining[core] -= 1;
+            if remaining[core] == 0 {
+                live -= 1;
+            }
+        }
     }
 }
 

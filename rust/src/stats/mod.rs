@@ -131,6 +131,34 @@ impl Stats {
         }
     }
 
+    /// Merge the stats of one shard/slice of a set-partitioned run
+    /// ([`crate::engine::sharded`]). Unlike [`Stats::merge`] — which
+    /// treats two samples of the *same* run and lets the later storage
+    /// gauges win — shards own **disjoint set ranges**, so their storage
+    /// gauges (`metadata_bytes_used`, `metadata_bytes_reserved`,
+    /// `donated_slots`) are partial sums and must be **added**, exactly
+    /// like the event counters. `max_core_cycles` still maxes: shards
+    /// share the front end's wall clock.
+    pub fn merge_shard(&mut self, o: &Stats) {
+        macro_rules! add {
+            ($($f:ident),* $(,)?) => { $( self.$f += o.$f; )* };
+        }
+        add!(
+            mem_accesses, mem_reads, mem_writes, fast_served, slow_served,
+            metadata_cycles, fast_data_cycles, slow_data_cycles,
+            rc_probes, rc_hits_nonid, rc_hits_id, rc_sector_bit_miss,
+            table_walks, table_walk_mem_accesses, lookups_identity,
+            lookups_nonidentity, useful_bytes, fast_traffic_bytes,
+            slow_traffic_bytes, migration_bytes, writeback_bytes,
+            metadata_traffic_bytes, fills, evictions,
+            metadata_priority_evictions, saved_slot_fills, subblock_fetches,
+            dealloc_recycled, metadata_bytes_used, metadata_bytes_reserved,
+            donated_slots, instructions,
+            total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
+        );
+        self.max_core_cycles = self.max_core_cycles.max(o.max_core_cycles);
+    }
+
     // ---- derived metrics ----
 
     /// Fraction of demand accesses served by the fast tier (Fig. 10a).
@@ -191,7 +219,7 @@ impl Stats {
     /// harness (rust/tests/golden.rs) and the determinism matrix compare
     /// exactly this.
     pub fn canonical(&self) -> String {
-        let pairs: [(&str, u64); 37] = [
+        let pairs: [(&str, u64); 38] = [
             ("mem_accesses", self.mem_accesses),
             ("mem_reads", self.mem_reads),
             ("mem_writes", self.mem_writes),
@@ -229,6 +257,7 @@ impl Stats {
             ("l1_hits", self.l1_hits),
             ("l2_hits", self.l2_hits),
             ("llc_hits", self.llc_hits),
+            ("cache_accesses", self.cache_accesses),
         ];
         let mut out = String::with_capacity(pairs.len() * 24);
         for (i, (k, v)) in pairs.iter().enumerate() {
@@ -259,6 +288,48 @@ mod tests {
         assert_eq!(s.bandwidth_bloat(), 0.0);
         assert_eq!(s.rc_hit_rate(), 0.0);
         assert_eq!(s.performance(), 0.0);
+    }
+
+    #[test]
+    fn canonical_serializes_the_full_vector() {
+        // Every one of the 38 counters must appear — `cache_accesses` was
+        // historically omitted, leaving golden snapshots blind to it.
+        let s = Stats { cache_accesses: 7, ..Default::default() };
+        let c = s.canonical();
+        assert_eq!(c.matches('=').count(), 38);
+        assert!(c.ends_with("cache_accesses=7"), "{c}");
+    }
+
+    #[test]
+    fn merge_shard_sums_storage_gauges() {
+        // Shards own disjoint set ranges: gauges are partial sums, not
+        // later samples of the same whole.
+        let mut a = Stats {
+            mem_accesses: 10,
+            max_core_cycles: 100,
+            metadata_bytes_used: 64,
+            metadata_bytes_reserved: 1024,
+            donated_slots: 3,
+            ..Default::default()
+        };
+        let b = Stats {
+            mem_accesses: 5,
+            max_core_cycles: 70,
+            metadata_bytes_used: 32,
+            metadata_bytes_reserved: 1024,
+            donated_slots: 2,
+            ..Default::default()
+        };
+        a.merge_shard(&b);
+        assert_eq!(a.mem_accesses, 15);
+        assert_eq!(a.max_core_cycles, 100);
+        assert_eq!(a.metadata_bytes_used, 96);
+        assert_eq!(a.metadata_bytes_reserved, 2048);
+        assert_eq!(a.donated_slots, 5);
+        // Contrast: plain merge lets the later gauge sample win.
+        let mut c = Stats { metadata_bytes_reserved: 1024, ..Default::default() };
+        c.merge(&b);
+        assert_eq!(c.metadata_bytes_reserved, 1024);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Sharded-execution parity: the headline invariant of the sharded path
+//! is that the merged canonical stat vector of an N-shard run is
+//! **byte-identical** to the serial (1-shard) run of the same sharded
+//! driver, for every design point, every adversarial scenario, and every
+//! shard count — including counts that don't divide the slice count
+//! evenly (N = 7) and counts larger than the slice count (clamped).
+//!
+//! Also locked here: sharding never crosses a set boundary (each slice's
+//! controller only ever sees its own local sets, proven structurally and
+//! under the [`trimma::verify`] differential oracle), and the merged
+//! storage gauges equal the full config's reservation (the gauge-summing
+//! merge reassembles exactly the unsliced metadata budget).
+
+mod common;
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::SystemConfig;
+use trimma::engine::EngineBuilder;
+use trimma::hybrid::Controller;
+use trimma::sim::SimReport;
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+fn run_sharded(dp: DesignPoint, cfg: &SystemConfig, wl: &str, shards: usize) -> SimReport {
+    EngineBuilder::from_config(cfg.clone())
+        .workload(wl)
+        .ideal(dp == DesignPoint::Ideal)
+        .shards(shards)
+        .run_sharded()
+        .unwrap_or_else(|e| panic!("{dp:?}/{wl} x{shards}: {e}"))
+}
+
+/// The full matrix: every design point x every adversarial scenario, at
+/// 1, 2, 4, and 7 shards. 7 exercises uneven contiguous slice groups
+/// (64 slices -> groups of 10/9) and, for 4-set flat designs, the clamp
+/// down to 4 workers.
+#[test]
+fn shard_count_never_changes_the_canonical_stats() {
+    for dp in DesignPoint::ALL {
+        let cfg = common::tiny(*dp);
+        for wl in ADVERSARIAL {
+            let base = run_sharded(*dp, &cfg, wl, 1);
+            assert!(base.stats.mem_accesses > 0, "{dp:?}/{wl}: nothing reached memory");
+            let base_canon = base.stats.canonical();
+            for n in [2usize, 4, 7] {
+                let got = run_sharded(*dp, &cfg, wl, n).stats.canonical();
+                assert_eq!(
+                    got, base_canon,
+                    "{dp:?}/{wl}: {n}-shard run diverged from the 1-shard run"
+                );
+            }
+        }
+    }
+}
+
+/// Sharded runs are also deterministic run-to-run (same config, same
+/// shard count, fresh OS threads).
+#[test]
+fn sharded_runs_are_deterministic_run_to_run() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let a = run_sharded(DesignPoint::TrimmaCache, &cfg, "adv_set_thrash", 4);
+    let b = run_sharded(DesignPoint::TrimmaCache, &cfg, "adv_set_thrash", 4);
+    assert_eq!(a.stats.canonical(), b.stats.canonical());
+}
+
+/// Each slice is a self-contained sub-machine: its controller's layout
+/// covers exactly the plan's per-slice set count with the full config's
+/// per-set geometry, and its remap state answers only local sets.
+#[test]
+fn slices_are_structurally_set_local() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::MemPod, DesignPoint::AlloyCache] {
+        let cfg = common::tiny(dp);
+        let session = EngineBuilder::from_config(cfg.clone())
+            .shards(4)
+            .build_sharded()
+            .unwrap();
+        let plan = *session.plan();
+        assert_eq!(
+            plan.num_slices() * plan.sets_per_slice(),
+            cfg.hybrid.num_sets,
+            "{dp:?}: slices must tile the set space"
+        );
+        for sess in session.sessions() {
+            let l = sess.layout();
+            assert_eq!(l.num_sets, plan.sets_per_slice(), "{dp:?}");
+            assert_eq!(l.fast_per_set, session.full_layout().fast_per_set, "{dp:?}");
+            assert_eq!(l.slow_per_set, session.full_layout().slow_per_set, "{dp:?}");
+            // The slice's own self-check must hold for every local set.
+            for set in 0..l.num_sets {
+                sess.controller()
+                    .debug_check_set(set)
+                    .unwrap_or_else(|e| panic!("{dp:?} set {set}: {e}"));
+            }
+        }
+    }
+}
+
+/// Run the remap designs sharded under the differential remap oracle
+/// (`cfg.hybrid.verify`): every slice's controller is shadowed by its own
+/// [`trimma::verify`] reference model, which checks each translation,
+/// placement, and identity classification against ground truth and sweeps
+/// the tables for bijectivity — inside the slice's local set space. A
+/// green run proves the sharded router never hands a slice an access
+/// outside its sets (the oracle would reject the out-of-range state) and
+/// that slicing preserves every remap invariant.
+#[test]
+fn sharded_remap_designs_pass_the_differential_oracle() {
+    for dp in [
+        DesignPoint::TrimmaCache,
+        DesignPoint::TrimmaFlat,
+        DesignPoint::MemPod,
+        DesignPoint::LinearCache,
+    ] {
+        let cfg = presets::with_verify(common::tiny(dp));
+        let rep = run_sharded(dp, &cfg, "adv_migration_storm", 4);
+        assert!(rep.stats.mem_accesses > 0, "{dp:?}");
+    }
+}
+
+/// The gauge-summing merge reassembles the unsliced metadata budget: the
+/// summed per-slice reservations equal the classic closed-loop run's
+/// reservation (a pure function of the geometry, so the two execution
+/// models must agree on it exactly).
+#[test]
+fn merged_storage_gauges_match_the_serial_reservation() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::MemPod, DesignPoint::LinearCache] {
+        let cfg = common::tiny(dp);
+        let serial = common::run(dp, &cfg, "adv_drift");
+        let sharded = run_sharded(dp, &cfg, "adv_drift", 4);
+        assert_eq!(
+            sharded.stats.metadata_bytes_reserved, serial.metadata_bytes_reserved,
+            "{dp:?}: summed slice reservations must equal the full reservation"
+        );
+        assert!(sharded.stats.metadata_bytes_reserved > 0, "{dp:?}");
+    }
+}
