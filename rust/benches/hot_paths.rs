@@ -4,7 +4,9 @@
 //! emits the schema-versioned JSON report the CI perf gate consumes.
 
 use trimma::bench_util::Bench;
-use trimma::coordinator::bench::{run_hot_paths, run_sharded_sweep, run_sim_sweep, SHARD_COUNTS};
+use trimma::coordinator::bench::{
+    run_hot_paths, run_pipeline_sweep, run_sharded_sweep, run_sim_sweep, SHARD_COUNTS,
+};
 use trimma::coordinator::geomean;
 
 fn main() {
@@ -13,4 +15,5 @@ fn main() {
     let tputs = run_sim_sweep(&mut b, false);
     println!("  -> geomean {:.2} M mem-steps/s over the sim sweep", geomean(&tputs));
     run_sharded_sweep(&mut b, false, SHARD_COUNTS);
+    run_pipeline_sweep(&mut b, false, 4);
 }

@@ -310,9 +310,64 @@ pub fn run_sharded_sweep(b: &mut Bench, quick: bool, counts: &[usize]) -> Vec<(u
     out
 }
 
+/// The pipelined-front-end comparison sweep: the same [`SIM_DESIGNS`] x
+/// [`SIM_WORKLOADS`] matrix as [`run_sharded_sweep`], at one worker count
+/// (`shards`, min 2 so the routing stage has real consumers), front end
+/// inline vs pipelined. Records one label per mode —
+/// `frontend_pipeline/off` and `frontend_pipeline/on` — with the
+/// aggregate matrix throughput attached (M mem-steps/s), prints the
+/// pipelined speedup over inline, and returns the `(pipelined, msteps)`
+/// pairs. Construction stays outside the timed region for the same
+/// reason as in [`run_sharded_sweep`].
+pub fn run_pipeline_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let n = shards.max(2);
+    let mut out = Vec::new();
+    for pipeline in [false, true] {
+        let mut sims: Vec<ShardedSimulation> = Vec::new();
+        let mut steps = 0.0;
+        for dp in SIM_DESIGNS {
+            for wl in SIM_WORKLOADS {
+                let builder = EngineBuilder::new(*dp)
+                    .workload(*wl)
+                    .shards(n)
+                    .configure(move |cfg| {
+                        cfg.workload.accesses_per_core = accesses;
+                        cfg.workload.warmup_per_core = warmup;
+                    });
+                let cfg = builder.build_config().expect("sweep preset");
+                steps += cfg.workload.cores as f64 * (accesses + warmup) as f64;
+                let workload = by_name(wl, &cfg).unwrap_or_else(|e| panic!("{e}"));
+                let session = builder.build_sharded().expect("sharded session");
+                sims.push(ShardedSimulation::new(&cfg, workload, session).pipelined(pipeline));
+            }
+        }
+        let label = format!("frontend_pipeline/{}", if pipeline { "on" } else { "off" });
+        let (_done, dt) = b.once(&label, move || {
+            for sim in sims {
+                sim.run();
+            }
+        });
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((pipeline, msteps));
+    }
+    if let [(_, off), (_, on)] = out[..] {
+        println!(
+            "  pipelined front end at {n} shards: {:.2}x over inline",
+            on / off.max(1e-12)
+        );
+    }
+    out
+}
+
 /// Run the whole suite and package it as a schema-versioned report.
-/// `shards` feeds [`shard_counts`] for the sharded-session sweep.
-pub fn full_report(tag: &str, quick: bool, shards: usize) -> BenchReport {
+/// `shards` feeds [`shard_counts`] for the sharded-session sweep;
+/// `pipeline` additionally runs [`run_pipeline_sweep`] (the
+/// `frontend_pipeline/{off,on}` labels — `trimma bench --pipeline`, and
+/// what CI's bench-smoke asserts).
+pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
         Bench::with_target("trimma-bench", 50e6)
@@ -322,6 +377,9 @@ pub fn full_report(tag: &str, quick: bool, shards: usize) -> BenchReport {
     run_hot_paths(&mut b);
     let tputs = run_sim_sweep(&mut b, quick);
     run_sharded_sweep(&mut b, quick, &shard_counts(quick, shards));
+    if pipeline {
+        run_pipeline_sweep(&mut b, quick, shards);
+    }
     BenchReport {
         schema_version: SCHEMA_VERSION,
         tag: tag.to_string(),

@@ -101,6 +101,7 @@ pub fn fig1(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
                 ideal,
                 tag_match,
                 shards: 0,
+                pipeline: false,
             });
         }
     }

@@ -40,6 +40,12 @@ pub struct Job {
     /// The two execution models' timing stats are not comparable — see
     /// DESIGN.md §9.
     pub shards: usize,
+    /// Run the sharded path's front end pipelined (shard routing on a
+    /// dedicated stage, overlapping trace generation + cache filtering —
+    /// [`EngineBuilder::pipeline`](crate::engine::EngineBuilder::pipeline)).
+    /// Only meaningful with `shards >= 1`; merged stats are byte-identical
+    /// either way.
+    pub pipeline: bool,
 }
 
 impl Job {
@@ -52,6 +58,7 @@ impl Job {
             ideal: false,
             tag_match: false,
             shards: 0,
+            pipeline: false,
         }
     }
 
@@ -72,6 +79,13 @@ impl Job {
         self
     }
 
+    /// Run this job's sharded front end pipelined (requires
+    /// [`Job::with_shards`] with `shards >= 1` to take effect).
+    pub fn with_pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
     /// The builder describing this job's run.
     pub fn builder(&self) -> EngineBuilder {
         EngineBuilder::from_config(self.cfg.clone())
@@ -79,6 +93,7 @@ impl Job {
             .ideal(self.ideal)
             .tag_match(self.tag_match)
             .shards(self.shards.max(1))
+            .pipeline(self.pipeline)
     }
 }
 
@@ -294,6 +309,19 @@ mod tests {
         let rep = run_job(&job).unwrap();
         assert!(rep.stats.mem_accesses > 0);
         assert!(rep.stats.instructions > 0);
+    }
+
+    #[test]
+    fn pipelined_job_matches_inline_job() {
+        let mk = |pipeline| {
+            Job::new("piped", tiny(DesignPoint::TrimmaCache), "adv_drift")
+                .with_shards(2)
+                .with_pipeline(pipeline)
+        };
+        let inline = run_job(&mk(false)).unwrap();
+        let piped = run_job(&mk(true)).unwrap();
+        assert!(piped.stats.mem_accesses > 0);
+        assert_eq!(inline.stats.canonical(), piped.stats.canonical());
     }
 
     #[test]

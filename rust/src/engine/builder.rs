@@ -88,6 +88,7 @@ pub struct EngineBuilder {
     verify: bool,
     tag_match: bool,
     shards: usize,
+    pipeline: bool,
     tweaks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
 }
 
@@ -103,6 +104,7 @@ impl EngineBuilder {
             verify: false,
             tag_match: false,
             shards: 1,
+            pipeline: false,
             tweaks: Vec::new(),
         }
     }
@@ -167,6 +169,20 @@ impl EngineBuilder {
     /// effect on the classic closed-loop [`EngineBuilder::run`] path.
     pub fn shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// Run the sharded path's front end **pipelined**: trace generation +
+    /// cache filtering + translation on the calling thread, shard routing
+    /// on a dedicated router stage (see [`crate::sim::ExecCore`]'s module
+    /// docs for the stage split and the determinism argument). Merged
+    /// canonical stats are byte-identical pipelined vs inline, locked by
+    /// `rust/tests/pipeline_parity.rs`. Like [`EngineBuilder::shards`],
+    /// this has no effect on the classic closed-loop
+    /// [`EngineBuilder::run`] path (whose latency feedback cannot be
+    /// pipelined).
+    pub fn pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
         self
     }
 
@@ -261,7 +277,7 @@ impl EngineBuilder {
         let cfg = self.build_config()?;
         let wl = workloads::by_name(name, &cfg)?;
         let session = self.build_sharded()?;
-        Ok(ShardedSimulation::new(&cfg, wl, session).run())
+        Ok(ShardedSimulation::new(&cfg, wl, session).pipelined(self.pipeline).run())
     }
 
     /// Build the full trace-driven simulation (requires a workload).
@@ -375,6 +391,18 @@ mod tests {
         assert!(rep.stats.mem_accesses > 0);
         assert!(rep.stats.instructions > 0);
         assert_eq!(rep.name, "adv_drift");
+    }
+
+    #[test]
+    fn pipeline_toggle_runs_and_matches_inline() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .workload("adv_drift")
+            .configure(shrink)
+            .shards(2);
+        let inline = b.run_sharded().unwrap();
+        let piped = b.pipeline(true).run_sharded().unwrap();
+        assert!(piped.stats.mem_accesses > 0);
+        assert_eq!(inline.stats.canonical(), piped.stats.canonical());
     }
 
     #[test]

@@ -28,9 +28,12 @@
 //! * [`sharded`] — set-partitioned parallel execution of a **single**
 //!   run: a [`ShardPlan`] cuts the set space into contiguous slices, a
 //!   [`ShardedSession`] owns one `Session` per slice, and lock-free SPSC
-//!   batch queues fan the (single-threaded) front end's access stream out
-//!   to worker threads, with a deterministic gauge-summing merge
-//!   (`EngineBuilder::shards(n)` + `build_sharded`/`run_sharded`).
+//!   batch queues fan the front end's access stream out to worker
+//!   threads, with a deterministic gauge-summing merge
+//!   (`EngineBuilder::shards(n)` + `build_sharded`/`run_sharded`). The
+//!   front end itself is the unified [`crate::sim::ExecCore`] loop and
+//!   can be pipelined (`EngineBuilder::pipeline(true)`): shard routing
+//!   moves to a dedicated stage, with byte-identical merged stats.
 //!
 //! ```no_run
 //! use trimma::config::presets::DesignPoint;

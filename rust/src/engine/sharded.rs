@@ -288,8 +288,11 @@ impl<T> Drop for SpscInner<T> {
     }
 }
 
-struct Producer<T>(Arc<SpscInner<T>>);
-struct Consumer<T>(Arc<SpscInner<T>>);
+/// Producer half of [`spsc_channel`]. Crate-visible: the pipelined front
+/// end (`sim::core`) reuses the ring for its front-stage hand-off.
+pub(crate) struct Producer<T>(Arc<SpscInner<T>>);
+/// Consumer half of [`spsc_channel`].
+pub(crate) struct Consumer<T>(Arc<SpscInner<T>>);
 
 impl<T> Drop for Producer<T> {
     fn drop(&mut self) {
@@ -299,7 +302,9 @@ impl<T> Drop for Producer<T> {
     }
 }
 
-fn spsc_channel<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+/// A bounded lock-free single-producer single-consumer ring of `capacity`
+/// (a power of two) messages.
+pub(crate) fn spsc_channel<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
     assert!(capacity.is_power_of_two());
     let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
         (0..capacity).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
@@ -330,7 +335,7 @@ impl<T> Producer<T> {
     /// Push, spinning (with yields) while the ring is full. Panics if the
     /// consumer vanished with the ring full (a worker died mid-run) —
     /// best-effort deadlock-into-panic conversion, not a data channel.
-    fn send(&mut self, mut v: T) {
+    pub(crate) fn send(&mut self, mut v: T) {
         loop {
             match self.try_push(v) {
                 Ok(()) => return,
@@ -363,7 +368,7 @@ impl<T> Consumer<T> {
 
     /// Pop, spinning while the ring is empty; `None` once the producer
     /// handle is dropped and the ring is drained.
-    fn recv(&mut self) -> Option<T> {
+    pub(crate) fn recv(&mut self) -> Option<T> {
         let mut spins = 0u32;
         loop {
             if let Some(v) = self.try_pop() {
@@ -410,6 +415,11 @@ impl ShardFeeder {
         }
     }
 
+    /// The set partition this feeder routes against.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
     /// Feed one access (global set space). Routed to its slice; panics if
     /// the set is outside the planned set space.
     #[inline]
@@ -432,6 +442,18 @@ impl ShardFeeder {
         buf.push(a);
         if buf.len() == BATCH_ACCESSES {
             self.flush_slice(slice);
+        }
+    }
+
+    /// Feed a batch of already-routed `(slice, local access)` pairs, in
+    /// order — exactly equivalent to `batch.len()`
+    /// [`ShardFeeder::push_routed`] calls behind a single dispatch. The
+    /// unified execution core's open-loop writeback path and the pipelined
+    /// router stage both hand their per-step batches through this.
+    #[inline]
+    pub fn push_routed_batch(&mut self, batch: &[(u32, Access)]) {
+        for (slice, a) in batch {
+            self.push_routed(*slice, *a);
         }
     }
 

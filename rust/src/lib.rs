@@ -28,7 +28,12 @@
 //! path for every design point. Streaming drivers feed accesses through
 //! [`engine::Session`]; [`engine::sharded`] splits one run's set space
 //! across worker threads (`EngineBuilder::shards(n)`) with a
-//! deterministic, shard-count-invariant merge.
+//! deterministic, shard-count-invariant merge. Both execution models —
+//! closed loop and sharded open loop — run on the **one** unified
+//! [`sim::ExecCore`] scheduling loop, parameterized over a
+//! [`sim::MissSink`]; the open loop's front end can additionally be
+//! pipelined (`EngineBuilder::pipeline(true)`) with byte-identical
+//! merged statistics.
 //!
 //! The AOT-compiled JAX/Pallas trace generator is loaded through
 //! [`runtime`] (PJRT CPU client); Python never runs at simulation time.

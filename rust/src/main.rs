@@ -6,10 +6,12 @@
 //!            [--accesses N] [--ideal] [--verify] [--ratio R] [--block B]
 //!            [--shards N]                  N>0: open-loop sharded run
 //!                                          across N worker threads
+//!            [--pipeline]                  pipelined front end (needs
+//!                                          --shards N with N>=1)
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
-//!                                           hot-path + sim-sweep perf
+//!              [--pipeline]                hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json    validate a report's schema
 //! trimma bench-compare --baseline B --new N [--warn-pct 10] [--fail-pct 30]
@@ -31,10 +33,11 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
              [--accesses N] [--cores N] [--ideal] [--verify] [--ratio R] [--block B]
              [--shards N]   N>0: open-loop sharded run across N workers
+             [--pipeline]   pipelined front end (needs --shards N, N>=1)
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
-  trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
+  trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
   trimma bench-check --report bench.json
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -143,6 +146,21 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
             println!("(--shards 0: classic closed-loop run)");
         }
     }
+    if has("--pipeline") {
+        if job.shards == 0 {
+            eprintln!(
+                "--pipeline needs --shards N (N >= 1): the pipelined front end is \
+                 part of the open-loop sharded path (the closed loop's latency \
+                 feedback cannot be pipelined)"
+            );
+            std::process::exit(2);
+        }
+        job.pipeline = true;
+        println!(
+            "(pipelined front end: shard routing on a dedicated stage, overlapping \
+             trace generation + cache filtering; merged stats identical to inline)"
+        );
+    }
     let t0 = std::time::Instant::now();
     let rep = run_job(&job).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -184,7 +202,8 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let quick = has("--quick");
     let tag = get("--tag").unwrap_or_else(|| if quick { "quick".into() } else { "full".into() });
     let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(2);
-    let report = trimma::coordinator::bench::full_report(&tag, quick, shards);
+    let pipeline = has("--pipeline");
+    let report = trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline);
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
         report.geomean_sim_msteps_per_s,

@@ -1,0 +1,665 @@
+//! The unified execution core: **one** trace/cache front end and
+//! scheduling loop, parameterized over where LLC-missing traffic goes.
+//!
+//! Before this module existed the crate carried two forked copies of the
+//! same ~80-line warmup + laggard-core skeleton — `Simulation::run`
+//! (closed loop) and the sharded `Frontend::run` (open loop) — and a
+//! scheduling fix applied to one silently diverged the other. Now there
+//! is exactly one copy: [`ExecCore`] owns the CPU side of a run (cache
+//! hierarchy, first-touch mapper, workload, per-core clocks and retired
+//! instruction counters) and drives the one `step`/`run` loop; the
+//! execution *model* is a [`MissSink`] implementation:
+//!
+//! * [`ClosedLoop`] — wraps an [`engine::Session`](crate::engine::Session)
+//!   and feeds each post-LLC access straight into the controller,
+//!   charging the core the controller's **real simulated latency**. This
+//!   is the paper-figure execution model.
+//! * [`OpenLoop`] — routes each post-LLC access into a
+//!   [`ShardFeeder`]'s per-slice queues and charges a **constant nominal
+//!   latency** instead (the latency feedback would serialize the
+//!   pipeline; see [`crate::engine::sharded`]). This is the sharded
+//!   throughput model.
+//!
+//! Both sinks monomorphize: `ExecCore::run::<ClosedLoop<AnyController>>`
+//! and `ExecCore::run::<OpenLoop>` are separate compiled loops with no
+//! dynamic dispatch on the per-access path.
+//!
+//! ## The pipelined front end
+//!
+//! On top of the unified core, the open-loop path can run **pipelined**
+//! ([`ShardedSimulation::pipelined`](crate::sim::ShardedSimulation::pipelined),
+//! `EngineBuilder::pipeline(true)`, `trimma run/bench --pipeline`): trace
+//! generation + L1/L2/LLC filtering + address translation stay on the
+//! calling thread, while the *shard routing* stage (per-slice batch
+//! accumulation and SPSC hand-off to the shard workers) moves to a
+//! dedicated router thread, connected by one more SPSC ring of
+//! pre-routed `(slice, Access)` batches. Routing is where the front end
+//! absorbs worker back-pressure (a full shard queue spins the pusher), so
+//! hoisting it off the generation thread lets generation and filtering
+//! run ahead while the router waits — the ROADMAP's "front end is the
+//! Amdahl bottleneck" scale step.
+//!
+//! Trace generation itself is batch-granular and double-buffered: the
+//! core keeps two [`Workload::next_batch`] buffers per core (one
+//! draining, one standing by) so the virtual workload dispatch is paid
+//! once per [`GEN_BATCH`] accesses, not once per access. Workload streams
+//! are per-core pure (see the [`Workload::next_batch`] contract), so
+//! batched generation is access-for-access identical to per-access
+//! generation.
+//!
+//! ## Why pipelining preserves determinism
+//!
+//! The pipelined and inline open-loop runs produce **byte-identical**
+//! merged canonical stats (locked by `rust/tests/pipeline_parity.rs`):
+//!
+//! 1. clocks never depend on the routed work — an LLC miss charges the
+//!    constant nominal latency, so the access stream (addresses,
+//!    interleaving, timestamps) is the same pure function of
+//!    config + workload in both modes;
+//! 2. translation (the stateful first-touch mapper) happens on the
+//!    generating thread in stream order, before the hand-off;
+//! 3. the hand-off ring is FIFO and the router applies batches in
+//!    arrival order, so every slice still consumes exactly the serial
+//!    order restricted to its own sets, with the end-of-warmup reset
+//!    marker at the same in-stream point.
+
+use crate::cachesim::{Hierarchy, MAX_WRITEBACKS};
+use crate::config::SystemConfig;
+use crate::engine::sharded::{spsc_channel, Producer, ShardFeeder, ShardPlan};
+use crate::engine::Session;
+use crate::hybrid::{Access, Controller};
+use crate::sim::mapper::AddrMapper;
+use crate::sim::NONMEM_CPI;
+use crate::stats::Stats;
+use crate::types::{AccessKind, Cycle, MemAccess, PhysAddr};
+use crate::workloads::Workload;
+
+/// Accesses generated per [`Workload::next_batch`] call (per buffer; the
+/// core double-buffers, so up to `2 * GEN_BATCH` accesses per core are in
+/// flight ahead of consumption).
+pub const GEN_BATCH: usize = 64;
+
+/// Pre-routed accesses per batch on the pipelined front end's hand-off
+/// ring.
+const PIPE_BATCH: usize = 256;
+/// Hand-off ring capacity (messages) between the generation and routing
+/// stages of the pipelined front end.
+const PIPE_QUEUE_MSGS: usize = 256;
+
+/// Where the unified core's LLC-missing traffic goes — the execution
+/// model of a run. Implementations receive the first-touch mapper (owned
+/// by the core, handed down so translation stays in stream order) and
+/// decide both *where* the access lands and *what stall* the issuing core
+/// pays for it.
+pub trait MissSink {
+    /// One LLC-missing demand access at physical `addr` (64 B line `line`
+    /// within its migration block), arriving at cycle `now`. Returns the
+    /// stall charged to the issuing core, in cycles.
+    fn demand(
+        &mut self,
+        mapper: &mut AddrMapper,
+        addr: PhysAddr,
+        line: u32,
+        kind: AccessKind,
+        now: Cycle,
+    ) -> Cycle;
+
+    /// Posted dirty-LLC writebacks of one step, as `(addr, line)` pairs
+    /// (at most `MAX_WRITEBACKS` = one per cache level crossed), all
+    /// timestamped `now`. Writebacks charge banks and statistics but
+    /// never stall the core.
+    fn writebacks(&mut self, mapper: &mut AddrMapper, wbs: &[(PhysAddr, u32)], now: Cycle);
+
+    /// End-of-warmup statistics reset, delivered at its exact in-stream
+    /// point (after every warmup access, before the first measured one).
+    fn reset_stats(&mut self);
+}
+
+/// The closed-loop sink: every post-LLC access goes through a streaming
+/// [`Session`] and the controller's simulated demand latency feeds back
+/// into the issuing core's clock. This is the execution model of all
+/// paper figures.
+pub struct ClosedLoop<C: Controller> {
+    session: Session<C>,
+}
+
+impl<C: Controller> ClosedLoop<C> {
+    /// Wrap a session as a miss sink.
+    pub fn new(session: Session<C>) -> Self {
+        ClosedLoop { session }
+    }
+
+    /// The wrapped streaming session.
+    pub fn session(&self) -> &Session<C> {
+        &self.session
+    }
+
+    /// Mutable access to the wrapped session (end-of-run reporting).
+    pub fn session_mut(&mut self) -> &mut Session<C> {
+        &mut self.session
+    }
+}
+
+impl<C: Controller> MissSink for ClosedLoop<C> {
+    #[inline]
+    fn demand(
+        &mut self,
+        mapper: &mut AddrMapper,
+        addr: PhysAddr,
+        line: u32,
+        kind: AccessKind,
+        now: Cycle,
+    ) -> Cycle {
+        let (set, idx) = mapper.translate(addr);
+        self.session.push(Access { set, idx, line, kind, now })
+    }
+
+    #[inline]
+    fn writebacks(&mut self, mapper: &mut AddrMapper, wbs: &[(PhysAddr, u32)], now: Cycle) {
+        // Batched through the session's block entry point — one dispatch
+        // for the whole (inline, at most MAX_WRITEBACKS-long) list.
+        let mut batch = [Access::default(); MAX_WRITEBACKS];
+        for (i, (addr, line)) in wbs.iter().enumerate() {
+            let (set, idx) = mapper.translate(*addr);
+            batch[i] = Access { set, idx, line: *line, kind: AccessKind::Write, now };
+        }
+        self.session.push_batch(&batch[..wbs.len()]);
+    }
+
+    fn reset_stats(&mut self) {
+        self.session.reset_stats();
+    }
+}
+
+/// The open-loop sink: every post-LLC access is routed by set into a
+/// [`ShardFeeder`]'s per-slice queues (simulated elsewhere — inline or on
+/// shard worker threads) and the issuing core is charged a constant
+/// nominal memory latency, keeping the access stream independent of the
+/// controller's answers. This is the sharded throughput model; see
+/// [`crate::engine::sharded`] for the determinism argument.
+pub struct OpenLoop<'a> {
+    feed: &'a mut ShardFeeder,
+    plan: ShardPlan,
+    nominal_mem_lat: Cycle,
+}
+
+impl<'a> OpenLoop<'a> {
+    /// Route into `feed`, charging `nominal_mem_lat` per demand miss.
+    pub fn new(feed: &'a mut ShardFeeder, nominal_mem_lat: Cycle) -> Self {
+        let plan = *feed.plan();
+        OpenLoop { feed, plan, nominal_mem_lat }
+    }
+}
+
+impl MissSink for OpenLoop<'_> {
+    #[inline]
+    fn demand(
+        &mut self,
+        mapper: &mut AddrMapper,
+        addr: PhysAddr,
+        line: u32,
+        kind: AccessKind,
+        now: Cycle,
+    ) -> Cycle {
+        let (slice, set, idx) = mapper.translate_sliced(addr, &self.plan);
+        self.feed.push_routed(slice, Access { set, idx, line, kind, now });
+        self.nominal_mem_lat
+    }
+
+    #[inline]
+    fn writebacks(&mut self, mapper: &mut AddrMapper, wbs: &[(PhysAddr, u32)], now: Cycle) {
+        let mut batch = [(0u32, Access::default()); MAX_WRITEBACKS];
+        for (i, (addr, line)) in wbs.iter().enumerate() {
+            let (slice, set, idx) = mapper.translate_sliced(*addr, &self.plan);
+            batch[i] =
+                (slice, Access { set, idx, line: *line, kind: AccessKind::Write, now });
+        }
+        self.feed.push_routed_batch(&batch[..wbs.len()]);
+    }
+
+    fn reset_stats(&mut self) {
+        self.feed.reset_stats();
+    }
+}
+
+// ------------------------------------------------------------ pipeline
+
+/// One message on the pipelined front end's hand-off ring.
+enum PipeMsg {
+    /// Pre-routed `(slice, local access)` pairs, in stream order.
+    Batch(Vec<(u32, Access)>),
+    /// End-of-warmup marker, at its in-stream point.
+    ResetStats,
+}
+
+/// The pipelined open-loop sink: translation happens here (generation
+/// thread, stream order — the mapper is stateful), but the routed pairs
+/// are shipped to the router thread in [`PIPE_BATCH`]-sized batches
+/// instead of being pushed into the (possibly back-pressured) shard
+/// queues directly.
+struct PipelineSink {
+    tx: Producer<PipeMsg>,
+    plan: ShardPlan,
+    buf: Vec<(u32, Access)>,
+    nominal_mem_lat: Cycle,
+}
+
+impl PipelineSink {
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            let batch = std::mem::replace(&mut self.buf, Vec::with_capacity(PIPE_BATCH));
+            self.tx.send(PipeMsg::Batch(batch));
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, slice: u32, a: Access) {
+        self.buf.push((slice, a));
+        if self.buf.len() == PIPE_BATCH {
+            self.flush();
+        }
+    }
+}
+
+impl MissSink for PipelineSink {
+    #[inline]
+    fn demand(
+        &mut self,
+        mapper: &mut AddrMapper,
+        addr: PhysAddr,
+        line: u32,
+        kind: AccessKind,
+        now: Cycle,
+    ) -> Cycle {
+        let (slice, set, idx) = mapper.translate_sliced(addr, &self.plan);
+        self.push(slice, Access { set, idx, line, kind, now });
+        self.nominal_mem_lat
+    }
+
+    #[inline]
+    fn writebacks(&mut self, mapper: &mut AddrMapper, wbs: &[(PhysAddr, u32)], now: Cycle) {
+        for (addr, line) in wbs {
+            let (slice, set, idx) = mapper.translate_sliced(*addr, &self.plan);
+            self.push(slice, Access { set, idx, line: *line, kind: AccessKind::Write, now });
+        }
+    }
+
+    fn reset_stats(&mut self) {
+        self.flush();
+        self.tx.send(PipeMsg::ResetStats);
+    }
+}
+
+/// Run `core` open-loop with the pipelined front end: the scheduling loop
+/// (generation + cache filtering + translation) runs on the calling
+/// thread, the shard-routing stage on a dedicated router thread that
+/// drains the hand-off ring into `feed` in arrival order. Merged stats
+/// are byte-identical to the inline [`OpenLoop`] run (see the module
+/// docs for why).
+pub(super) fn run_pipelined(core: &mut ExecCore, feed: &mut ShardFeeder, nominal_mem_lat: Cycle) {
+    let plan = *feed.plan();
+    let (tx, mut rx) = spsc_channel::<PipeMsg>(PIPE_QUEUE_MSGS);
+    std::thread::scope(|s| {
+        let router = s.spawn(move || {
+            while let Some(msg) = rx.recv() {
+                match msg {
+                    PipeMsg::Batch(batch) => feed.push_routed_batch(&batch),
+                    PipeMsg::ResetStats => feed.reset_stats(),
+                }
+            }
+        });
+        let mut sink =
+            PipelineSink { tx, plan, buf: Vec::with_capacity(PIPE_BATCH), nominal_mem_lat };
+        core.run(&mut sink);
+        sink.flush();
+        drop(sink); // disconnect: the router drains and exits
+        router.join().expect("pipeline router thread panicked");
+    });
+}
+
+// ----------------------------------------------------------- exec core
+
+/// One core's double-buffered trace-generation state: `cur` drains while
+/// `next` stands by full; on exhaustion they swap and the standby buffer
+/// refills through one [`Workload::next_batch`] call.
+struct GenBuf {
+    cur: Box<[MemAccess]>,
+    next: Box<[MemAccess]>,
+    pos: usize,
+}
+
+/// The unified execution core: the CPU side of a run (cache hierarchy,
+/// first-touch mapper, workload, per-core clocks and instruction
+/// counters) plus the **single** warmup + laggard-core scheduling loop,
+/// generic over the [`MissSink`] that consumes post-LLC traffic.
+///
+/// [`Simulation`](crate::sim::Simulation) (closed loop) and
+/// [`ShardedSimulation`](crate::sim::ShardedSimulation) (open loop,
+/// optionally pipelined) are thin shells over this type.
+pub struct ExecCore {
+    hierarchy: Hierarchy,
+    mapper: AddrMapper,
+    workload: Box<dyn Workload>,
+    gen: Vec<GenBuf>,
+    clocks: Vec<Cycle>,
+    warm_clocks: Vec<Cycle>,
+    instrs: Vec<u64>,
+    cores: u32,
+    accesses_per_core: u64,
+    warmup_per_core: u64,
+    block_bytes: u32,
+}
+
+impl ExecCore {
+    /// Assemble the core for `cfg`'s workload knobs. The mapper is built
+    /// by the caller against the run's layout (full or sharded), since
+    /// that is an execution-model decision.
+    pub fn new(cfg: &SystemConfig, mut workload: Box<dyn Workload>, mapper: AddrMapper) -> Self {
+        let cores = cfg.workload.cores;
+        let gen = (0..cores as usize)
+            .map(|core| {
+                let mut cur = vec![MemAccess::read(0, 0); GEN_BATCH].into_boxed_slice();
+                let mut next = vec![MemAccess::read(0, 0); GEN_BATCH].into_boxed_slice();
+                workload.next_batch(core, &mut cur);
+                workload.next_batch(core, &mut next);
+                GenBuf { cur, next, pos: 0 }
+            })
+            .collect();
+        ExecCore {
+            hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
+            mapper,
+            workload,
+            gen,
+            clocks: vec![0; cores as usize],
+            warm_clocks: vec![0; cores as usize],
+            instrs: vec![0; cores as usize],
+            cores,
+            accesses_per_core: cfg.workload.accesses_per_core,
+            warmup_per_core: cfg.workload.warmup_per_core,
+            block_bytes: cfg.hybrid.block_bytes,
+        }
+    }
+
+    /// 64 B line offset within the migration block.
+    #[inline]
+    fn line_of(&self, addr: u64) -> u32 {
+        ((addr % self.block_bytes as u64) / 64) as u32
+    }
+
+    /// Next access of `core`'s stream, from the double-buffered
+    /// generation stage.
+    #[inline]
+    fn next_access(&mut self, core: usize) -> MemAccess {
+        let b = &mut self.gen[core];
+        if b.pos == GEN_BATCH {
+            std::mem::swap(&mut b.cur, &mut b.next);
+            self.workload.next_batch(core, &mut b.next);
+            b.pos = 0;
+        }
+        let a = b.cur[b.pos];
+        b.pos += 1;
+        a
+    }
+
+    /// Advance one access on `core`: retire the gap instructions, filter
+    /// through L1/L2/LLC, hand LLC misses and posted writebacks to the
+    /// sink, and charge the core the cache latency plus whatever stall
+    /// the sink returns.
+    fn step<S: MissSink>(&mut self, core: usize, sink: &mut S) {
+        let acc = self.next_access(core);
+        let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
+        self.clocks[core] += gap_cycles;
+        let now = self.clocks[core];
+
+        let hr = self.hierarchy.access(core, acc.addr, acc.kind);
+        let mut lat = hr.latency;
+        if hr.llc_miss {
+            let line = self.line_of(acc.addr);
+            lat += sink.demand(&mut self.mapper, acc.addr, line, acc.kind, now + hr.latency);
+        }
+        // Posted writebacks: charge banks/stats, do not stall the core.
+        let wbs = hr.writebacks();
+        if !wbs.is_empty() {
+            let mut batch = [(0u64, 0u32); MAX_WRITEBACKS];
+            for (i, wb) in wbs.iter().enumerate() {
+                batch[i] = (*wb, self.line_of(*wb));
+            }
+            sink.writebacks(&mut self.mapper, &batch[..wbs.len()], now + lat);
+        }
+        self.clocks[core] += lat;
+        self.instrs[core] += acc.gap_instrs as u64 + 1;
+    }
+
+    /// Run warmup + measurement into `sink` — **the** scheduling loop of
+    /// the crate. Warmup steps every core round-robin to populate caches,
+    /// tables, and migration state; the in-stream stats reset follows;
+    /// measurement then always advances the laggard core (the smallest
+    /// local clock), so cross-core contention on shared banks is modelled
+    /// in rough timestamp order.
+    pub fn run<S: MissSink>(&mut self, sink: &mut S) {
+        for _ in 0..self.warmup_per_core {
+            for core in 0..self.cores as usize {
+                self.step(core, sink);
+            }
+        }
+        sink.reset_stats();
+        self.warm_clocks.copy_from_slice(&self.clocks);
+        for i in self.instrs.iter_mut() {
+            *i = 0;
+        }
+
+        let mut remaining: Vec<u64> = vec![self.accesses_per_core; self.cores as usize];
+        let mut live = self.cores as usize;
+        while live > 0 {
+            let mut core = usize::MAX;
+            let mut best = Cycle::MAX;
+            for c in 0..self.cores as usize {
+                if remaining[c] > 0 && self.clocks[c] < best {
+                    best = self.clocks[c];
+                    core = c;
+                }
+            }
+            self.step(core, sink);
+            remaining[core] -= 1;
+            if remaining[core] == 0 {
+                live -= 1;
+            }
+        }
+    }
+
+    /// Fill the CPU-side counters of an end-of-run report: instructions
+    /// retired, max/total measured core cycles (warmup excluded), cache
+    /// hit counters, and total hierarchy accesses. The one stat-fill both
+    /// run paths share (it used to be copy-pasted in each).
+    pub fn finalize_report(&self, stats: &mut Stats) {
+        stats.instructions = self.instrs.iter().sum();
+        stats.max_core_cycles = self
+            .clocks
+            .iter()
+            .zip(&self.warm_clocks)
+            .map(|(c, w)| c - w)
+            .max()
+            .unwrap_or(0);
+        stats.total_core_cycles =
+            self.clocks.iter().zip(&self.warm_clocks).map(|(c, w)| c - w).sum();
+        stats.l1_hits = self.hierarchy.l1_hits();
+        stats.l2_hits = self.hierarchy.l2_hits();
+        stats.llc_hits = self.hierarchy.llc_hits();
+        stats.cache_accesses = self.hierarchy.accesses();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+    use crate::engine::AnyController;
+    use crate::sim::Simulation;
+    use crate::workloads::{self, adversarial::ADVERSARIAL};
+
+    fn tiny(dp: DesignPoint) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(dp);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = match dp {
+            DesignPoint::AlloyCache => {
+                (cfg.hybrid.fast_bytes / cfg.hybrid.block_bytes as u64) as u32
+            }
+            DesignPoint::LohHill => (cfg.hybrid.fast_bytes / 8192) as u32,
+            _ => 4,
+        };
+        cfg.workload.cores = 2;
+        cfg.workload.accesses_per_core = 1500;
+        cfg.workload.warmup_per_core = 500;
+        cfg
+    }
+
+    /// An independently written re-implementation of the **pre-refactor**
+    /// closed loop (per-access `Workload::next`, its own warmup pass and
+    /// laggard-core selection, its own end-of-run stat fill), kept as the
+    /// golden-equivalence oracle for the unified core. Deliberately not a
+    /// textual copy of `ExecCore::run` — the point of the differential
+    /// test is that two separately written loops agree.
+    struct Reference {
+        hierarchy: Hierarchy,
+        session: Session<AnyController>,
+        mapper: AddrMapper,
+        workload: Box<dyn Workload>,
+        clocks: Vec<Cycle>,
+        instrs: Vec<u64>,
+        block_bytes: u32,
+    }
+
+    impl Reference {
+        fn new(cfg: &SystemConfig, ideal: bool, wl: &str) -> Reference {
+            let workload = workloads::by_name(wl, cfg).unwrap();
+            let ctrl = AnyController::from_config(cfg, ideal);
+            let mapper = AddrMapper::new(*ctrl.layout(), cfg.hybrid.mode);
+            Reference {
+                hierarchy: Hierarchy::new(cfg.workload.cores, &cfg.l1d, &cfg.l2, &cfg.llc),
+                session: Session::with_controller(wl.to_string(), ctrl),
+                mapper,
+                workload,
+                clocks: vec![0; cfg.workload.cores as usize],
+                instrs: vec![0; cfg.workload.cores as usize],
+                block_bytes: cfg.hybrid.block_bytes,
+            }
+        }
+
+        fn step(&mut self, core: usize) {
+            let acc = self.workload.next(core);
+            self.clocks[core] += (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
+            let now = self.clocks[core];
+            let hr = self.hierarchy.access(core, acc.addr, acc.kind);
+            let mut lat = hr.latency;
+            let line = |b: u32, addr: u64| ((addr % b as u64) / 64) as u32;
+            if hr.llc_miss {
+                let (set, idx) = self.mapper.translate(acc.addr);
+                lat += self.session.push(Access {
+                    set,
+                    idx,
+                    line: line(self.block_bytes, acc.addr),
+                    kind: acc.kind,
+                    now: now + hr.latency,
+                });
+            }
+            let wbs = hr.writebacks();
+            if !wbs.is_empty() {
+                let mut batch = [Access::default(); MAX_WRITEBACKS];
+                for (i, wb) in wbs.iter().enumerate() {
+                    let (set, idx) = self.mapper.translate(*wb);
+                    batch[i] = Access {
+                        set,
+                        idx,
+                        line: line(self.block_bytes, *wb),
+                        kind: AccessKind::Write,
+                        now: now + lat,
+                    };
+                }
+                self.session.push_batch(&batch[..wbs.len()]);
+            }
+            self.clocks[core] += lat;
+            self.instrs[core] += acc.gap_instrs as u64 + 1;
+        }
+
+        fn run(mut self, warmup: u64, accesses: u64) -> Stats {
+            let n = self.clocks.len();
+            for _ in 0..warmup {
+                for core in 0..n {
+                    self.step(core);
+                }
+            }
+            self.session.reset_stats();
+            let warm = self.clocks.clone();
+            self.instrs.iter_mut().for_each(|i| *i = 0);
+
+            let mut left = vec![accesses; n];
+            let mut done = 0usize;
+            while done < n {
+                // First-minimum tie-break, like the production loop.
+                let core = (0..n)
+                    .filter(|&c| left[c] > 0)
+                    .min_by_key(|&c| self.clocks[c])
+                    .unwrap();
+                self.step(core);
+                left[core] -= 1;
+                if left[core] == 0 {
+                    done += 1;
+                }
+            }
+
+            let mut rep = self.session.report();
+            rep.stats.instructions = self.instrs.iter().sum();
+            rep.stats.max_core_cycles =
+                self.clocks.iter().zip(&warm).map(|(c, w)| c - w).max().unwrap_or(0);
+            rep.stats.total_core_cycles =
+                self.clocks.iter().zip(&warm).map(|(c, w)| c - w).sum();
+            rep.stats.l1_hits = self.hierarchy.l1_hits();
+            rep.stats.l2_hits = self.hierarchy.l2_hits();
+            rep.stats.llc_hits = self.hierarchy.llc_hits();
+            rep.stats.cache_accesses = self.hierarchy.accesses();
+            rep.stats
+        }
+    }
+
+    /// The golden-equivalence matrix: the unified closed-loop core must
+    /// reproduce the pre-refactor canonical stat vector byte-for-byte on
+    /// every design point x adversarial scenario.
+    #[test]
+    fn unified_core_matches_the_pre_refactor_closed_loop() {
+        for dp in DesignPoint::ALL {
+            let cfg = tiny(*dp);
+            let ideal = *dp == DesignPoint::Ideal;
+            for wl in ADVERSARIAL {
+                let want = Reference::new(&cfg, ideal, wl)
+                    .run(cfg.workload.warmup_per_core, cfg.workload.accesses_per_core)
+                    .canonical();
+                let workload = workloads::by_name(wl, &cfg).unwrap();
+                let ctrl = AnyController::from_config(&cfg, ideal);
+                let got = Simulation::with_controller(&cfg, workload, ctrl)
+                    .run()
+                    .stats
+                    .canonical();
+                assert_eq!(got, want, "{dp:?}/{wl}: unified core diverged from the reference");
+            }
+        }
+    }
+
+    /// The generation stage's double buffering never changes the stream:
+    /// interleaving next_access across cores replays each per-core stream
+    /// exactly, across batch boundaries.
+    #[test]
+    fn double_buffered_generation_replays_the_per_access_stream() {
+        let cfg = tiny(DesignPoint::TrimmaCache);
+        let layout = *AnyController::from_config(&cfg, false).layout();
+        let mapper = AddrMapper::new(layout, cfg.hybrid.mode);
+        let wl = workloads::by_name("adv_drift", &cfg).unwrap();
+        let mut core = ExecCore::new(&cfg, wl, mapper);
+        let mut plain = workloads::by_name("adv_drift", &cfg).unwrap();
+        for i in 0..(3 * GEN_BATCH + 7) {
+            for c in 0..cfg.workload.cores as usize {
+                assert_eq!(core.next_access(c), plain.next(c), "core {c} step {i}");
+            }
+        }
+    }
+}

@@ -13,47 +13,52 @@
 //! timestamp order. Performance = instructions / slowest-core-cycles, whose
 //! ratio between designs is the paper's weighted-speedup comparison.
 //!
-//! The controller side is a streaming [`Session`]: the trace/cache front
-//! end produces controller-level [`Access`]es and pushes them through
-//! [`Session::push`] / [`Session::push_batch`]. [`Simulation`] is generic
-//! over the controller type (defaulting to the enum-dispatched
-//! [`AnyController`]), so the whole per-access chain monomorphizes — no
-//! virtual dispatch on the hot path for any design point.
+//! All of that — warmup, the laggard-core schedule, cache filtering,
+//! first-touch translation, double-buffered trace generation, and the
+//! end-of-run stat fill — lives in exactly **one** place: the unified
+//! [`ExecCore`] of [`core`](self::core), parameterized over a
+//! [`MissSink`] that decides where LLC-missing traffic goes and what it
+//! costs. The two execution models are thin shells over it:
 //!
-//! [`ShardedSimulation`] is the parallel sibling: the same front end,
-//! run open-loop, with post-LLC accesses routed by set into a
-//! [`ShardedSession`]'s per-slice worker queues
-//! ([`crate::engine::sharded`]); its merged statistics are byte-identical
-//! for every shard count.
+//! * [`Simulation`] — the **closed-loop** model ([`ClosedLoop`] sink):
+//!   every post-LLC access streams through a [`Session`] and the
+//!   controller's simulated latency feeds back into the issuing core's
+//!   clock. Generic over the controller type (defaulting to the
+//!   enum-dispatched [`AnyController`]), so the whole per-access chain
+//!   monomorphizes. This is the model behind every paper figure.
+//! * [`ShardedSimulation`] — the **open-loop** throughput model
+//!   ([`OpenLoop`] sink): post-LLC accesses are routed by set into a
+//!   [`ShardedSession`]'s per-slice worker queues
+//!   ([`crate::engine::sharded`]) at a constant nominal latency; merged
+//!   statistics are byte-identical for every shard count, and — with
+//!   [`ShardedSimulation::pipelined`] — for the pipelined front end too,
+//!   which moves shard routing onto a dedicated stage so generation and
+//!   cache filtering overlap it (see [`core`](self::core) for the
+//!   determinism argument).
 
+pub mod core;
 pub mod mapper;
 
-use crate::cachesim::{Hierarchy, MAX_WRITEBACKS};
+pub use self::core::{ClosedLoop, ExecCore, MissSink, OpenLoop};
+
 use crate::config::SystemConfig;
-use crate::engine::sharded::{ShardFeeder, ShardedSession};
+use crate::engine::sharded::ShardedSession;
 use crate::engine::{AnyController, Session};
-use crate::hybrid::{Access, Controller};
+use crate::hybrid::Controller;
 use crate::mem::MemDevice;
 use crate::stats::Stats;
-use crate::types::{AccessKind, Cycle};
+use crate::types::Cycle;
 use crate::workloads::Workload;
 use mapper::AddrMapper;
 
 /// Cycles per non-memory instruction (4-wide-ish core).
 pub const NONMEM_CPI: f64 = 0.4;
 
-/// A complete single-workload simulation.
+/// A complete single-workload simulation — the closed-loop shell over
+/// [`ExecCore`] + [`ClosedLoop`].
 pub struct Simulation<C: Controller = AnyController> {
-    hierarchy: Hierarchy,
-    session: Session<C>,
-    mapper: AddrMapper,
-    workload: Box<dyn Workload>,
-    clocks: Vec<Cycle>,
-    instrs: Vec<u64>,
-    cores: u32,
-    accesses_per_core: u64,
-    warmup_per_core: u64,
-    block_bytes: u32,
+    core: ExecCore,
+    sink: ClosedLoop<C>,
 }
 
 /// End-of-run report: the controller's stats plus CPU-side counters.
@@ -88,140 +93,33 @@ impl<C: Controller> Simulation<C> {
     /// implementations plug in here; the dispatch-parity tests drive a
     /// boxed `dyn Controller` through the same loop this way).
     pub fn with_controller(cfg: &SystemConfig, workload: Box<dyn Workload>, ctrl: C) -> Self {
-        let cores = cfg.workload.cores;
         let mapper = AddrMapper::new(*ctrl.layout(), cfg.hybrid.mode);
-        let session = Session::with_controller(workload.name().to_string(), ctrl);
+        let label = workload.name().to_string();
         Simulation {
-            hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
-            mapper,
-            session,
-            workload,
-            clocks: vec![0; cores as usize],
-            instrs: vec![0; cores as usize],
-            cores,
-            accesses_per_core: cfg.workload.accesses_per_core,
-            warmup_per_core: cfg.workload.warmup_per_core,
-            block_bytes: cfg.hybrid.block_bytes,
+            core: ExecCore::new(cfg, workload, mapper),
+            sink: ClosedLoop::new(Session::with_controller(label, ctrl)),
         }
     }
 
     /// The underlying streaming session (controller, layout, stats).
     pub fn session(&self) -> &Session<C> {
-        &self.session
-    }
-
-    /// 64 B line offset within the migration block.
-    #[inline]
-    fn line_of(&self, addr: u64) -> u32 {
-        ((addr % self.block_bytes as u64) / 64) as u32
-    }
-
-    /// Advance one access on `core`. Returns instructions retired.
-    fn step(&mut self, core: usize) -> u64 {
-        let acc = self.workload.next(core);
-        let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
-        self.clocks[core] += gap_cycles;
-        let now = self.clocks[core];
-
-        let hr = self.hierarchy.access(core, acc.addr, acc.kind);
-        let mut lat = hr.latency;
-        if hr.llc_miss {
-            let (set, idx) = self.mapper.translate(acc.addr);
-            let line = self.line_of(acc.addr);
-            lat += self.session.push(Access {
-                set,
-                idx,
-                line,
-                kind: acc.kind,
-                now: now + hr.latency,
-            });
-        }
-        // Posted writebacks: charge banks/stats, do not stall the core.
-        // Batched through the session's block entry point — one dispatch
-        // for the whole (inline, at most MAX_WRITEBACKS-long) list.
-        let wbs = hr.writebacks();
-        if !wbs.is_empty() {
-            let mut batch = [Access::default(); MAX_WRITEBACKS];
-            for (i, wb) in wbs.iter().enumerate() {
-                let (set, idx) = self.mapper.translate(*wb);
-                batch[i] = Access {
-                    set,
-                    idx,
-                    line: self.line_of(*wb),
-                    kind: AccessKind::Write,
-                    now: now + lat,
-                };
-            }
-            self.session.push_batch(&batch[..wbs.len()]);
-        }
-        self.clocks[core] += lat;
-        let retired = acc.gap_instrs as u64 + 1;
-        self.instrs[core] += retired;
-        retired
+        self.sink.session()
     }
 
     /// Run warmup + measurement; returns the report.
     pub fn run(&mut self) -> SimReport {
-        // Warmup: populate caches, tables, and migration state.
-        for _ in 0..self.warmup_per_core {
-            for core in 0..self.cores as usize {
-                self.step(core);
-            }
-        }
-        self.session.reset_stats();
-        let warm_clocks = self.clocks.clone();
-        for i in self.instrs.iter_mut() {
-            *i = 0;
-        }
-
-        // Measurement: advance the laggard core each iteration so shared
-        // bank contention is seen in (approximate) timestamp order.
-        let mut remaining: Vec<u64> = vec![self.accesses_per_core; self.cores as usize];
-        let mut live = self.cores as usize;
-        while live > 0 {
-            let mut core = usize::MAX;
-            let mut best = Cycle::MAX;
-            for c in 0..self.cores as usize {
-                if remaining[c] > 0 && self.clocks[c] < best {
-                    best = self.clocks[c];
-                    core = c;
-                }
-            }
-            self.step(core);
-            remaining[core] -= 1;
-            if remaining[core] == 0 {
-                live -= 1;
-            }
-        }
-
-        let mut rep = self.session.report();
-        rep.stats.instructions = self.instrs.iter().sum();
-        rep.stats.max_core_cycles = self
-            .clocks
-            .iter()
-            .zip(&warm_clocks)
-            .map(|(c, w)| c - w)
-            .max()
-            .unwrap_or(0);
-        rep.stats.total_core_cycles = self
-            .clocks
-            .iter()
-            .zip(&warm_clocks)
-            .map(|(c, w)| c - w)
-            .sum();
-        rep.stats.l1_hits = self.hierarchy.l1_hits();
-        rep.stats.l2_hits = self.hierarchy.l2_hits();
-        rep.stats.llc_hits = self.hierarchy.llc_hits();
-        rep.stats.cache_accesses = self.hierarchy.accesses();
+        self.core.run(&mut self.sink);
+        let mut rep = self.sink.session_mut().report();
+        self.core.finalize_report(&mut rep.stats);
         rep
     }
 }
 
-/// The sharded run path: the same trace/cache front end as [`Simulation`],
-/// but **open-loop** — post-LLC accesses are routed by set into a
-/// [`ShardedSession`]'s per-slice queues and simulated on worker threads,
-/// while the core clocks advance by a constant nominal memory latency per
-/// LLC miss instead of the controller's simulated latency.
+/// The sharded run path: the same unified [`ExecCore`] front end as
+/// [`Simulation`], but **open-loop** — post-LLC accesses are routed by set
+/// into a [`ShardedSession`]'s per-slice queues and simulated on worker
+/// threads, while the core clocks advance by a constant nominal memory
+/// latency per LLC miss instead of the controller's simulated latency.
 ///
 /// Dropping the latency feedback is what buys parallelism: with it, the
 /// next access's timestamp depends on the previous access's simulated
@@ -230,30 +128,16 @@ impl<C: Controller> Simulation<C> {
 /// function of config + workload, so every slice sees an identical
 /// sub-stream no matter how many workers drain the queues — the merged
 /// stats are byte-identical across shard counts (locked by
-/// `rust/tests/sharded_parity.rs`). Timing-derived stats are therefore
+/// `rust/tests/sharded_parity.rs`) and across the inline vs
+/// [`pipelined`](ShardedSimulation::pipelined) front end (locked by
+/// `rust/tests/pipeline_parity.rs`). Timing-derived stats are therefore
 /// mutually comparable between sharded runs but **not** with the
-/// closed-loop [`Simulation::run`]; see DESIGN.md §9.
+/// closed-loop [`Simulation::run`]; see DESIGN.md §9–§10.
 pub struct ShardedSimulation {
-    frontend: Frontend,
+    core: ExecCore,
     session: ShardedSession,
-}
-
-/// The single-threaded trace/cache front end of a sharded run.
-struct Frontend {
-    hierarchy: Hierarchy,
-    mapper: AddrMapper,
-    plan: crate::engine::sharded::ShardPlan,
-    workload: Box<dyn Workload>,
-    clocks: Vec<Cycle>,
-    warm_clocks: Vec<Cycle>,
-    instrs: Vec<u64>,
-    cores: u32,
-    accesses_per_core: u64,
-    warmup_per_core: u64,
-    block_bytes: u32,
-    /// Constant per-miss clock charge (the fast tier's unloaded 64 B
-    /// latency): keeps timestamps controller-independent.
     nominal_mem_lat: Cycle,
+    pipeline: bool,
 }
 
 impl ShardedSimulation {
@@ -262,27 +146,27 @@ impl ShardedSimulation {
     /// [`EngineBuilder::build_sharded`](crate::engine::EngineBuilder::build_sharded),
     /// which is also the preferred way to construct the whole thing via
     /// [`EngineBuilder::run_sharded`](crate::engine::EngineBuilder::run_sharded)).
+    ///
+    /// The nominal per-miss clock charge is the fast tier's unloaded 64 B
+    /// latency: it keeps timestamps controller-independent.
     pub fn new(cfg: &SystemConfig, workload: Box<dyn Workload>, session: ShardedSession) -> Self {
-        let cores = cfg.workload.cores;
         let mapper = AddrMapper::new(*session.full_layout(), cfg.hybrid.mode);
         let nominal_mem_lat = MemDevice::new(cfg.fast_mem).unloaded_latency(64);
         ShardedSimulation {
-            frontend: Frontend {
-                hierarchy: Hierarchy::new(cores, &cfg.l1d, &cfg.l2, &cfg.llc),
-                mapper,
-                plan: *session.plan(),
-                workload,
-                clocks: vec![0; cores as usize],
-                warm_clocks: vec![0; cores as usize],
-                instrs: vec![0; cores as usize],
-                cores,
-                accesses_per_core: cfg.workload.accesses_per_core,
-                warmup_per_core: cfg.workload.warmup_per_core,
-                block_bytes: cfg.hybrid.block_bytes,
-                nominal_mem_lat,
-            },
+            core: ExecCore::new(cfg, workload, mapper),
             session,
+            nominal_mem_lat,
+            pipeline: false,
         }
+    }
+
+    /// Toggle the pipelined front end: shard routing moves to a dedicated
+    /// router stage, overlapping trace generation + cache filtering with
+    /// it (and with the shard workers). Merged canonical stats are
+    /// byte-identical either way — see [`core`](self::core) for why.
+    pub fn pipelined(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     /// The underlying sharded session (plan, slices, layout).
@@ -293,108 +177,19 @@ impl ShardedSimulation {
     /// Run warmup + measurement across the plan's worker threads and
     /// return the merged report.
     pub fn run(mut self) -> SimReport {
-        let frontend = &mut self.frontend;
-        self.session.run_stream(|feed| frontend.run(feed));
+        let core = &mut self.core;
+        let nominal = self.nominal_mem_lat;
+        let pipeline = self.pipeline;
+        self.session.run_stream(|feed| {
+            if pipeline {
+                self::core::run_pipelined(core, feed, nominal);
+            } else {
+                core.run(&mut OpenLoop::new(feed, nominal));
+            }
+        });
         let mut rep = self.session.finish();
-        let fe = &self.frontend;
-        rep.stats.instructions = fe.instrs.iter().sum();
-        rep.stats.max_core_cycles = fe
-            .clocks
-            .iter()
-            .zip(&fe.warm_clocks)
-            .map(|(c, w)| c - w)
-            .max()
-            .unwrap_or(0);
-        rep.stats.total_core_cycles = fe
-            .clocks
-            .iter()
-            .zip(&fe.warm_clocks)
-            .map(|(c, w)| c - w)
-            .sum();
-        rep.stats.l1_hits = fe.hierarchy.l1_hits();
-        rep.stats.l2_hits = fe.hierarchy.l2_hits();
-        rep.stats.llc_hits = fe.hierarchy.llc_hits();
-        rep.stats.cache_accesses = fe.hierarchy.accesses();
+        self.core.finalize_report(&mut rep.stats);
         rep
-    }
-}
-
-impl Frontend {
-    /// 64 B line offset within the migration block.
-    #[inline]
-    fn line_of(&self, addr: u64) -> u32 {
-        ((addr % self.block_bytes as u64) / 64) as u32
-    }
-
-    /// Advance one access on `core`, feeding post-LLC traffic to the
-    /// shards. Mirrors [`Simulation::step`] except the clock charge for an
-    /// LLC miss is the nominal latency, not the controller's answer.
-    fn step(&mut self, core: usize, feed: &mut ShardFeeder) {
-        let acc = self.workload.next(core);
-        let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
-        self.clocks[core] += gap_cycles;
-        let now = self.clocks[core];
-
-        let hr = self.hierarchy.access(core, acc.addr, acc.kind);
-        let mut lat = hr.latency;
-        if hr.llc_miss {
-            let (slice, set, idx) = self.mapper.translate_sliced(acc.addr, &self.plan);
-            feed.push_routed(slice, Access {
-                set,
-                idx,
-                line: self.line_of(acc.addr),
-                kind: acc.kind,
-                now: now + hr.latency,
-            });
-            lat += self.nominal_mem_lat;
-        }
-        for wb in hr.writebacks() {
-            let (slice, set, idx) = self.mapper.translate_sliced(*wb, &self.plan);
-            feed.push_routed(slice, Access {
-                set,
-                idx,
-                line: self.line_of(*wb),
-                kind: AccessKind::Write,
-                now: now + lat,
-            });
-        }
-        self.clocks[core] += lat;
-        self.instrs[core] += acc.gap_instrs as u64 + 1;
-    }
-
-    /// Warmup + measurement over the feed: the same schedule as
-    /// [`Simulation::run`] (round-robin warmup, laggard-core
-    /// measurement), with the stats reset routed through the stream so
-    /// each slice resets at a deterministic point of its sub-stream.
-    fn run(&mut self, feed: &mut ShardFeeder) {
-        for _ in 0..self.warmup_per_core {
-            for core in 0..self.cores as usize {
-                self.step(core, feed);
-            }
-        }
-        feed.reset_stats();
-        self.warm_clocks.copy_from_slice(&self.clocks);
-        for i in self.instrs.iter_mut() {
-            *i = 0;
-        }
-
-        let mut remaining: Vec<u64> = vec![self.accesses_per_core; self.cores as usize];
-        let mut live = self.cores as usize;
-        while live > 0 {
-            let mut core = usize::MAX;
-            let mut best = Cycle::MAX;
-            for c in 0..self.cores as usize {
-                if remaining[c] > 0 && self.clocks[c] < best {
-                    best = self.clocks[c];
-                    core = c;
-                }
-            }
-            self.step(core, feed);
-            remaining[core] -= 1;
-            if remaining[core] == 0 {
-                live -= 1;
-            }
-        }
     }
 }
 
@@ -486,5 +281,18 @@ mod tests {
         let ctrl: Box<dyn Controller> = Box::new(AnyController::from_config(&cfg, false));
         let rep = Simulation::with_controller(&cfg, wl, ctrl).run();
         assert!(rep.stats.mem_accesses > 0);
+    }
+
+    #[test]
+    fn pipelined_sharded_run_reports() {
+        let cfg = tiny_cfg(DesignPoint::TrimmaCache);
+        let wl = crate::workloads::by_name("adv_drift", &cfg).unwrap();
+        let session = crate::engine::EngineBuilder::from_config(cfg.clone())
+            .shards(2)
+            .build_sharded()
+            .unwrap();
+        let rep = ShardedSimulation::new(&cfg, wl, session).pipelined(true).run();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.instructions > 0);
     }
 }

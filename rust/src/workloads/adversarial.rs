@@ -101,15 +101,34 @@ struct Scenario {
     gap_mod: u32,
 }
 
-impl Workload for Scenario {
-    fn next(&mut self, core: usize) -> MemAccess {
-        let step = self.steps[core];
-        self.steps[core] = step.wrapping_add(1);
-        let stream = (core as u32) ^ self.geom.seed;
+impl Scenario {
+    /// The pure access function: scenario access for `(stream, step)`.
+    #[inline]
+    fn at(&self, stream: u32, step: u32) -> MemAccess {
         let addr: PhysAddr = (self.gen)(&self.geom, stream, step) % self.footprint;
         let h = lowbias32(lowbias32(stream.wrapping_mul(0x9E37_79B9) ^ step) ^ 0x5EED);
         let (kind, gap) = mix(h, self.write_milli, self.gap_mod);
         MemAccess { addr: addr & !(LINE - 1), kind, gap_instrs: gap }
+    }
+}
+
+impl Workload for Scenario {
+    fn next(&mut self, core: usize) -> MemAccess {
+        let step = self.steps[core];
+        self.steps[core] = step.wrapping_add(1);
+        self.at((core as u32) ^ self.geom.seed, step)
+    }
+
+    fn next_batch(&mut self, core: usize, out: &mut [MemAccess]) {
+        // Monomorphic inner loop over the pure access function: one
+        // virtual dispatch per batch, identical to out.len() `next` calls.
+        let stream = (core as u32) ^ self.geom.seed;
+        let mut step = self.steps[core];
+        for slot in out.iter_mut() {
+            *slot = self.at(stream, step);
+            step = step.wrapping_add(1);
+        }
+        self.steps[core] = step;
     }
 
     fn name(&self) -> &str {

@@ -24,9 +24,29 @@ use crate::types::MemAccess;
 /// A multi-stream workload: one access stream per simulated core.
 /// (Not `Send`: the PJRT-backed implementation holds client handles;
 /// parallel sweeps construct workloads inside their worker threads.)
+///
+/// Streams are **per-core pure**: `core`'s sequence of accesses depends
+/// only on how many accesses `core` has drawn so far, never on what other
+/// cores drew in between. Every implementation in the crate satisfies
+/// this by construction (counter-based generators), and the execution
+/// core's batched, look-ahead trace generation relies on it.
 pub trait Workload {
     /// Generate the next access of `core`'s stream.
     fn next(&mut self, core: usize) -> MemAccess;
+
+    /// Generate the next `out.len()` accesses of `core`'s stream into
+    /// `out` — semantically exactly `out.len()` successive
+    /// [`Workload::next`] calls (the default implementation is that
+    /// loop). Generators with a monomorphic inner loop (the synthetic
+    /// suite, the adversarial scenarios) override it so the virtual
+    /// dispatch is paid once per batch: this is the trace-generation
+    /// stage of the pipelined front end
+    /// ([`crate::sim::ExecCore`]).
+    fn next_batch(&mut self, core: usize, out: &mut [MemAccess]) {
+        for slot in out.iter_mut() {
+            *slot = self.next(core);
+        }
+    }
 
     /// Human-readable name (matches the paper's workload labels).
     fn name(&self) -> &str;
@@ -124,6 +144,31 @@ mod tests {
         let msg = err.to_string();
         for name in all_names() {
             assert!(msg.contains(name), "error must list '{name}'");
+        }
+    }
+
+    #[test]
+    fn next_batch_matches_per_access_generation() {
+        // Batched and per-access generation must produce identical
+        // streams, per core, across batch boundaries and regardless of
+        // how cores interleave (the per-core-purity contract).
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        for name in ["gap_pr", "ycsb_a", "505.mcf_r", "adv_set_thrash", "adv_pointer_chase"] {
+            let mut plain = by_name(name, &cfg).unwrap();
+            let mut batched = by_name(name, &cfg).unwrap();
+            for round in 0..4 {
+                for core in [0usize, 2, 1] {
+                    let mut batch = vec![MemAccess::read(0, 0); 37];
+                    batched.next_batch(core, &mut batch);
+                    for (i, got) in batch.iter().enumerate() {
+                        assert_eq!(
+                            plain.next(core),
+                            *got,
+                            "{name} core {core} round {round} i {i}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -276,6 +276,18 @@ impl Workload for SynthWorkload {
         self.gen.gen(core as u32 ^ self.seed, step)
     }
 
+    fn next_batch(&mut self, core: usize, out: &mut [MemAccess]) {
+        // Monomorphic inner loop over the pure generator: one virtual
+        // dispatch per batch, bit-identical to out.len() `next` calls.
+        let stream = core as u32 ^ self.seed;
+        let mut step = self.steps[core];
+        for slot in out.iter_mut() {
+            *slot = self.gen.gen(stream, step);
+            step = step.wrapping_add(1);
+        }
+        self.steps[core] = step;
+    }
+
     fn name(&self) -> &str {
         self.gen.profile.name
     }

@@ -1,0 +1,94 @@
+//! Pipelined-front-end parity: the headline invariant of the pipelined
+//! trace stage is that the merged canonical stat vector of a pipelined
+//! run is **byte-identical** to the inline open-loop run of the same
+//! sharded driver, for every design point, every adversarial scenario,
+//! and every shard count — the pipelined sibling of
+//! `tests/sharded_parity.rs`.
+//!
+//! Why this must hold: clocks never depend on the routed work in the
+//! open loop (constant nominal miss latency), translation happens on the
+//! generating thread in stream order, and the hand-off ring between the
+//! generation and routing stages is FIFO — so every slice consumes
+//! exactly the same sub-stream either way, with the end-of-warmup reset
+//! marker at the same in-stream point (see `sim::core`'s module docs).
+
+mod common;
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::SystemConfig;
+use trimma::engine::EngineBuilder;
+use trimma::sim::SimReport;
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+fn run(
+    dp: DesignPoint,
+    cfg: &SystemConfig,
+    wl: &str,
+    shards: usize,
+    pipeline: bool,
+) -> SimReport {
+    EngineBuilder::from_config(cfg.clone())
+        .workload(wl)
+        .ideal(dp == DesignPoint::Ideal)
+        .shards(shards)
+        .pipeline(pipeline)
+        .run_sharded()
+        .unwrap_or_else(|e| panic!("{dp:?}/{wl} x{shards} pipeline={pipeline}: {e}"))
+}
+
+/// The full matrix: every design point x every adversarial scenario; the
+/// inline 1-shard run is the reference, and the pipelined front end must
+/// reproduce it at 1, 2, and 4 shards (1 exercises the router stage with
+/// a single consumer; 2 and 4 cross slice-group boundaries).
+#[test]
+fn pipelining_never_changes_the_canonical_stats() {
+    for dp in DesignPoint::ALL {
+        let cfg = common::tiny(*dp);
+        for wl in ADVERSARIAL {
+            let base = run(*dp, &cfg, wl, 1, false);
+            assert!(base.stats.mem_accesses > 0, "{dp:?}/{wl}: nothing reached memory");
+            let base_canon = base.stats.canonical();
+            for n in [1usize, 2, 4] {
+                let got = run(*dp, &cfg, wl, n, true).stats.canonical();
+                assert_eq!(
+                    got, base_canon,
+                    "{dp:?}/{wl}: pipelined {n}-shard run diverged from the inline run"
+                );
+            }
+        }
+    }
+}
+
+/// Pipelined runs are deterministic run-to-run (fresh OS threads for the
+/// router stage and the shard workers each time).
+#[test]
+fn pipelined_runs_are_deterministic_run_to_run() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let a = run(DesignPoint::TrimmaCache, &cfg, "adv_set_thrash", 4, true);
+    let b = run(DesignPoint::TrimmaCache, &cfg, "adv_set_thrash", 4, true);
+    assert_eq!(a.stats.canonical(), b.stats.canonical());
+}
+
+/// The differential remap oracle composes with the pipelined front end:
+/// every slice's controller is shadowed by its own reference model, so a
+/// green run proves the router stage preserves every per-slice remap
+/// invariant (in-order delivery, set locality, reset placement).
+#[test]
+fn pipelined_remap_designs_pass_the_differential_oracle() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+        let cfg = presets::with_verify(common::tiny(dp));
+        let rep = run(dp, &cfg, "adv_migration_storm", 2, true);
+        assert!(rep.stats.mem_accesses > 0, "{dp:?}");
+    }
+}
+
+/// Cross-mode, cross-count closure: inline at N must also equal pipelined
+/// at M for N != M (transitively implied by the two parity matrices, but
+/// asserted directly once so a joint regression cannot hide).
+#[test]
+fn inline_and_pipelined_agree_across_different_shard_counts() {
+    let cfg = common::tiny(DesignPoint::MemPod);
+    let inline2 = run(DesignPoint::MemPod, &cfg, "adv_drift", 2, false);
+    let piped4 = run(DesignPoint::MemPod, &cfg, "adv_drift", 4, true);
+    assert_eq!(inline2.stats.canonical(), piped4.stats.canonical());
+}
