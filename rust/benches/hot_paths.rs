@@ -5,7 +5,8 @@
 
 use trimma::bench_util::Bench;
 use trimma::coordinator::bench::{
-    run_hot_paths, run_pipeline_sweep, run_sharded_sweep, run_sim_sweep, SHARD_COUNTS,
+    run_decay_sweep, run_hot_paths, run_pipeline_sweep, run_sharded_sweep, run_sim_sweep,
+    SHARD_COUNTS,
 };
 use trimma::coordinator::geomean;
 
@@ -16,4 +17,5 @@ fn main() {
     println!("  -> geomean {:.2} M mem-steps/s over the sim sweep", geomean(&tputs));
     run_sharded_sweep(&mut b, false, SHARD_COUNTS);
     run_pipeline_sweep(&mut b, false, 4);
+    run_decay_sweep(&mut b, false, 4);
 }

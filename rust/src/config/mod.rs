@@ -125,6 +125,59 @@ pub enum MemTech {
     },
 }
 
+/// Pressure-driven metadata decay ("trim the trimmer"): cold non-identity
+/// mappings are migrated back to their home frames and their iRT entries
+/// reclaimed to identity format, returning both the freed fast-memory slot
+/// and the (eventually empty) metadata leaf to the set. Epochs piggyback on
+/// the existing MEA epoch cadence in flat mode and on a per-set access
+/// counter in cache mode; the sweep is incremental (at most `sweep_budget`
+/// slots per epoch) and only runs while non-identity iRT occupancy exceeds
+/// the pressure threshold. See DESIGN.md §11.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecayConfig {
+    /// Master switch; all presets default to `false` (decay off).
+    pub enabled: bool,
+    /// Cache mode: per-set accesses between decay epochs. Flat mode
+    /// ignores this and fires at the MEA epoch boundary instead.
+    pub epoch_accesses: u32,
+    /// Pressure threshold in thousandths of the set's fast capacity: the
+    /// sweep only runs while `nonidentity_entries(set) >
+    /// 2 * fast_per_set * pressure_milli / 1000` (a remapped block owns up
+    /// to two iRT entries — forward and inverse — so `2 * fast_per_set` is
+    /// the occupancy ceiling). `0` sweeps whenever any non-identity entry
+    /// exists; `1000` effectively disables the sweep (occupancy can never
+    /// exceed the ceiling).
+    pub pressure_milli: u32,
+    /// Maximum fast slots examined per set per epoch (the incremental
+    /// sweep budget K; the cursor rotates across epochs).
+    pub sweep_budget: u32,
+    /// Whole epochs without a touch before a resident block counts as
+    /// cold and is eligible for reclamation.
+    pub cold_epochs: u32,
+}
+
+impl DecayConfig {
+    /// Decay disabled, with moderate knob defaults so flipping `enabled`
+    /// alone yields a sane policy (epoch every 256 per-set accesses — the
+    /// MEA cadence — pressure gate at 50% occupancy, 64-slot budget, cold
+    /// after 4 untouched epochs).
+    pub const fn off() -> Self {
+        DecayConfig {
+            enabled: false,
+            epoch_accesses: 256,
+            pressure_milli: 500,
+            sweep_budget: 64,
+            cold_epochs: 4,
+        }
+    }
+}
+
+impl Default for DecayConfig {
+    fn default() -> Self {
+        DecayConfig::off()
+    }
+}
+
 /// Configuration of the hybrid memory system (both tiers + metadata design).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HybridConfig {
@@ -161,6 +214,8 @@ pub struct HybridConfig {
     /// constant factor per access — on for tests and debug runs, off for
     /// benches and figure sweeps (all presets default to `false`).
     pub verify: bool,
+    /// Pressure-driven metadata decay knobs (see [`DecayConfig`]).
+    pub decay: DecayConfig,
 }
 
 impl HybridConfig {
@@ -243,6 +298,23 @@ impl SystemConfig {
         if matches!(h.scheme, MetadataScheme::TagLohHill) && h.mode != Mode::Cache {
             return Err("Loh-Hill tag matching only supports cache mode".into());
         }
+        if h.decay.enabled {
+            if h.decay.epoch_accesses == 0 {
+                return Err("decay.epoch_accesses must be > 0".into());
+            }
+            if h.decay.pressure_milli > 1000 {
+                return Err(format!(
+                    "decay.pressure_milli {} out of range 0..=1000",
+                    h.decay.pressure_milli
+                ));
+            }
+            if h.decay.sweep_budget == 0 {
+                return Err("decay.sweep_budget must be > 0".into());
+            }
+            if matches!(h.scheme, MetadataScheme::TagAlloy | MetadataScheme::TagLohHill) {
+                return Err("metadata decay requires a remap table scheme".into());
+            }
+        }
         Ok(())
     }
 
@@ -293,6 +365,29 @@ mod tests {
         let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
         cfg.hybrid.mode = Mode::Flat;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn decay_knobs_validate() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.decay.enabled = true;
+        cfg.validate().unwrap();
+        cfg.hybrid.decay.epoch_accesses = 0;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.decay.epoch_accesses = 256;
+        cfg.hybrid.decay.pressure_milli = 1001;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.decay.pressure_milli = 0;
+        cfg.hybrid.decay.sweep_budget = 0;
+        assert!(cfg.validate().is_err());
+        // Tag-matching designs have no remap table to decay.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        cfg.hybrid.decay.enabled = true;
+        assert!(cfg.validate().is_err());
+        // Disabled decay never blocks validation, whatever the knobs say.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        cfg.hybrid.decay.sweep_budget = 0;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -208,12 +208,23 @@ fn hybrid_for(dp: DesignPoint, fast_bytes: u64, slow_bytes: u64, block: u32) -> 
         flat_fast_fraction: 1.0,
         subblock: false,
         verify: false,
+        decay: DecayConfig::off(),
     }
 }
 
 /// Enable the [`crate::verify`] oracle (tests / debug runs).
 pub fn with_verify(mut cfg: SystemConfig) -> SystemConfig {
     cfg.hybrid.verify = true;
+    cfg
+}
+
+/// Enable pressure-driven metadata decay with the default policy knobs
+/// ([`DecayConfig::off`]'s values with `enabled = true`): epoch every 256
+/// per-set accesses (cache mode; flat mode rides the MEA cadence),
+/// pressure gate at 50% of per-set fast capacity, 64-slot sweep budget,
+/// cold after 4 untouched epochs.
+pub fn with_decay(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.hybrid.decay.enabled = true;
     cfg
 }
 

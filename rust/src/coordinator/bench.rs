@@ -362,12 +362,61 @@ pub fn run_pipeline_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(boo
     out
 }
 
+/// The metadata-decay comparison sweep: [`SIM_DESIGNS`] x the decay
+/// subsystem's target scenario (`adv_metadata_bloat` — stale remaps pile
+/// up phase after phase), sharded at `shards` workers, decay off vs on.
+/// Records one label per mode — `metadata_decay/off` and
+/// `metadata_decay/on` — with the aggregate throughput attached
+/// (M mem-steps/s), prints the decay-on throughput ratio over off, and
+/// returns the `(decay, msteps)` pairs. Construction stays outside the
+/// timed region for the same reason as in [`run_sharded_sweep`].
+pub fn run_decay_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let n = shards.max(1);
+    let mut out = Vec::new();
+    for decay in [false, true] {
+        let mut sims: Vec<ShardedSimulation> = Vec::new();
+        let mut steps = 0.0;
+        for dp in SIM_DESIGNS {
+            let builder = EngineBuilder::new(*dp)
+                .workload("adv_metadata_bloat")
+                .shards(n)
+                .decay(decay)
+                .configure(move |cfg| {
+                    cfg.workload.accesses_per_core = accesses;
+                    cfg.workload.warmup_per_core = warmup;
+                });
+            let cfg = builder.build_config().expect("sweep preset");
+            steps += cfg.workload.cores as f64 * (accesses + warmup) as f64;
+            let workload = by_name("adv_metadata_bloat", &cfg).unwrap_or_else(|e| panic!("{e}"));
+            let session = builder.build_sharded().expect("sharded session");
+            sims.push(ShardedSimulation::new(&cfg, workload, session));
+        }
+        let label = format!("metadata_decay/{}", if decay { "on" } else { "off" });
+        let (_done, dt) = b.once(&label, move || {
+            for sim in sims {
+                sim.run();
+            }
+        });
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((decay, msteps));
+    }
+    if let [(_, off), (_, on)] = out[..] {
+        println!("  metadata decay on: {:.2}x throughput over off", on / off.max(1e-12));
+    }
+    out
+}
+
 /// Run the whole suite and package it as a schema-versioned report.
 /// `shards` feeds [`shard_counts`] for the sharded-session sweep;
 /// `pipeline` additionally runs [`run_pipeline_sweep`] (the
 /// `frontend_pipeline/{off,on}` labels — `trimma bench --pipeline`, and
-/// what CI's bench-smoke asserts).
-pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool) -> BenchReport {
+/// what CI's bench-smoke asserts); `decay` additionally runs
+/// [`run_decay_sweep`] (the `metadata_decay/{off,on}` labels —
+/// `trimma bench --decay`, also asserted by CI's bench-smoke).
+pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool, decay: bool) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
         Bench::with_target("trimma-bench", 50e6)
@@ -379,6 +428,9 @@ pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool) -> Ben
     run_sharded_sweep(&mut b, quick, &shard_counts(quick, shards));
     if pipeline {
         run_pipeline_sweep(&mut b, quick, shards);
+    }
+    if decay {
+        run_decay_sweep(&mut b, quick, shards);
     }
     BenchReport {
         schema_version: SCHEMA_VERSION,

@@ -46,6 +46,19 @@ fn preset(tech: Tech, dp: DesignPoint) -> SystemConfig {
     }
 }
 
+/// Position of `dp` in a figure's design-point list. A report whose design
+/// point is missing from the list is a wiring bug in the sweep definition;
+/// surface it as [`EngineError::InvalidConfig`] naming the stray label
+/// instead of panicking mid-report.
+fn design_index(dps: &[DesignPoint], dp: DesignPoint) -> Result<usize, EngineError> {
+    dps.iter().position(|x| *x == dp).ok_or_else(|| {
+        EngineError::InvalidConfig(format!(
+            "design point '{}' is not in this figure's design list",
+            dp.label()
+        ))
+    })
+}
+
 /// Run one figure by id. Returns its tables (already saved as CSV);
 /// unknown ids surface as [`EngineError::UnknownFigure`].
 pub fn run_figure(id: &str, scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
@@ -211,7 +224,7 @@ pub fn fig8(scale: f64, threads: usize) -> Result<Vec<Table>, EngineError> {
     for (w, chunk) in SUITE.iter().zip(reps.chunks(dps.len())) {
         for (d, rep) in dps.iter().zip(chunk) {
             let (m, f, s) = rep.stats.amat_breakdown();
-            let e = &mut sums[dps.iter().position(|x| x == d).unwrap()];
+            let e = &mut sums[design_index(&dps, *d)?];
             e.0 += m;
             e.1 += f;
             e.2 += s;
@@ -546,6 +559,20 @@ mod tests {
             run_figure("nope", 1.0, 1),
             Err(EngineError::UnknownFigure(id)) if id == "nope"
         ));
+    }
+
+    #[test]
+    fn design_index_reports_stray_labels() {
+        let dps = [DesignPoint::AlloyCache, DesignPoint::TrimmaCache];
+        assert_eq!(design_index(&dps, DesignPoint::TrimmaCache).unwrap(), 1);
+        // A design point outside the figure's list must surface as an
+        // error naming the label, not an unwrap panic (fig8 regression).
+        match design_index(&dps, DesignPoint::MemPod) {
+            Err(EngineError::InvalidConfig(msg)) => {
+                assert!(msg.contains(DesignPoint::MemPod.label()), "msg: {msg}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 
     #[test]

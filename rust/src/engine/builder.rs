@@ -86,6 +86,7 @@ pub struct EngineBuilder {
     workload: Option<String>,
     ideal: bool,
     verify: bool,
+    decay: bool,
     tag_match: bool,
     shards: usize,
     pipeline: bool,
@@ -102,6 +103,7 @@ impl EngineBuilder {
             workload: None,
             ideal: false,
             verify: false,
+            decay: false,
             tag_match: false,
             shards: 1,
             pipeline: false,
@@ -153,6 +155,17 @@ impl EngineBuilder {
     /// don't.
     pub fn verify(mut self, verify: bool) -> Self {
         self.verify = verify;
+        self
+    }
+
+    /// Enable pressure-driven metadata decay ([`crate::hybrid::decay`],
+    /// DESIGN.md §11): cold non-identity remap entries are periodically
+    /// reclaimed to identity format and their fast-tier slots returned to
+    /// the cache. Knob values come from the config's
+    /// [`DecayConfig`](crate::config::DecayConfig) defaults unless
+    /// overridden via [`EngineBuilder::configure`].
+    pub fn decay(mut self, decay: bool) -> Self {
+        self.decay = decay;
         self
     }
 
@@ -210,6 +223,7 @@ impl EngineBuilder {
             tweak(&mut cfg);
         }
         cfg.hybrid.verify |= self.verify;
+        cfg.hybrid.decay.enabled |= self.decay;
         cfg.validate().map_err(EngineError::InvalidConfig)?;
         Ok(cfg)
     }
@@ -403,6 +417,21 @@ mod tests {
         let piped = b.pipeline(true).run_sharded().unwrap();
         assert!(piped.stats.mem_accesses > 0);
         assert_eq!(inline.stats.canonical(), piped.stats.canonical());
+    }
+
+    #[test]
+    fn decay_toggle_enables_the_knob_and_runs() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .configure(|cfg| cfg.hybrid.decay.epoch_accesses = 8)
+            .decay(true);
+        assert!(b.build_config().unwrap().hybrid.decay.enabled);
+        let rep = b.workload("adv_drift").run().unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.decay_epochs > 0, "decay epochs should tick");
+        // Off by default.
+        let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
+        assert!(!cfg.hybrid.decay.enabled);
     }
 
     #[test]

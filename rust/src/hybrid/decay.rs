@@ -1,0 +1,222 @@
+//! Pressure-driven metadata decay ("trim the trimmer", DESIGN.md §11).
+//!
+//! Trimma's thesis is that identity mappings should cost no metadata; the
+//! natural extension is that *cold* non-identity mappings shouldn't
+//! either. [`DecayState`] tracks, per fast-tier slot, the last decay epoch
+//! in which the slot's block was touched. At every epoch boundary the
+//! controller (see `hybrid/remap.rs`) advances the set's epoch and — only
+//! while the set's non-identity remap-table occupancy is above a
+//! configurable pressure threshold — sweeps a budgeted window of slots,
+//! evicting the cold remapped ones: a flat-mode swap is migrated back to
+//! its home frame, a cached copy is written back if dirty, the table
+//! entries are reclaimed to identity format, and the freed slot returns
+//! to the DRAM-cache free stack.
+//!
+//! Epoch cadence: in flat mode the boundary piggybacks on the existing
+//! MEA epoch (MemPod-style activity tracking already paces migration
+//! there); in cache mode the decay state counts demand accesses itself
+//! and fires every [`crate::config::DecayConfig::epoch_accesses`].
+//!
+//! Everything here is bookkeeping over preallocated arrays: the sweep
+//! itself reuses the controller's eviction path, so the steady-state
+//! translate path stays allocation-free (locked by `tests/alloc_free.rs`).
+
+use crate::config::DecayConfig;
+
+/// Per-controller decay bookkeeping: epoch counters, per-slot touch
+/// stamps, and rotating sweep cursors, all sized at construction.
+#[derive(Debug, Clone)]
+pub struct DecayState {
+    cfg: DecayConfig,
+    /// Whether decay is active for this controller (config flag, and the
+    /// controller is not the metadata-free Ideal oracle).
+    enabled: bool,
+    fast_per_set: u64,
+    /// Per-set decay epoch (wraps; ages use `wrapping_sub`).
+    epoch: Vec<u32>,
+    /// Per-set demand-access counter toward the next epoch (cache mode).
+    accesses: Vec<u32>,
+    /// `set * fast_per_set + slot` -> epoch of the slot's last touch
+    /// (fast-tier hit or fill).
+    last_epoch: Vec<u32>,
+    /// Per-set rotating cursor of the budgeted sweep.
+    cursor: Vec<u32>,
+}
+
+impl DecayState {
+    /// Build the bookkeeping for `num_sets x fast_per_set` slots. When
+    /// `enabled` is false no arrays are allocated and every hot-path hook
+    /// reduces to a single branch.
+    pub fn new(cfg: DecayConfig, enabled: bool, num_sets: usize, fast_per_set: u64) -> Self {
+        let (epoch, accesses, last_epoch, cursor) = if enabled {
+            (
+                vec![0u32; num_sets],
+                vec![0u32; num_sets],
+                vec![0u32; num_sets * fast_per_set as usize],
+                vec![0u32; num_sets],
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        };
+        DecayState { cfg, enabled, fast_per_set, epoch, accesses, last_epoch, cursor }
+    }
+
+    /// Whether the decay hooks are live for this controller.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Stamp `slot` of `set` as touched in the current epoch (fast-tier
+    /// hit or fresh fill). Caller gates on [`Self::enabled`].
+    #[inline]
+    pub fn touch(&mut self, set: u32, slot: u64) {
+        let at = set as usize * self.fast_per_set as usize + slot as usize;
+        self.last_epoch[at] = self.epoch[set as usize];
+    }
+
+    /// Cache-mode cadence: count one demand access to `set`; returns
+    /// `true` when the epoch boundary is reached (caller then runs the
+    /// sweep). Flat mode skips this and piggybacks on the MEA boundary.
+    #[inline]
+    pub fn on_access(&mut self, set: u32) -> bool {
+        let a = &mut self.accesses[set as usize];
+        *a += 1;
+        if *a >= self.cfg.epoch_accesses {
+            *a = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance `set`'s epoch at a boundary.
+    #[inline]
+    pub fn advance_epoch(&mut self, set: u32) {
+        let e = &mut self.epoch[set as usize];
+        *e = e.wrapping_add(1);
+    }
+
+    /// Pressure gate: sweep only while the set's non-identity occupancy
+    /// (`occ`, in table *entries* — a cached block owns two, forward plus
+    /// inverted) exceeds `2 * fast_per_set * pressure_milli / 1000`.
+    /// `pressure_milli = 0` sweeps whenever any entry exists; `1000`
+    /// never sweeps (occupancy cannot exceed two entries per slot).
+    #[inline]
+    pub fn over_pressure(&self, occ: u64) -> bool {
+        occ > 2 * self.fast_per_set * self.cfg.pressure_milli as u64 / 1000
+    }
+
+    /// Slots to examine this epoch: the configured budget, clamped to one
+    /// full rotation.
+    #[inline]
+    pub fn budget(&self) -> u64 {
+        (self.cfg.sweep_budget as u64).min(self.fast_per_set)
+    }
+
+    /// Next slot under the set's rotating sweep cursor.
+    #[inline]
+    pub fn next_slot(&mut self, set: u32) -> u64 {
+        let c = &mut self.cursor[set as usize];
+        let s = *c as u64;
+        *c = if s + 1 >= self.fast_per_set { 0 } else { *c + 1 };
+        s
+    }
+
+    /// Whether `slot` of `set` has not been touched for more than
+    /// `cold_epochs` epochs.
+    #[inline]
+    pub fn is_cold(&self, set: u32, slot: u64) -> bool {
+        let at = set as usize * self.fast_per_set as usize + slot as usize;
+        let age = self.epoch[set as usize].wrapping_sub(self.last_epoch[at]);
+        age > self.cfg.cold_epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on() -> DecayConfig {
+        DecayConfig { enabled: true, ..DecayConfig::off() }
+    }
+
+    #[test]
+    fn disabled_state_allocates_nothing() {
+        let d = DecayState::new(DecayConfig::off(), false, 8, 64);
+        assert!(!d.enabled());
+        assert!(d.epoch.is_empty() && d.last_epoch.is_empty());
+    }
+
+    #[test]
+    fn epoch_cadence_counts_accesses() {
+        let mut cfg = on();
+        cfg.epoch_accesses = 3;
+        let mut d = DecayState::new(cfg, true, 1, 4);
+        assert!(!d.on_access(0));
+        assert!(!d.on_access(0));
+        assert!(d.on_access(0));
+        assert!(!d.on_access(0));
+    }
+
+    #[test]
+    fn touch_resets_coldness() {
+        let mut cfg = on();
+        cfg.cold_epochs = 2;
+        let mut d = DecayState::new(cfg, true, 1, 4);
+        d.touch(0, 1);
+        for _ in 0..3 {
+            d.advance_epoch(0);
+        }
+        assert!(d.is_cold(0, 1), "3 epochs untouched > cold_epochs 2");
+        d.touch(0, 1);
+        assert!(!d.is_cold(0, 1));
+        d.advance_epoch(0);
+        assert!(!d.is_cold(0, 1), "age 1 <= cold_epochs 2");
+    }
+
+    #[test]
+    fn coldness_survives_epoch_wraparound() {
+        let mut cfg = on();
+        cfg.cold_epochs = 1;
+        let mut d = DecayState::new(cfg, true, 1, 2);
+        d.epoch[0] = u32::MAX; // about to wrap
+        d.touch(0, 0);
+        d.advance_epoch(0); // epoch = 0
+        assert_eq!(d.epoch[0], 0);
+        assert!(!d.is_cold(0, 0), "age 1 across the wrap");
+        d.advance_epoch(0);
+        assert!(d.is_cold(0, 0), "age 2 across the wrap");
+    }
+
+    #[test]
+    fn pressure_gate_brackets() {
+        let mut cfg = on();
+        cfg.pressure_milli = 500;
+        let d = DecayState::new(cfg, true, 1, 64);
+        // threshold = 2 * 64 * 500 / 1000 = 64 entries
+        assert!(!d.over_pressure(64));
+        assert!(d.over_pressure(65));
+        let mut always = on();
+        always.pressure_milli = 0;
+        let d0 = DecayState::new(always, true, 1, 64);
+        assert!(d0.over_pressure(1));
+        assert!(!d0.over_pressure(0));
+        let mut never = on();
+        never.pressure_milli = 1000;
+        let d1 = DecayState::new(never, true, 1, 64);
+        assert!(!d1.over_pressure(2 * 64), "full occupancy still below the gate");
+    }
+
+    #[test]
+    fn cursor_rotates_and_budget_clamps() {
+        let mut cfg = on();
+        cfg.sweep_budget = 100;
+        let mut d = DecayState::new(cfg, true, 1, 3);
+        assert_eq!(d.budget(), 3, "budget clamps to one rotation");
+        assert_eq!(
+            [d.next_slot(0), d.next_slot(0), d.next_slot(0), d.next_slot(0)],
+            [0, 1, 2, 0]
+        );
+    }
+}

@@ -11,6 +11,8 @@
 //! * [`lohhill`] — Loh-Hill Cache (MICRO'11): 30-way within an 8 kB row,
 //!   tags-in-row, perfect MissMap, RRIP replacement.
 //! * [`mea`] — MemPod's Majority Element Algorithm counters.
+//! * [`decay`] — pressure-driven metadata decay: cold remapped blocks
+//!   migrate home and their table entries reclaim to identity format.
 //!
 //! All controllers implement [`Controller`]: the simulation engine feeds
 //! them LLC-miss accesses in `(set, per-set index)` physical form and gets
@@ -18,6 +20,7 @@
 //! happens off the critical path but still occupies device banks.
 
 pub mod alloy;
+pub mod decay;
 pub mod lohhill;
 pub mod mea;
 pub mod remap;

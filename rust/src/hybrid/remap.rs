@@ -31,6 +31,7 @@
 //! comes back, exactly the bidirectional-entry dance of §3.3.
 
 use crate::config::{Mode, RemapCacheKind, ReplacementPolicy, SystemConfig};
+use crate::hybrid::decay::DecayState;
 use crate::hybrid::mea::MeaTracker;
 use crate::hybrid::{Access, Controller};
 use crate::mem::MemDevice;
@@ -100,6 +101,8 @@ pub struct RemapController {
     /// Per-set LRU timestamps (allocated only under the LRU policy).
     lru: Vec<Cycle>,
     mea: Vec<MeaTracker>,
+    /// Pressure-driven metadata decay bookkeeping (DESIGN.md §11).
+    decay: DecayState,
     rng: Rng64,
     stats: Stats,
     /// Reusable table-update event buffers. Two, because a table update
@@ -216,6 +219,9 @@ impl RemapController {
         } else {
             Vec::new()
         };
+        // The Ideal oracle has no metadata to trim: decay stays inert.
+        let decay =
+            DecayState::new(h.decay, h.decay.enabled && !ideal, n_sets, layout.fast_per_set);
 
         RemapController {
             layout,
@@ -229,6 +235,7 @@ impl RemapController {
             flat_cursor: vec![0; n_sets],
             lru,
             mea,
+            decay,
             rng: Rng64::new(cfg.workload.seed ^ 0x5107),
             stats: Stats::default(),
             ev_buf: Vec::with_capacity(8),
@@ -583,6 +590,9 @@ impl RemapController {
             self.stats.saved_slot_fills += 1;
         }
         *self.slot_mut(set, s) = Slot::Data { phys: p as u32, dirty, moved: false };
+        if self.decay.enabled() {
+            self.decay.touch(set, s); // fresh fills start warm
+        }
         self.table_set(set, p, s, t);
         self.table_set(set, s, p, t);
         // Metadata allocation may have reclaimed the very slot we filled
@@ -613,6 +623,9 @@ impl RemapController {
         self.stats.slow_traffic_bytes += 2 * bb as u64;
         self.stats.fills += 1;
         *self.slot_mut(set, s) = Slot::Data { phys: p as u32, dirty: true, moved: true };
+        if self.decay.enabled() {
+            self.decay.touch(set, s); // fresh swaps start warm
+        }
         self.table_set(set, p, s, t);
         self.table_set(set, s, p, t);
     }
@@ -894,6 +907,9 @@ impl RemapController {
                 let f = self.layout.fast_per_set as usize;
                 self.clock_ref[set as usize * f + device as usize] = true;
             }
+            if self.decay.enabled() {
+                self.decay.touch(set, device);
+            }
             r.done - t0
         } else {
             // A sub-block miss reads the line from the block's home.
@@ -931,10 +947,43 @@ impl RemapController {
             self.maybe_fill(set, idx, line, kind, done);
             if self.mode == Mode::Flat && self.mea[set as usize].record(idx) {
                 self.mea_epoch(set, done);
+                // Flat mode: the decay epoch piggybacks on the MEA epoch.
+                if self.decay.enabled() {
+                    self.decay_epoch(set, done);
+                }
             }
+        }
+        // Cache mode paces decay epochs by demand-access count.
+        if self.decay.enabled() && self.mode == Mode::Cache && self.decay.on_access(set) {
+            self.decay_epoch(set, done);
         }
 
         meta_lat + data_lat
+    }
+
+    /// One decay epoch boundary for `set` (DESIGN.md §11): advance the
+    /// epoch, and — while non-identity occupancy is above the pressure
+    /// threshold — sweep a budgeted window of slots under the rotating
+    /// cursor, evicting cold remapped blocks. [`Self::evict_slot`] does
+    /// the heavy lifting: flat swaps migrate back to their home frame,
+    /// cached copies write back if dirty, both table entries reclaim to
+    /// identity, and the freed slot returns to the free stack — so every
+    /// oracle invariant (involution, tier crossing, free-stack coverage)
+    /// holds by construction after the reclaim.
+    fn decay_epoch(&mut self, set: u32, t: Cycle) {
+        self.decay.advance_epoch(set);
+        self.stats.decay_epochs += 1;
+        if !self.decay.over_pressure(self.table.nonidentity_entries(set)) {
+            return;
+        }
+        for _ in 0..self.decay.budget() {
+            let s = self.decay.next_slot(set);
+            self.stats.decay_checked += 1;
+            if matches!(self.slot(set, s), Slot::Data { .. }) && self.decay.is_cold(set, s) {
+                self.evict_slot(set, s, t);
+                self.stats.decay_reclaims += 1;
+            }
+        }
     }
 }
 

@@ -3,7 +3,8 @@
 //! ```text
 //! trimma list                               available workloads / presets
 //! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
-//!            [--accesses N] [--ideal] [--verify] [--ratio R] [--block B]
+//!            [--accesses N] [--ideal] [--verify] [--decay] [--ratio R]
+//!            [--block B]
 //!            [--shards N]                  N>0: open-loop sharded run
 //!                                          across N worker threads
 //!            [--pipeline]                  pipelined front end (needs
@@ -11,7 +12,7 @@
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
-//!              [--pipeline]                hot-path + sim-sweep perf
+//!              [--pipeline] [--decay]      hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json    validate a report's schema
 //! trimma bench-compare --baseline B --new N [--warn-pct 10] [--fail-pct 30]
@@ -31,13 +32,15 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
 
   trimma list                               workloads / designs / figures
   trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
-             [--accesses N] [--cores N] [--ideal] [--verify] [--ratio R] [--block B]
+             [--accesses N] [--cores N] [--ideal] [--verify] [--decay]
+             [--ratio R] [--block B]
              [--shards N]   N>0: open-loop sharded run across N workers
              [--pipeline]   pipelined front end (needs --shards N, N>=1)
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
+               [--decay]
   trimma bench-check --report bench.json
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -131,6 +134,7 @@ fn list() {
 fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let mut cfg = build_cfg(get);
     cfg.hybrid.verify |= has("--verify");
+    cfg.hybrid.decay.enabled |= has("--decay");
     let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
     let mut job = Job::new(format!("{}:{}", cfg.name, wl), cfg, &wl);
     job.ideal = has("--ideal");
@@ -203,7 +207,8 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let tag = get("--tag").unwrap_or_else(|| if quick { "quick".into() } else { "full".into() });
     let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(2);
     let pipeline = has("--pipeline");
-    let report = trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline);
+    let decay = has("--decay");
+    let report = trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline, decay);
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
         report.geomean_sim_msteps_per_s,

@@ -11,6 +11,21 @@
 //! hottest loop, run once per LLC miss. Validity is encoded as
 //! `last_use != 0`: the tick counter starts at 1, so every live entry has
 //! a non-zero timestamp and no separate valid bit is needed.
+//!
+//! Because validity rides on the timestamp, the tick counter must never
+//! wrap: a wrapped tick would mint stamp 0 — the invalidity sentinel — on
+//! a live entry, silently dropping it (and a *saturated* tick would freeze
+//! LRU order). The counter therefore renormalizes before reaching
+//! `tick_limit`: live stamps are rank-compressed to `1..=live` (they are
+//! pairwise distinct, so relative LRU order is preserved exactly) and the
+//! tick restarts above them. With the default limit of `u64::MAX` the
+//! renormalization is unreachable in practice; tests force a tiny limit to
+//! exercise it.
+//!
+//! Audit note: no controller reset path (`Controller::reset_stats`, end of
+//! warmup) touches the cache or its tick — stats resets only swap the
+//! [`crate::stats::Stats`] struct — so an invalidated entry (stamp 0) can
+//! never be resurrected by a post-reset clock rewind.
 
 use crate::types::BlockId;
 
@@ -26,6 +41,11 @@ pub struct RemapCache {
     /// LRU timestamp lane; 0 = invalid entry.
     last: Vec<u64>,
     tick: u64,
+    /// Renormalize before the tick reaches this bound (see module docs).
+    tick_limit: u64,
+    /// Preallocated sort buffer for renormalization (no steady-state
+    /// allocation, see `tests/alloc_free.rs`).
+    scratch: Vec<u64>,
     hash_index: bool,
 }
 
@@ -47,8 +67,47 @@ impl RemapCache {
             vals: vec![0; n],
             last: vec![0; n],
             tick: 0,
+            tick_limit: u64::MAX,
+            scratch: Vec::with_capacity(n),
             hash_index,
         }
+    }
+
+    /// Test constructor: force a tiny tick width so the wrap-avoidance
+    /// renormalization actually fires. Behaviour must be bit-identical to
+    /// the unlimited cache (see `tick_renormalization_preserves_lru`).
+    pub fn with_tick_limit(sets: u32, ways: u32, tick_limit: u64) -> Self {
+        let mut c = Self::with_index(sets, ways, false);
+        assert!(tick_limit as u128 > (sets as u128) * (ways as u128), "limit must exceed capacity");
+        c.tick_limit = tick_limit;
+        c
+    }
+
+    /// Advance the LRU clock, renormalizing first if the next tick would
+    /// reach the limit. Every live stamp is unique (each comes from a
+    /// distinct `bump`), so rank-compressing them to `1..=live` preserves
+    /// LRU order exactly while freeing the rest of the counter range.
+    #[inline]
+    fn bump(&mut self) -> u64 {
+        if self.tick >= self.tick_limit - 1 {
+            self.renormalize();
+        }
+        self.tick += 1;
+        self.tick
+    }
+
+    #[cold]
+    fn renormalize(&mut self) {
+        self.scratch.clear();
+        self.scratch.extend(self.last.iter().copied().filter(|&t| t != 0));
+        self.scratch.sort_unstable();
+        for t in self.last.iter_mut() {
+            if *t != 0 {
+                // Stamps are pairwise distinct, so the search always hits.
+                *t = self.scratch.binary_search(t).unwrap() as u64 + 1;
+            }
+        }
+        self.tick = self.scratch.len() as u64;
     }
 
     #[inline]
@@ -64,11 +123,11 @@ impl RemapCache {
     /// Look up `key`; LRU-refreshes on hit.
     #[inline]
     pub fn probe(&mut self, key: BlockId) -> Option<u32> {
-        self.tick += 1;
+        let tick = self.bump();
         let base = (self.set_of(key) * self.ways as u64) as usize;
         for i in base..base + self.ways as usize {
             if self.last[i] != 0 && self.tags[i] == key {
-                self.last[i] = self.tick;
+                self.last[i] = tick;
                 return Some(self.vals[i]);
             }
         }
@@ -77,7 +136,7 @@ impl RemapCache {
 
     /// Insert or overwrite `key -> value`, evicting LRU if needed.
     pub fn insert(&mut self, key: BlockId, value: u32) {
-        self.tick += 1;
+        self.bump();
         let base = (self.set_of(key) * self.ways as u64) as usize;
         let mut victim = base;
         let mut victim_use = u64::MAX;
@@ -199,6 +258,58 @@ mod tests {
         assert_eq!(c.modify(10, |v| v | 0b10), Some(0b01));
         assert_eq!(c.probe(10), Some(0b11));
         assert_eq!(c.modify(11, |v| v), None);
+    }
+
+    #[test]
+    fn tick_renormalization_preserves_lru() {
+        // Force a tick width small enough to renormalize hundreds of times
+        // over the run; a wrapped (or saturated) counter would diverge from
+        // the unlimited reference the first time an LRU decision flips or
+        // a live entry picks up stamp 0 and vanishes.
+        let mut limited = RemapCache::with_tick_limit(16, 4, 512);
+        let mut reference = RemapCache::new(16, 4);
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        for step in 0..200_000u64 {
+            // xorshift* — deterministic mixed op/key stream.
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            let key = (x >> 33) % 96; // ~1.5x capacity: constant eviction
+            match x % 8 {
+                0..=3 => assert_eq!(limited.probe(key), reference.probe(key), "step {step}"),
+                4..=5 => {
+                    limited.insert(key, step as u32);
+                    reference.insert(key, step as u32);
+                }
+                6 => assert_eq!(
+                    limited.modify(key, |v| v ^ 1),
+                    reference.modify(key, |v| v ^ 1),
+                    "step {step}"
+                ),
+                _ => assert_eq!(limited.invalidate(key), reference.invalidate(key), "step {step}"),
+            }
+            assert!(limited.tick <= 512, "tick escaped the limit at step {step}");
+            assert_eq!(limited.live_entries(), reference.live_entries(), "step {step}");
+        }
+        // The limited clock really did cycle (renormalization exercised).
+        assert!(limited.tick < reference.tick);
+    }
+
+    #[test]
+    fn renormalization_restarts_clock_above_live_stamps() {
+        let mut c = RemapCache::with_tick_limit(4, 2, 16);
+        for k in 0..6u64 {
+            c.insert(k, k as u32);
+        }
+        c.renormalize();
+        // Stamps compress to 1..=live and the clock resumes above them, so
+        // a post-renormalization refresh still outranks every old stamp.
+        assert_eq!(c.tick, c.live_entries());
+        c.probe(4); // set 0 holds {0, 4}: refresh 4
+        c.insert(8, 9); // must evict 0, the stale way
+        assert_eq!(c.probe(0), None);
+        assert_eq!(c.probe(4), Some(4));
+        assert_eq!(c.probe(8), Some(9));
     }
 
     #[test]

@@ -83,6 +83,15 @@ pub struct Stats {
     /// Remap entries recycled through software deallocation hints (§3.5).
     pub dealloc_recycled: u64,
 
+    // ---- metadata decay (DESIGN.md §11) ----
+    /// Decay epoch boundaries observed across all sets.
+    pub decay_epochs: u64,
+    /// Fast-tier slots examined by the budgeted background sweep.
+    pub decay_checked: u64,
+    /// Cold remapped blocks migrated home and reclaimed to identity by the
+    /// decay sweep.
+    pub decay_reclaims: u64,
+
     // ---- metadata storage (sampled at end of run) ----
     /// Bytes of remap-table storage currently allocated in the fast tier.
     pub metadata_bytes_used: u64,
@@ -119,7 +128,8 @@ impl Stats {
             slow_traffic_bytes, migration_bytes, writeback_bytes,
             metadata_traffic_bytes, fills, evictions,
             metadata_priority_evictions, saved_slot_fills, subblock_fetches,
-            dealloc_recycled, instructions,
+            dealloc_recycled, decay_epochs, decay_checked, decay_reclaims,
+            instructions,
             total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
         );
         self.max_core_cycles = self.max_core_cycles.max(o.max_core_cycles);
@@ -152,7 +162,8 @@ impl Stats {
             slow_traffic_bytes, migration_bytes, writeback_bytes,
             metadata_traffic_bytes, fills, evictions,
             metadata_priority_evictions, saved_slot_fills, subblock_fetches,
-            dealloc_recycled, metadata_bytes_used, metadata_bytes_reserved,
+            dealloc_recycled, decay_epochs, decay_checked, decay_reclaims,
+            metadata_bytes_used, metadata_bytes_reserved,
             donated_slots, instructions,
             total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
         );
@@ -219,7 +230,7 @@ impl Stats {
     /// harness (rust/tests/golden.rs) and the determinism matrix compare
     /// exactly this.
     pub fn canonical(&self) -> String {
-        let pairs: [(&str, u64); 38] = [
+        let pairs: [(&str, u64); 41] = [
             ("mem_accesses", self.mem_accesses),
             ("mem_reads", self.mem_reads),
             ("mem_writes", self.mem_writes),
@@ -248,6 +259,9 @@ impl Stats {
             ("saved_slot_fills", self.saved_slot_fills),
             ("subblock_fetches", self.subblock_fetches),
             ("dealloc_recycled", self.dealloc_recycled),
+            ("decay_epochs", self.decay_epochs),
+            ("decay_checked", self.decay_checked),
+            ("decay_reclaims", self.decay_reclaims),
             ("metadata_bytes_used", self.metadata_bytes_used),
             ("metadata_bytes_reserved", self.metadata_bytes_reserved),
             ("donated_slots", self.donated_slots),
@@ -292,11 +306,11 @@ mod tests {
 
     #[test]
     fn canonical_serializes_the_full_vector() {
-        // Every one of the 38 counters must appear — `cache_accesses` was
+        // Every one of the 41 counters must appear — `cache_accesses` was
         // historically omitted, leaving golden snapshots blind to it.
         let s = Stats { cache_accesses: 7, ..Default::default() };
         let c = s.canonical();
-        assert_eq!(c.matches('=').count(), 38);
+        assert_eq!(c.matches('=').count(), 41);
         assert!(c.ends_with("cache_accesses=7"), "{c}");
     }
 

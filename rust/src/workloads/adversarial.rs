@@ -24,6 +24,11 @@
 //! | `adv_pointer_chase`   | dependent-chain hash walk over the whole        |
 //! |                       | footprint: no spatial locality, maximal remap   |
 //! |                       | cache pressure                                  |
+//! | `adv_metadata_bloat`  | phase-changing hot regions that never return:   |
+//! |                       | each phase mints fresh remap entries and        |
+//! |                       | abandons the last phase's, so stale             |
+//! |                       | non-identity mappings pile up (the decay        |
+//! |                       | subsystem's target workload, DESIGN.md §11)     |
 //!
 //! Scenarios are pure functions of `(seed, core, step)` plus the config
 //! geometry, so runs are bit-reproducible across thread counts and hosts.
@@ -43,6 +48,7 @@ pub const ADVERSARIAL: &[&str] = &[
     "adv_identity_flip",
     "adv_drift",
     "adv_pointer_chase",
+    "adv_metadata_bloat",
 ];
 
 /// Geometry every scenario derives its parameters from.
@@ -220,6 +226,25 @@ fn chase_addr(g: &Geom, stream: u32, step: u32) -> u64 {
     (h as u64 % total_lines) * LINE
 }
 
+/// Metadata bloat: a hot region (bigger than the LLC, comparable to half
+/// the fast tier) is hammered hash-uniformly for one phase, then the
+/// region jumps to fresh address space and **never returns**. Every phase
+/// mints a region's worth of non-identity remap entries whose blocks go
+/// cold the moment the phase ends; without decay those stale mappings
+/// only retire under replacement pressure, so non-identity occupancy
+/// ratchets toward capacity.
+fn bloat_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let region_blocks = ((2 * g.llc_bytes / g.block).max(g.fast_blocks / 2)).max(64);
+    // Phases long enough to warm the region, short enough that a tiny run
+    // still crosses several phase changes.
+    let phase_len: u32 = 1024;
+    let phase = step / phase_len;
+    let base_block = (phase as u64).wrapping_mul(region_blocks);
+    let h = lowbias32(lowbias32(step ^ stream.wrapping_mul(0x0100_0193)) ^ 0xB10A);
+    let block = base_block + (h as u64 % region_blocks);
+    block * g.block
+}
+
 /// Build a scenario by name, or `None` if the name is not adversarial.
 pub fn build(name: &str, cfg: &SystemConfig) -> Option<Box<dyn Workload>> {
     let geom = Geom::of(cfg);
@@ -237,6 +262,7 @@ pub fn build(name: &str, cfg: &SystemConfig) -> Option<Box<dyn Workload>> {
             }
             "adv_drift" => (drift_addr, geom.os_cap, 204, 20),
             "adv_pointer_chase" => (chase_addr, geom.os_cap, 51, 8),
+            "adv_metadata_bloat" => (bloat_addr, geom.os_cap, 307, 16),
             _ => return None,
         };
     Some(Box::new(Scenario {
@@ -326,6 +352,25 @@ mod tests {
             sets.insert(set);
         }
         assert_eq!(sets.len(), 1, "thrash must alias one set: {sets:?}");
+    }
+
+    #[test]
+    fn metadata_bloat_abandons_old_phases() {
+        // Once a phase ends its region is never revisited: the minimum
+        // address of each later phase's accesses keeps climbing (modulo
+        // the footprint wrap, which a short run never reaches).
+        let cfg = cfg();
+        let mut wl = build("adv_metadata_bloat", &cfg).unwrap();
+        let mut phase_min = [u64::MAX; 3];
+        for step in 0..3 * 1024 {
+            let a = wl.next(0);
+            let p = (step / 1024) as usize;
+            phase_min[p] = phase_min[p].min(a.addr);
+        }
+        assert!(
+            phase_min[0] < phase_min[1] && phase_min[1] < phase_min[2],
+            "phases must move to fresh address space: {phase_min:?}"
+        );
     }
 
     #[test]

@@ -61,11 +61,28 @@ fn drive<C: Controller>(c: &mut C, rng: &mut Rng64, t: &mut u64, n: u64, span: u
 
 #[test]
 fn translate_path_is_allocation_free_in_steady_state() {
-    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+    // Each design point runs plain and (where the remap table supports it)
+    // with the decay sweep firing hard — epoch every 64 per-set accesses,
+    // no pressure gate, one-epoch coldness — since the sweep shares the
+    // steady-state path and must live off preallocated scratch too.
+    for (dp, decay) in [
+        (DesignPoint::TrimmaCache, false),
+        (DesignPoint::TrimmaFlat, false),
+        (DesignPoint::LinearCache, false),
+        (DesignPoint::TrimmaCache, true),
+        (DesignPoint::TrimmaFlat, true),
+    ] {
         let mut cfg = presets::hbm3_ddr5(dp);
         cfg.hybrid.fast_bytes = 1 << 20;
         cfg.hybrid.slow_bytes = 32 << 20;
         cfg.hybrid.num_sets = 4;
+        if decay {
+            cfg.hybrid.decay.enabled = true;
+            cfg.hybrid.decay.epoch_accesses = 64;
+            cfg.hybrid.decay.pressure_milli = 0;
+            cfg.hybrid.decay.sweep_budget = 128;
+            cfg.hybrid.decay.cold_epochs = 1;
+        }
         // The enum-dispatched engine path must stay allocation-free too.
         let mut c = AnyController::from_config(&cfg, false);
         let span = c.layout().slow_per_set.min(6000);
@@ -81,10 +98,18 @@ fn translate_path_is_allocation_free_in_steady_state() {
         let delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
         assert_eq!(
             delta, 0,
-            "{dp:?}: {delta} heap allocation(s) on the steady-state translate path"
+            "{dp:?} (decay={decay}): {delta} heap allocation(s) on the \
+             steady-state translate path"
         );
 
-        // The controller still works and saw the traffic.
+        // The controller still works and saw the traffic; the decay
+        // variants really exercised the sweep inside the measured window.
         assert_eq!(c.stats().mem_accesses, 80_000);
+        if decay {
+            assert!(
+                c.stats().decay_checked > 0,
+                "{dp:?}: decay sweep never ran during the alloc-free check"
+            );
+        }
     }
 }

@@ -1,0 +1,159 @@
+//! Differential tests of pressure-driven metadata decay (DESIGN.md §11):
+//! an *inert* decay pass (pressure gate that can never open) must be
+//! observation-only, an *aggressive* pass on the metadata-bloat scenario
+//! must actually reclaim stale remaps and end with strictly lower
+//! non-identity iRT occupancy than a decay-off run, the sweep must stay
+//! green under the verify oracle, and merged stats must remain
+//! byte-identical across shard counts with decay enabled.
+
+mod common;
+
+use trimma::config::presets::DesignPoint;
+use trimma::config::SystemConfig;
+use trimma::engine::EngineBuilder;
+use trimma::hybrid::Controller;
+use trimma::sim::Simulation;
+use trimma::stats::Stats;
+use trimma::workloads;
+
+/// The scenario built to leave stale non-identity mappings behind: each
+/// phase touches a fresh region and abandons the previous one.
+const BLOAT: &str = "adv_metadata_bloat";
+
+/// Like [`common::tiny`], but with enough accesses that flat mode crosses
+/// many MEA epoch boundaries per set (the decay epoch piggybacks on them).
+fn decay_cfg(dp: DesignPoint) -> SystemConfig {
+    let mut cfg = common::tiny(dp);
+    cfg.workload.accesses_per_core = 6000;
+    cfg.workload.warmup_per_core = 500;
+    cfg
+}
+
+/// Knobs that make the sweep fire hard: epoch every 32 per-set accesses
+/// (cache mode), sweep on any non-identity entry, cold after one untouched
+/// epoch, generous budget.
+fn aggressive(cfg: &mut SystemConfig) {
+    cfg.hybrid.decay.enabled = true;
+    cfg.hybrid.decay.epoch_accesses = 32;
+    cfg.hybrid.decay.pressure_milli = 0;
+    cfg.hybrid.decay.sweep_budget = 256;
+    cfg.hybrid.decay.cold_epochs = 1;
+}
+
+fn zero_decay_counters(mut s: Stats) -> Stats {
+    s.decay_epochs = 0;
+    s.decay_checked = 0;
+    s.decay_reclaims = 0;
+    s
+}
+
+/// Run `cfg` on the bloat scenario and return `(final stats, total
+/// non-identity iRT entries summed over all sets)`.
+fn run_with_occupancy(cfg: &SystemConfig) -> (Stats, u64) {
+    let wl = workloads::by_name(BLOAT, cfg).unwrap_or_else(|e| panic!("{e}"));
+    let mut sim = Simulation::new(cfg, wl);
+    let stats = sim.run().stats;
+    let ctrl = sim.session().controller();
+    let occ = (0..ctrl.layout().num_sets)
+        .map(|s| ctrl.debug_nonidentity_entries(s).expect("remap design"))
+        .sum();
+    (stats, occ)
+}
+
+#[test]
+fn inert_decay_is_observation_only() {
+    // pressure_milli = 1000 sets the gate at the occupancy ceiling, which
+    // live occupancy can never exceed: epochs tick, the sweep never runs,
+    // and the stat vector must match a decay-off run exactly — modulo the
+    // three decay counters themselves.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let off = common::run(dp, &decay_cfg(dp), BLOAT);
+        let mut icfg = decay_cfg(dp);
+        icfg.hybrid.decay.enabled = true;
+        icfg.hybrid.decay.epoch_accesses = 32;
+        icfg.hybrid.decay.pressure_milli = 1000;
+        let on = common::run(dp, &icfg, BLOAT);
+        assert!(on.decay_epochs > 0, "{dp:?}: inert decay must still tick epochs");
+        assert_eq!(on.decay_checked, 0, "{dp:?}: the gated sweep must never run");
+        assert_eq!(on.decay_reclaims, 0, "{dp:?}");
+        assert_eq!(off.decay_epochs, 0, "{dp:?}: decay off must not tick");
+        assert_eq!(
+            zero_decay_counters(off).canonical(),
+            zero_decay_counters(on).canonical(),
+            "{dp:?}: inert decay perturbed the simulation"
+        );
+    }
+}
+
+#[test]
+fn aggressive_decay_reclaims_and_shrinks_occupancy() {
+    // The acceptance criterion: on the phase-change scenario, decay-on
+    // must end with strictly lower steady-state non-identity occupancy
+    // than decay-off, having actually reclaimed entries.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let (off_stats, off_occ) = run_with_occupancy(&decay_cfg(dp));
+        let mut acfg = decay_cfg(dp);
+        aggressive(&mut acfg);
+        let (on_stats, on_occ) = run_with_occupancy(&acfg);
+        assert_eq!(off_stats.decay_reclaims, 0, "{dp:?}");
+        assert!(
+            on_stats.decay_reclaims > 0,
+            "{dp:?}: the sweep found nothing to reclaim (checked {})",
+            on_stats.decay_checked
+        );
+        assert!(
+            on_occ < off_occ,
+            "{dp:?}: decay-on occupancy {on_occ} must be strictly below decay-off {off_occ}"
+        );
+    }
+}
+
+#[test]
+fn aggressive_decay_is_green_under_oracle() {
+    // Every decay reclamation path (dirty writeback, moved-pair swap
+    // restore, free-stack return) must uphold the oracle's involution,
+    // tier and occupancy-bookkeeping invariants.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let mut cfg = decay_cfg(dp);
+        aggressive(&mut cfg);
+        cfg.hybrid.verify = true;
+        let stats = common::run(dp, &cfg, BLOAT);
+        assert!(stats.decay_reclaims > 0, "{dp:?}: oracle run must exercise reclaim");
+    }
+}
+
+#[test]
+fn decay_merged_stats_shard_invariant() {
+    // Decay state is per-set and its epochs are driven by per-set access
+    // streams, so the sharded path must stay byte-identical across shard
+    // counts with the sweep firing.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let run = |shards: usize| {
+            EngineBuilder::new(dp)
+                .workload(BLOAT)
+                .decay(true)
+                .configure(|cfg| {
+                    cfg.hybrid.fast_bytes = 1 << 20;
+                    cfg.hybrid.slow_bytes = 32 << 20;
+                    cfg.hybrid.num_sets = 4;
+                    cfg.workload.cores = 2;
+                    cfg.workload.accesses_per_core = 6000;
+                    cfg.workload.warmup_per_core = 500;
+                    aggressive(cfg);
+                })
+                .shards(shards)
+                .run_sharded()
+                .unwrap_or_else(|e| panic!("{e}"))
+                .stats
+        };
+        let one = run(1);
+        assert!(one.decay_reclaims > 0, "{dp:?}: sharded run must exercise reclaim");
+        for shards in [2usize, 4] {
+            assert_eq!(
+                one.canonical(),
+                run(shards).canonical(),
+                "{dp:?}: {shards} shards diverged from 1 shard"
+            );
+        }
+    }
+}

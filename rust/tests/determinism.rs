@@ -32,6 +32,23 @@ fn verification_does_not_change_determinism() {
 }
 
 #[test]
+fn metadata_bloat_and_decay_are_deterministic() {
+    // The phase-change scenario plus an aggressively firing decay sweep:
+    // epoch pacing, the pressure gate, and the rotating sweep cursor are
+    // all per-set state, so repeated runs must stay byte-identical.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let mut cfg = common::tiny(dp);
+        cfg.hybrid.decay.enabled = true;
+        cfg.hybrid.decay.epoch_accesses = 32;
+        cfg.hybrid.decay.pressure_milli = 0;
+        cfg.hybrid.decay.cold_epochs = 1;
+        let a = common::run(dp, &cfg, "adv_metadata_bloat").canonical();
+        let b = common::run(dp, &cfg, "adv_metadata_bloat").canonical();
+        assert_eq!(a, b, "{dp:?}: decay runs diverged");
+    }
+}
+
+#[test]
 fn run_jobs_thread_count_invariant() {
     // One job per design point, all on the same adversarial workload; the
     // coordinator must return identical stat vectors whether it runs them
