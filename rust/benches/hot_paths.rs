@@ -6,7 +6,7 @@
 use trimma::bench_util::Bench;
 use trimma::coordinator::bench::{
     run_decay_sweep, run_hot_paths, run_pipeline_sweep, run_sharded_sweep, run_sim_sweep,
-    SHARD_COUNTS,
+    run_tenant_sweep, SHARD_COUNTS,
 };
 use trimma::coordinator::geomean;
 
@@ -18,4 +18,5 @@ fn main() {
     run_sharded_sweep(&mut b, false, SHARD_COUNTS);
     run_pipeline_sweep(&mut b, false, 4);
     run_decay_sweep(&mut b, false, 4);
+    run_tenant_sweep(&mut b, false, 4);
 }

@@ -259,6 +259,20 @@ pub fn throughput_ratio(baseline: &BenchReport, new: &BenchReport) -> Option<f64
     }
 }
 
+/// Labels from `required` (a comma-separated list, entries trimmed, empty
+/// entries ignored) that have **no** record in `report` — the CI
+/// `bench-check --require-labels` gate. Order follows `required`, so the
+/// error message reads in the same order the gate was configured.
+pub fn missing_labels(report: &BenchReport, required: &str) -> Vec<String> {
+    required
+        .split(',')
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .filter(|l| !report.records.iter().any(|r| r.label == *l))
+        .map(str::to_string)
+        .collect()
+}
+
 fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -645,6 +659,20 @@ mod tests {
         let mut new = sample_report();
         new.quick = false;
         assert_eq!(throughput_ratio(&base, &new), None);
+    }
+
+    #[test]
+    fn missing_labels_reports_only_absent_ones_in_order() {
+        let r = sample_report(); // has irt_lookup and sim/trimma-c/gap_pr
+        assert!(missing_labels(&r, "irt_lookup").is_empty());
+        assert!(missing_labels(&r, "").is_empty());
+        assert_eq!(
+            missing_labels(&r, "tenant_mix/8, irt_lookup, tenant_mix/1,"),
+            vec!["tenant_mix/8".to_string(), "tenant_mix/1".to_string()]
+        );
+        // Whitespace around entries is tolerated; substrings don't count.
+        assert!(missing_labels(&r, " sim/trimma-c/gap_pr ").is_empty());
+        assert_eq!(missing_labels(&r, "sim/trimma-c"), vec!["sim/trimma-c".to_string()]);
     }
 
     #[test]

@@ -178,6 +178,128 @@ impl Default for DecayConfig {
     }
 }
 
+/// Contention scenario shaping the per-phase tenant schedule of a
+/// multi-tenant run (see [`TenantMixConfig`] and DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantScenario {
+    /// Every tenant gets equal weight for the whole run.
+    Steady,
+    /// Tenant 0 runs the `adv_set_thrash` adversary with ~50% of the total
+    /// schedule weight; the victims share the rest.
+    NoisyNeighbor,
+    /// Tenants arrive and depart at phase boundaries: tenant 0 is an
+    /// always-active anchor, every other tenant is active in ~3/4 of the
+    /// phases (a pure hash of tenant id x phase decides).
+    Churn,
+    /// A periodic traffic spike: in a window of phases the crowd tenant
+    /// (the highest-numbered one) gets 8x every other tenant's combined
+    /// weight, then recedes.
+    FlashCrowd,
+}
+
+impl TenantScenario {
+    /// All scenarios (CLI enumeration order).
+    pub const ALL: &'static [TenantScenario] = &[
+        TenantScenario::Steady,
+        TenantScenario::NoisyNeighbor,
+        TenantScenario::Churn,
+        TenantScenario::FlashCrowd,
+    ];
+
+    /// Stable CLI / label name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TenantScenario::Steady => "steady",
+            TenantScenario::NoisyNeighbor => "noisy_neighbor",
+            TenantScenario::Churn => "churn",
+            TenantScenario::FlashCrowd => "flash_crowd",
+        }
+    }
+
+    /// Parse a CLI name produced by [`TenantScenario::label`].
+    pub fn parse(s: &str) -> Option<TenantScenario> {
+        TenantScenario::ALL.iter().copied().find(|t| t.label() == s)
+    }
+}
+
+/// Named distribution the per-tenant workloads are drawn from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixProfile {
+    /// Latency-sensitive serving: YCSB A/B, Silo TPC-C, omnetpp.
+    Serving,
+    /// Scan/graph heavy: GAP pr/bfs/cc, roms.
+    Analytics,
+    /// A broad 8-workload blend of both.
+    General,
+}
+
+impl MixProfile {
+    /// All profiles (CLI enumeration order).
+    pub const ALL: &'static [MixProfile] =
+        &[MixProfile::Serving, MixProfile::Analytics, MixProfile::General];
+
+    /// Stable CLI / label name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MixProfile::Serving => "serving",
+            MixProfile::Analytics => "analytics",
+            MixProfile::General => "general",
+        }
+    }
+
+    /// Parse a CLI name produced by [`MixProfile::label`].
+    pub fn parse(s: &str) -> Option<MixProfile> {
+        MixProfile::ALL.iter().copied().find(|m| m.label() == s)
+    }
+}
+
+/// Multi-tenant serving simulation knobs (the `TenantMix` front end,
+/// DESIGN.md §12): N independent tenant sessions, each a workload drawn
+/// from a named mix distribution with its own deterministic RNG stream and
+/// address-space slab, interleaved into one shared hybrid memory system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantMixConfig {
+    /// Master switch; all presets default to `false` (single-tenant).
+    pub enabled: bool,
+    /// Number of tenant sessions interleaved into the shared system.
+    pub tenants: u32,
+    /// Contention scenario shaping the per-phase schedule.
+    pub scenario: TenantScenario,
+    /// Distribution the per-tenant workloads are drawn from.
+    pub mix: MixProfile,
+    /// Per-core accesses per schedule phase (scenario weights are
+    /// piecewise-constant over phases; churn/flash-crowd re-roll here).
+    pub phase_len: u32,
+    /// Width of one miss-latency histogram bucket, CPU cycles.
+    pub hist_cycles_per_bucket: u32,
+    /// Number of histogram buckets (the last bucket absorbs overflow).
+    pub hist_buckets: u32,
+}
+
+impl TenantMixConfig {
+    /// Multi-tenancy disabled, with sane knob defaults so flipping
+    /// `enabled` alone yields a usable policy: 8 tenants, steady schedule,
+    /// general mix, 4096-access phases, 64-cycle buckets x 256 buckets
+    /// (16k-cycle range before overflow).
+    pub const fn off() -> Self {
+        TenantMixConfig {
+            enabled: false,
+            tenants: 8,
+            scenario: TenantScenario::Steady,
+            mix: MixProfile::General,
+            phase_len: 4096,
+            hist_cycles_per_bucket: 64,
+            hist_buckets: 256,
+        }
+    }
+}
+
+impl Default for TenantMixConfig {
+    fn default() -> Self {
+        TenantMixConfig::off()
+    }
+}
+
 /// Configuration of the hybrid memory system (both tiers + metadata design).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HybridConfig {
@@ -260,6 +382,8 @@ pub struct SystemConfig {
     pub slow_mem: MemTech,
     pub hybrid: HybridConfig,
     pub workload: WorkloadConfig,
+    /// Multi-tenant serving knobs (see [`TenantMixConfig`]; off by default).
+    pub tenant_mix: TenantMixConfig,
 }
 
 impl SystemConfig {
@@ -313,6 +437,21 @@ impl SystemConfig {
             }
             if matches!(h.scheme, MetadataScheme::TagAlloy | MetadataScheme::TagLohHill) {
                 return Err("metadata decay requires a remap table scheme".into());
+            }
+        }
+        let t = &self.tenant_mix;
+        if t.enabled {
+            if t.tenants == 0 {
+                return Err("tenant_mix.tenants must be >= 1".into());
+            }
+            if t.phase_len == 0 {
+                return Err("tenant_mix.phase_len must be > 0".into());
+            }
+            if t.hist_cycles_per_bucket == 0 {
+                return Err("tenant_mix.hist_cycles_per_bucket must be > 0".into());
+            }
+            if t.hist_buckets == 0 {
+                return Err("tenant_mix.hist_buckets must be > 0".into());
             }
         }
         Ok(())
@@ -388,6 +527,40 @@ mod tests {
         let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
         cfg.hybrid.decay.sweep_budget = 0;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn tenant_knobs_validate() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.tenant_mix.enabled = true;
+        cfg.validate().unwrap();
+        cfg.tenant_mix.tenants = 0;
+        assert!(cfg.validate().is_err());
+        cfg.tenant_mix.tenants = 8;
+        cfg.tenant_mix.phase_len = 0;
+        assert!(cfg.validate().is_err());
+        cfg.tenant_mix.phase_len = 4096;
+        cfg.tenant_mix.hist_cycles_per_bucket = 0;
+        assert!(cfg.validate().is_err());
+        cfg.tenant_mix.hist_cycles_per_bucket = 64;
+        cfg.tenant_mix.hist_buckets = 0;
+        assert!(cfg.validate().is_err());
+        // Disabled tenancy never blocks validation, whatever the knobs say.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.tenant_mix.tenants = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn tenant_enums_round_trip() {
+        for s in TenantScenario::ALL {
+            assert_eq!(TenantScenario::parse(s.label()), Some(*s));
+        }
+        for m in MixProfile::ALL {
+            assert_eq!(MixProfile::parse(m.label()), Some(*m));
+        }
+        assert_eq!(TenantScenario::parse("nope"), None);
+        assert_eq!(MixProfile::parse("nope"), None);
     }
 
     #[test]

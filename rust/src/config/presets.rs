@@ -245,7 +245,18 @@ fn base(name: String, fast_mem: MemTech, slow_mem: MemTech, hybrid: HybridConfig
             warmup_per_core: 300_000,
             seed: 0xD1CE,
         },
+        tenant_mix: TenantMixConfig::off(),
     }
+}
+
+/// Enable the multi-tenant front end with `tenants` sessions under the
+/// given scenario ([`TenantMixConfig::off`]'s remaining knob defaults:
+/// general mix, 4096-access phases, 64-cycle x 256-bucket histograms).
+pub fn with_tenants(mut cfg: SystemConfig, tenants: u32, scenario: TenantScenario) -> SystemConfig {
+    cfg.tenant_mix.enabled = true;
+    cfg.tenant_mix.tenants = tenants;
+    cfg.tenant_mix.scenario = scenario;
+    cfg
 }
 
 /// HBM3 (fast) + DDR5 (slow), the paper's first technology combination.

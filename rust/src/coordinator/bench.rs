@@ -17,6 +17,7 @@
 use crate::bench_util::{Bench, BenchReport, SCHEMA_VERSION};
 use crate::cachesim::Hierarchy;
 use crate::config::presets::{self, DesignPoint};
+use crate::config::{TenantMixConfig, TenantScenario};
 use crate::coordinator::geomean;
 use crate::engine::EngineBuilder;
 use crate::hybrid::{Access, Controller};
@@ -409,6 +410,61 @@ pub fn run_decay_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, 
     out
 }
 
+/// Tenant counts the multi-tenant sweep measures: `--quick` keeps it to
+/// `{1, 8}` so CI smoke stays fast; full runs add the 64-tenant point.
+pub fn tenant_counts(quick: bool) -> Vec<u32> {
+    if quick { vec![1, 8] } else { vec![1, 8, 64] }
+}
+
+/// The multi-tenant serving sweep: the Trimma-C design point under the
+/// noisy-neighbor scenario (`sim::tenants`), sharded at `shards` workers,
+/// at each tenant count in [`tenant_counts`]. Records one
+/// `tenant_mix/<n>` label per count with the throughput attached
+/// (M mem-steps/s), prints the per-count throughput ratio over the
+/// single-tenant baseline, and returns the `(tenants, msteps)` pairs.
+///
+/// Unlike the sharded sweeps above, the timed region here is the public
+/// end-to-end path ([`EngineBuilder::run_tenant_mix`]), so it includes
+/// workload and front-end construction; that cost is identical in shape
+/// across counts, and the interesting number is the relative cost of
+/// interleaving more tenants.
+pub fn run_tenant_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(u32, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let mut out = Vec::new();
+    for n in tenant_counts(quick) {
+        let builder = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .tenants(TenantMixConfig {
+                tenants: n,
+                scenario: TenantScenario::NoisyNeighbor,
+                ..TenantMixConfig::off()
+            })
+            .shards(shards.max(1))
+            .configure(move |cfg| {
+                cfg.workload.accesses_per_core = accesses;
+                cfg.workload.warmup_per_core = warmup;
+            });
+        let cfg = builder.build_config().expect("tenant sweep preset");
+        let steps = cfg.workload.cores as f64 * (accesses + warmup) as f64;
+        let label = format!("tenant_mix/{n}");
+        let (rep, dt) = b.once(&label, move || builder.run_tenant_mix());
+        let rep = rep.expect("tenant sweep run");
+        assert_eq!(rep.tenants.len(), n as usize, "one stats row per tenant");
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((n, msteps));
+    }
+    if let Some(&(base_n, base)) = out.first() {
+        for &(n, t) in out.iter().skip(1) {
+            println!(
+                "  tenant mix throughput at {n} tenants: {:.2}x over {base_n}",
+                t / base.max(1e-12)
+            );
+        }
+    }
+    out
+}
+
 /// Run the whole suite and package it as a schema-versioned report.
 /// `shards` feeds [`shard_counts`] for the sharded-session sweep;
 /// `pipeline` additionally runs [`run_pipeline_sweep`] (the
@@ -416,7 +472,17 @@ pub fn run_decay_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, 
 /// what CI's bench-smoke asserts); `decay` additionally runs
 /// [`run_decay_sweep`] (the `metadata_decay/{off,on}` labels —
 /// `trimma bench --decay`, also asserted by CI's bench-smoke).
-pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool, decay: bool) -> BenchReport {
+/// `tenants` additionally runs [`run_tenant_sweep`] (the
+/// `tenant_mix/<n>` labels — `trimma bench --tenants`, gated by CI's
+/// `bench-check --require-labels` pass).
+pub fn full_report(
+    tag: &str,
+    quick: bool,
+    shards: usize,
+    pipeline: bool,
+    decay: bool,
+    tenants: bool,
+) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
         Bench::with_target("trimma-bench", 50e6)
@@ -431,6 +497,9 @@ pub fn full_report(tag: &str, quick: bool, shards: usize, pipeline: bool, decay:
     }
     if decay {
         run_decay_sweep(&mut b, quick, shards);
+    }
+    if tenants {
+        run_tenant_sweep(&mut b, quick, shards);
     }
     BenchReport {
         schema_version: SCHEMA_VERSION,
@@ -470,6 +539,12 @@ mod tests {
         assert_eq!(shard_counts(false, 1), vec![1, 2, 4, 8]);
         assert_eq!(shard_counts(false, 6), vec![1, 2, 4, 6, 8]);
         assert_eq!(shard_counts(false, 4), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn tenant_counts_cover_quick_and_full() {
+        assert_eq!(tenant_counts(true), vec![1, 8]);
+        assert_eq!(tenant_counts(false), vec![1, 8, 64]);
     }
 
     #[test]

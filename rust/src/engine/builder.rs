@@ -1,11 +1,11 @@
 //! [`EngineBuilder`]: the one way to assemble a run.
 
 use crate::config::presets::{self, DesignPoint};
-use crate::config::SystemConfig;
+use crate::config::{SystemConfig, TenantMixConfig};
 use crate::engine::sharded::{self, ShardPlan, ShardedSession};
 use crate::engine::{AnyController, EngineError, Session};
 use crate::metadata::SetLayout;
-use crate::sim::{ShardedSimulation, SimReport, Simulation};
+use crate::sim::{tenants, ShardedSimulation, SimReport, Simulation, TenantReport};
 use crate::workloads;
 
 /// Memory technology combination, mirroring the paper's Table 1.
@@ -90,6 +90,7 @@ pub struct EngineBuilder {
     tag_match: bool,
     shards: usize,
     pipeline: bool,
+    tenant_mix: Option<TenantMixConfig>,
     tweaks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
 }
 
@@ -107,6 +108,7 @@ impl EngineBuilder {
             tag_match: false,
             shards: 1,
             pipeline: false,
+            tenant_mix: None,
             tweaks: Vec::new(),
         }
     }
@@ -199,6 +201,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Run the **multi-tenant** front end ([`crate::sim::tenants`],
+    /// DESIGN.md §12) with the given knobs: `mix.enabled` is forced on,
+    /// everything else (tenant count, scenario, mix profile, histogram
+    /// geometry) is taken from `mix`. The workload is the composite
+    /// [`TenantMixWorkload`](crate::workloads::tenants::TenantMixWorkload)
+    /// — [`EngineBuilder::workload`] is ignored on the tenant path.
+    pub fn tenants(mut self, mix: TenantMixConfig) -> Self {
+        self.tenant_mix = Some(mix);
+        self
+    }
+
     /// Queue a raw config tweak, applied (in call order) after the preset
     /// is materialized — capacities, core counts, access budgets, remap
     /// cache geometry: anything the typed knobs don't cover.
@@ -224,6 +237,10 @@ impl EngineBuilder {
         }
         cfg.hybrid.verify |= self.verify;
         cfg.hybrid.decay.enabled |= self.decay;
+        if let Some(mix) = self.tenant_mix {
+            cfg.tenant_mix = mix;
+            cfg.tenant_mix.enabled = true;
+        }
         cfg.validate().map_err(EngineError::InvalidConfig)?;
         Ok(cfg)
     }
@@ -292,6 +309,29 @@ impl EngineBuilder {
         let wl = workloads::by_name(name, &cfg)?;
         let session = self.build_sharded()?;
         Ok(ShardedSimulation::new(&cfg, wl, session).pipelined(self.pipeline).run())
+    }
+
+    /// Build and run the multi-tenant front end over this builder's
+    /// configuration (requires [`EngineBuilder::tenants`] or a base
+    /// config with `tenant_mix.enabled`). Execution model follows the
+    /// builder's sharding knobs: `shards(0)` runs the **closed loop**
+    /// (real controller latencies — meaningful per-tenant p50/p99,
+    /// oracle-capable), any other shard count runs the **open-loop**
+    /// sharded path (optionally pipelined), whose per-tenant stats are
+    /// byte-identical across shard counts and front-end modes.
+    pub fn run_tenant_mix(&self) -> Result<TenantReport, EngineError> {
+        let cfg = self.build_config()?;
+        if !cfg.tenant_mix.enabled {
+            return Err(EngineError::InvalidConfig(
+                "tenant mix not enabled: call EngineBuilder::tenants(..)".to_string(),
+            ));
+        }
+        if self.shards == 0 {
+            Ok(tenants::run_closed(&cfg)?)
+        } else {
+            let session = self.build_sharded()?;
+            Ok(tenants::run_sharded(&cfg, session, self.pipeline)?)
+        }
     }
 
     /// Build the full trace-driven simulation (requires a workload).
@@ -432,6 +472,32 @@ mod tests {
         // Off by default.
         let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
         assert!(!cfg.hybrid.decay.enabled);
+    }
+
+    #[test]
+    fn tenant_mix_runs_on_both_execution_models() {
+        let mix = TenantMixConfig { tenants: 3, ..TenantMixConfig::off() };
+        let closed = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .tenants(mix)
+            .shards(0)
+            .run_tenant_mix()
+            .unwrap();
+        assert_eq!(closed.tenants.len(), 3);
+        assert!(closed.merged.stats.mem_accesses > 0);
+        let sharded = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .tenants(mix)
+            .shards(2)
+            .run_tenant_mix()
+            .unwrap();
+        assert_eq!(sharded.tenants.len(), 3);
+        // Without the toggle the tenant path is a typed error.
+        let err = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .run_tenant_mix()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)));
     }
 
     #[test]

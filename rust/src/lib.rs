@@ -33,7 +33,10 @@
 //! [`sim::ExecCore`] scheduling loop, parameterized over a
 //! [`sim::MissSink`]; the open loop's front end can additionally be
 //! pipelined (`EngineBuilder::pipeline(true)`) with byte-identical
-//! merged statistics.
+//! merged statistics. A multi-tenant front end ([`sim::tenants`],
+//! `EngineBuilder::tenants(..)` + `run_tenant_mix()`) interleaves N
+//! tenant sessions into one shared memory system with per-tenant stats
+//! and contention scenarios (DESIGN.md §12).
 //!
 //! The AOT-compiled JAX/Pallas trace generator is loaded through
 //! [`runtime`] (PJRT CPU client); Python never runs at simulation time.
@@ -78,7 +81,8 @@ pub mod prelude {
         ShardPlan, ShardedSession,
     };
     pub use crate::hybrid::{Access, Controller};
-    pub use crate::sim::{ShardedSimulation, SimReport, Simulation};
+    pub use crate::config::{MixProfile, TenantMixConfig, TenantScenario};
+    pub use crate::sim::{ShardedSimulation, SimReport, Simulation, TenantReport, TenantStats};
     pub use crate::stats::Stats;
     pub use crate::types::AccessKind;
     pub use crate::workloads::Workload;

@@ -11,10 +11,17 @@
 //!                                          --shards N with N>=1)
 //! trimma sweep --figure fig7a [--quick] [--threads N]
 //! trimma sweep --all [--quick]
+//! trimma tenants [--tenants N] [--scenario steady|noisy_neighbor|churn|
+//!                flash_crowd] [--mix serving|analytics|general]
+//!                [--shards N] [--pipeline]  multi-tenant serving run with
+//!                                           per-tenant stats (DESIGN.md §12)
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
-//!              [--pipeline] [--decay]      hot-path + sim-sweep perf
+//!              [--pipeline] [--decay] [--tenants]
+//!                                           hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
-//! trimma bench-check --report bench.json    validate a report's schema
+//! trimma bench-check --report bench.json [--require-labels L1,L2,...]
+//!                                           validate a report's schema and
+//!                                           required label coverage
 //! trimma bench-compare --baseline B --new N [--warn-pct 10] [--fail-pct 30]
 //!                                           CI regression gate
 //! trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -39,9 +46,16 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma sweep --figure fig7a [--quick] [--threads N]
   trimma sweep --all [--quick]
   trimma compare --designs trimma-c,alloy --workload gap_pr
+  trimma tenants [--design trimma-c] [--tenants N]
+                 [--scenario steady|noisy_neighbor|churn|flash_crowd]
+                 [--mix serving|analytics|general] [--phase-len P]
+                 [--accesses N] [--verify]
+                 [--shards N]   N>0: open-loop sharded run; 0 (default):
+                                closed loop with real miss latencies
+                 [--pipeline]   pipelined front end (needs --shards N, N>=1)
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
-               [--decay]
-  trimma bench-check --report bench.json
+               [--decay] [--tenants]
+  trimma bench-check --report bench.json [--require-labels L1,L2,...]
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
   trimma analyze --workload gap_pr          AOT hotness artifact via PJRT
@@ -62,6 +76,7 @@ fn main() {
         "run" => run(&get, &has),
         "compare" => compare(&get),
         "sweep" => sweep(&get, &has),
+        "tenants" => tenants(&get, &has),
         "bench" => bench(&get, &has),
         "bench-check" => bench_check(&get),
         "bench-compare" => bench_compare(&get),
@@ -200,6 +215,86 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     );
 }
 
+/// `trimma tenants`: a multi-tenant serving run (DESIGN.md §12). Default
+/// is the closed loop (`--shards 0`) with real per-access miss latencies
+/// behind the p50/p99 columns; `--shards N` (N>0) switches to the
+/// open-loop sharded path, whose constant nominal miss latency makes the
+/// percentiles degenerate (attribution counts stay exact and
+/// shard-invariant).
+fn tenants(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
+    use trimma::config::{MixProfile, TenantMixConfig, TenantScenario};
+    use trimma::engine::EngineBuilder;
+
+    let dp = design_of(&get("--design").unwrap_or_else(|| "trimma-c".into()));
+    let mut mix = TenantMixConfig::off();
+    if let Some(n) = get("--tenants") {
+        mix.tenants = n.parse().expect("--tenants");
+    }
+    if let Some(s) = get("--scenario") {
+        mix.scenario = TenantScenario::parse(&s).unwrap_or_else(|| {
+            eprintln!("unknown scenario '{s}' (steady | noisy_neighbor | churn | flash_crowd)");
+            std::process::exit(2);
+        });
+    }
+    if let Some(m) = get("--mix") {
+        mix.mix = MixProfile::parse(&m).unwrap_or_else(|| {
+            eprintln!("unknown mix '{m}' (serving | analytics | general)");
+            std::process::exit(2);
+        });
+    }
+    if let Some(p) = get("--phase-len") {
+        mix.phase_len = p.parse().expect("--phase-len");
+    }
+    let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(0);
+    if has("--pipeline") && shards == 0 {
+        eprintln!("--pipeline needs --shards N (N >= 1): the pipelined front end is part of the open-loop sharded path");
+        std::process::exit(2);
+    }
+    let accesses: Option<u64> = get("--accesses").map(|n| n.parse().expect("--accesses"));
+    let builder = EngineBuilder::new(dp)
+        .tenants(mix)
+        .shards(shards)
+        .pipeline(has("--pipeline"))
+        .verify(has("--verify"))
+        .configure(move |cfg| {
+            if let Some(n) = accesses {
+                cfg.workload.accesses_per_core = n;
+            }
+        });
+    let t0 = std::time::Instant::now();
+    let rep = builder.run_tenant_mix().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let dt = t0.elapsed();
+    println!("== {} ({}) ==", rep.merged.name, mix.scenario.label());
+    println!(
+        "{:<7} {:<16} {:>10} {:>8} {:>10} {:>8} {:>8} {:>10}",
+        "tenant", "workload", "accesses", "hit%", "llc_miss", "p50", "p99", "fast_pg%"
+    );
+    for t in &rep.tenants {
+        println!(
+            "{:<7} {:<16} {:>10} {:>7.1}% {:>10} {:>8} {:>8} {:>9.1}%",
+            t.tenant,
+            t.workload,
+            t.accesses,
+            t.hit_rate_milli() as f64 / 10.0,
+            t.llc_misses,
+            t.p50_miss_lat(),
+            t.p99_miss_lat(),
+            t.fast_share_milli() as f64 / 10.0,
+        );
+    }
+    if shards > 0 {
+        println!("(open-loop run: p50/p99 reflect the constant nominal miss latency)");
+    }
+    let s = &rep.merged.stats;
+    println!("merged performance (IPC proxy): {}", fmt(rep.merged.performance()));
+    println!("merged fast-mem serve rate:     {}", pct(s.fast_serve_rate()));
+    println!("merged mem accesses:            {}", s.mem_accesses);
+    println!("sim wall time: {:.2}s", dt.as_secs_f64());
+}
+
 /// `trimma bench`: run the hot-path + sim-sweep suite and (optionally)
 /// write the schema-versioned JSON report. See EXPERIMENTS.md §Perf.
 fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
@@ -208,7 +303,9 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(2);
     let pipeline = has("--pipeline");
     let decay = has("--decay");
-    let report = trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline, decay);
+    let tenants = has("--tenants");
+    let report =
+        trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline, decay, tenants);
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
         report.geomean_sim_msteps_per_s,
@@ -269,6 +366,9 @@ fn load_report(path: &str) -> trimma::bench_util::BenchReport {
 }
 
 /// `trimma bench-check`: parse + schema-validate a report (CI smoke job).
+/// `--require-labels L1,L2,...` additionally asserts that every listed
+/// label has a record — the single label-coverage gate that replaced CI's
+/// per-label grep steps; all missing labels are listed in one error.
 fn bench_check(get: &dyn Fn(&str) -> Option<String>) {
     let path = get("--report").unwrap_or_else(|| {
         eprintln!("need --report <bench.json>");
@@ -279,6 +379,14 @@ fn bench_check(get: &dyn Fn(&str) -> Option<String>) {
         eprintln!("{path}: schema violation: {e}");
         std::process::exit(2);
     });
+    if let Some(required) = get("--require-labels") {
+        let missing = trimma::bench_util::missing_labels(&report, &required);
+        if !missing.is_empty() {
+            eprintln!("{path}: missing required labels: {}", missing.join(", "));
+            std::process::exit(2);
+        }
+        println!("{path}: all required labels present");
+    }
     println!(
         "{path}: ok (schema v{}, {} records, geomean {:.3} M mem-steps/s)",
         report.schema_version,

@@ -115,6 +115,34 @@ pub trait MissSink {
     fn reset_stats(&mut self);
 }
 
+/// Observation hook on the unified core's access stream, orthogonal to
+/// the [`MissSink`]: the core calls [`AccessTap::record`] once per access
+/// (after cache filtering and the sink's demand charge) and
+/// [`AccessTap::reset`] at the end-of-warmup point. The default
+/// [`NoTap`] is a zero-sized no-op, so untapped runs compile to exactly
+/// the pre-tap loop. The multi-tenant front end
+/// ([`crate::sim::tenants`]) uses a tap to attribute each access to its
+/// owning tenant by address slab.
+pub trait AccessTap {
+    /// One completed access: the generated `acc`, whether it missed the
+    /// LLC, and the stall the sink charged for it (`0` on an LLC hit).
+    fn record(&mut self, acc: &MemAccess, llc_miss: bool, miss_lat: Cycle);
+
+    /// End-of-warmup reset, delivered at the same in-stream point as
+    /// [`MissSink::reset_stats`].
+    fn reset(&mut self);
+}
+
+/// The zero-cost default tap: observes nothing.
+pub struct NoTap;
+
+impl AccessTap for NoTap {
+    #[inline]
+    fn record(&mut self, _acc: &MemAccess, _llc_miss: bool, _miss_lat: Cycle) {}
+    #[inline]
+    fn reset(&mut self) {}
+}
+
 /// The closed-loop sink: every post-LLC access goes through a streaming
 /// [`Session`] and the controller's simulated demand latency feeds back
 /// into the issuing core's clock. This is the execution model of all
@@ -296,7 +324,12 @@ impl MissSink for PipelineSink {
 /// drains the hand-off ring into `feed` in arrival order. Merged stats
 /// are byte-identical to the inline [`OpenLoop`] run (see the module
 /// docs for why).
-pub(super) fn run_pipelined(core: &mut ExecCore, feed: &mut ShardFeeder, nominal_mem_lat: Cycle) {
+pub(super) fn run_pipelined<T: AccessTap>(
+    core: &mut ExecCore,
+    feed: &mut ShardFeeder,
+    nominal_mem_lat: Cycle,
+    tap: &mut T,
+) {
     let plan = *feed.plan();
     let (tx, mut rx) = spsc_channel::<PipeMsg>(PIPE_QUEUE_MSGS);
     std::thread::scope(|s| {
@@ -310,7 +343,7 @@ pub(super) fn run_pipelined(core: &mut ExecCore, feed: &mut ShardFeeder, nominal
         });
         let mut sink =
             PipelineSink { tx, plan, buf: Vec::with_capacity(PIPE_BATCH), nominal_mem_lat };
-        core.run(&mut sink);
+        core.run_tapped(&mut sink, tap);
         sink.flush();
         drop(sink); // disconnect: the router drains and exits
         router.join().expect("pipeline router thread panicked");
@@ -403,9 +436,9 @@ impl ExecCore {
 
     /// Advance one access on `core`: retire the gap instructions, filter
     /// through L1/L2/LLC, hand LLC misses and posted writebacks to the
-    /// sink, and charge the core the cache latency plus whatever stall
-    /// the sink returns.
-    fn step<S: MissSink>(&mut self, core: usize, sink: &mut S) {
+    /// sink, report the completed access to the tap, and charge the core
+    /// the cache latency plus whatever stall the sink returns.
+    fn step<S: MissSink, T: AccessTap>(&mut self, core: usize, sink: &mut S, tap: &mut T) {
         let acc = self.next_access(core);
         let gap_cycles = (acc.gap_instrs as f64 * NONMEM_CPI) as Cycle;
         self.clocks[core] += gap_cycles;
@@ -413,10 +446,13 @@ impl ExecCore {
 
         let hr = self.hierarchy.access(core, acc.addr, acc.kind);
         let mut lat = hr.latency;
+        let mut miss_lat = 0;
         if hr.llc_miss {
             let line = self.line_of(acc.addr);
-            lat += sink.demand(&mut self.mapper, acc.addr, line, acc.kind, now + hr.latency);
+            miss_lat = sink.demand(&mut self.mapper, acc.addr, line, acc.kind, now + hr.latency);
+            lat += miss_lat;
         }
+        tap.record(&acc, hr.llc_miss, miss_lat);
         // Posted writebacks: charge banks/stats, do not stall the core.
         let wbs = hr.writebacks();
         if !wbs.is_empty() {
@@ -437,12 +473,20 @@ impl ExecCore {
     /// local clock), so cross-core contention on shared banks is modelled
     /// in rough timestamp order.
     pub fn run<S: MissSink>(&mut self, sink: &mut S) {
+        self.run_tapped(sink, &mut NoTap);
+    }
+
+    /// [`ExecCore::run`] with an [`AccessTap`] observing every access.
+    /// `run` delegates here with the zero-sized [`NoTap`], so the untapped
+    /// loop monomorphizes to exactly the pre-tap code.
+    pub fn run_tapped<S: MissSink, T: AccessTap>(&mut self, sink: &mut S, tap: &mut T) {
         for _ in 0..self.warmup_per_core {
             for core in 0..self.cores as usize {
-                self.step(core, sink);
+                self.step(core, sink, tap);
             }
         }
         sink.reset_stats();
+        tap.reset();
         self.warm_clocks.copy_from_slice(&self.clocks);
         for i in self.instrs.iter_mut() {
             *i = 0;
@@ -459,12 +503,17 @@ impl ExecCore {
                     core = c;
                 }
             }
-            self.step(core, sink);
+            self.step(core, sink, tap);
             remaining[core] -= 1;
             if remaining[core] == 0 {
                 live -= 1;
             }
         }
+    }
+
+    /// The run's first-touch mapper (end-of-run occupancy introspection).
+    pub fn mapper(&self) -> &AddrMapper {
+        &self.mapper
     }
 
     /// Fill the CPU-side counters of an end-of-run report: instructions

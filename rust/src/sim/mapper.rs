@@ -121,6 +121,25 @@ impl AddrMapper {
     pub fn fast_pages_allocated(&self) -> u64 {
         self.next_fast_page
     }
+
+    /// Page granularity of this mapper, in bytes (4 kB or the block size,
+    /// whichever is larger).
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Visit every allocated OS page as `(page base address, landed in
+    /// the fast tier's flat area)` — end-of-run occupancy attribution for
+    /// the multi-tenant front end ([`crate::sim::tenants`]). Page-table
+    /// state only (front-end, stream-order first-touch), so the walk is
+    /// identical across shard counts and front-end modes.
+    pub fn for_each_allocated_page(&self, mut f: impl FnMut(u64, bool)) {
+        for (i, &frame) in self.pages.iter().enumerate() {
+            if frame != UNMAPPED {
+                f(i as u64 * self.page_bytes, frame & SLOW_BIT == 0);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +229,25 @@ mod tests {
             assert_eq!(plan.slice_of(set), slice);
             assert_eq!(slice * plan.sets_per_slice() + local, set);
         }
+    }
+
+    #[test]
+    fn allocated_page_walk_matches_allocation() {
+        let l = layout();
+        let mut m = AddrMapper::new(l, Mode::Flat);
+        for p in 0..10u64 {
+            m.translate(p * 4096);
+        }
+        let (mut total, mut fast) = (0u64, 0u64);
+        m.for_each_allocated_page(|addr, is_fast| {
+            assert_eq!(addr % 4096, 0);
+            total += 1;
+            if is_fast {
+                fast += 1;
+            }
+        });
+        assert_eq!(total, 10);
+        assert_eq!(fast, m.fast_pages_allocated().min(10));
     }
 
     #[test]

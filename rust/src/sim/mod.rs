@@ -38,8 +38,10 @@
 
 pub mod core;
 pub mod mapper;
+pub mod tenants;
 
-pub use self::core::{ClosedLoop, ExecCore, MissSink, OpenLoop};
+pub use self::core::{AccessTap, ClosedLoop, ExecCore, MissSink, NoTap, OpenLoop};
+pub use self::tenants::{LatencyHist, TenantReport, TenantStats};
 
 use crate::config::SystemConfig;
 use crate::engine::sharded::ShardedSession;
@@ -182,7 +184,7 @@ impl ShardedSimulation {
         let pipeline = self.pipeline;
         self.session.run_stream(|feed| {
             if pipeline {
-                self::core::run_pipelined(core, feed, nominal);
+                self::core::run_pipelined(core, feed, nominal, &mut NoTap);
             } else {
                 core.run(&mut OpenLoop::new(feed, nominal));
             }

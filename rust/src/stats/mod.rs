@@ -114,25 +114,96 @@ pub struct Stats {
     pub cache_accesses: u64,
 }
 
+/// The **single source of truth** for the canonical stat vector: invokes
+/// the given callback macro with every [`Stats`] field as a
+/// `(name, class)` pair, in canonical order. `class` is a literal token
+/// selecting the merge semantics:
+///
+/// * `sum` — event counter, added on every merge;
+/// * `gauge` — end-of-run storage sample (`metadata_bytes_used`,
+///   `metadata_bytes_reserved`, `donated_slots`): later sample wins in
+///   [`Stats::merge`], partial sums are **added** across the disjoint set
+///   ranges of [`Stats::merge_shard`];
+/// * `max` — the wall clock (`max_core_cycles`), maxed everywhere.
+///
+/// [`Stats::merge`], [`Stats::merge_shard`], [`Stats::canonical`], and
+/// [`NUM_STAT_COUNTERS`] are all generated from this one list — and
+/// `canonical` destructures `Stats` exhaustively, so adding a field to
+/// the struct without adding it here is a compile error, not a counter
+/// silently dropped from merge (the PR 6 hazard: three hand-maintained
+/// copies of the list).
+macro_rules! with_stat_counters {
+    ($cb:ident) => {
+        $cb! {
+            (mem_accesses, sum),
+            (mem_reads, sum),
+            (mem_writes, sum),
+            (fast_served, sum),
+            (slow_served, sum),
+            (metadata_cycles, sum),
+            (fast_data_cycles, sum),
+            (slow_data_cycles, sum),
+            (rc_probes, sum),
+            (rc_hits_nonid, sum),
+            (rc_hits_id, sum),
+            (rc_sector_bit_miss, sum),
+            (table_walks, sum),
+            (table_walk_mem_accesses, sum),
+            (lookups_identity, sum),
+            (lookups_nonidentity, sum),
+            (useful_bytes, sum),
+            (fast_traffic_bytes, sum),
+            (slow_traffic_bytes, sum),
+            (migration_bytes, sum),
+            (writeback_bytes, sum),
+            (metadata_traffic_bytes, sum),
+            (fills, sum),
+            (evictions, sum),
+            (metadata_priority_evictions, sum),
+            (saved_slot_fills, sum),
+            (subblock_fetches, sum),
+            (dealloc_recycled, sum),
+            (decay_epochs, sum),
+            (decay_checked, sum),
+            (decay_reclaims, sum),
+            (metadata_bytes_used, gauge),
+            (metadata_bytes_reserved, gauge),
+            (donated_slots, gauge),
+            (instructions, sum),
+            (max_core_cycles, max),
+            (total_core_cycles, sum),
+            (l1_hits, sum),
+            (l2_hits, sum),
+            (llc_hits, sum),
+            (cache_accesses, sum),
+        }
+    };
+}
+
+macro_rules! count_stat_counters {
+    ($(($f:ident, $class:ident)),* $(,)?) => { [$(stringify!($f)),*].len() };
+}
+
+/// Number of counters in the canonical stat vector ([`Stats::canonical`]
+/// emits exactly this many `name=value` pairs; generated from the same
+/// list that drives the merges).
+pub const NUM_STAT_COUNTERS: usize = with_stat_counters!(count_stat_counters);
+
 impl Stats {
     pub fn merge(&mut self, o: &Stats) {
-        macro_rules! add {
-            ($($f:ident),* $(,)?) => { $( self.$f += o.$f; )* };
+        // `sum` adds, `max` maxes, `gauge` is handled below: two samples
+        // of the same run, the later storage snapshot wins.
+        macro_rules! merge_field {
+            ($s:expr, $o:expr, $f:ident, sum) => { $s.$f += $o.$f; };
+            ($s:expr, $o:expr, $f:ident, max) => { $s.$f = $s.$f.max($o.$f); };
+            ($s:expr, $o:expr, $f:ident, gauge) => {};
         }
-        add!(
-            mem_accesses, mem_reads, mem_writes, fast_served, slow_served,
-            metadata_cycles, fast_data_cycles, slow_data_cycles,
-            rc_probes, rc_hits_nonid, rc_hits_id, rc_sector_bit_miss,
-            table_walks, table_walk_mem_accesses, lookups_identity,
-            lookups_nonidentity, useful_bytes, fast_traffic_bytes,
-            slow_traffic_bytes, migration_bytes, writeback_bytes,
-            metadata_traffic_bytes, fills, evictions,
-            metadata_priority_evictions, saved_slot_fills, subblock_fetches,
-            dealloc_recycled, decay_epochs, decay_checked, decay_reclaims,
-            instructions,
-            total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
-        );
-        self.max_core_cycles = self.max_core_cycles.max(o.max_core_cycles);
+        macro_rules! apply {
+            ($(($f:ident, $class:ident)),* $(,)?) => {
+                $( merge_field!(self, o, $f, $class); )*
+            };
+        }
+        with_stat_counters!(apply);
         // storage gauges: take the other's (later) sample if set
         if o.metadata_bytes_used > 0 || o.metadata_bytes_reserved > 0 {
             self.metadata_bytes_used = o.metadata_bytes_used;
@@ -150,24 +221,17 @@ impl Stats {
     /// like the event counters. `max_core_cycles` still maxes: shards
     /// share the front end's wall clock.
     pub fn merge_shard(&mut self, o: &Stats) {
-        macro_rules! add {
-            ($($f:ident),* $(,)?) => { $( self.$f += o.$f; )* };
+        macro_rules! merge_field {
+            ($s:expr, $o:expr, $f:ident, sum) => { $s.$f += $o.$f; };
+            ($s:expr, $o:expr, $f:ident, gauge) => { $s.$f += $o.$f; };
+            ($s:expr, $o:expr, $f:ident, max) => { $s.$f = $s.$f.max($o.$f); };
         }
-        add!(
-            mem_accesses, mem_reads, mem_writes, fast_served, slow_served,
-            metadata_cycles, fast_data_cycles, slow_data_cycles,
-            rc_probes, rc_hits_nonid, rc_hits_id, rc_sector_bit_miss,
-            table_walks, table_walk_mem_accesses, lookups_identity,
-            lookups_nonidentity, useful_bytes, fast_traffic_bytes,
-            slow_traffic_bytes, migration_bytes, writeback_bytes,
-            metadata_traffic_bytes, fills, evictions,
-            metadata_priority_evictions, saved_slot_fills, subblock_fetches,
-            dealloc_recycled, decay_epochs, decay_checked, decay_reclaims,
-            metadata_bytes_used, metadata_bytes_reserved,
-            donated_slots, instructions,
-            total_core_cycles, l1_hits, l2_hits, llc_hits, cache_accesses,
-        );
-        self.max_core_cycles = self.max_core_cycles.max(o.max_core_cycles);
+        macro_rules! apply {
+            ($(($f:ident, $class:ident)),* $(,)?) => {
+                $( merge_field!(self, o, $f, $class); )*
+            };
+        }
+        with_stat_counters!(apply);
     }
 
     // ---- derived metrics ----
@@ -230,59 +294,27 @@ impl Stats {
     /// harness (rust/tests/golden.rs) and the determinism matrix compare
     /// exactly this.
     pub fn canonical(&self) -> String {
-        let pairs: [(&str, u64); 41] = [
-            ("mem_accesses", self.mem_accesses),
-            ("mem_reads", self.mem_reads),
-            ("mem_writes", self.mem_writes),
-            ("fast_served", self.fast_served),
-            ("slow_served", self.slow_served),
-            ("metadata_cycles", self.metadata_cycles),
-            ("fast_data_cycles", self.fast_data_cycles),
-            ("slow_data_cycles", self.slow_data_cycles),
-            ("rc_probes", self.rc_probes),
-            ("rc_hits_nonid", self.rc_hits_nonid),
-            ("rc_hits_id", self.rc_hits_id),
-            ("rc_sector_bit_miss", self.rc_sector_bit_miss),
-            ("table_walks", self.table_walks),
-            ("table_walk_mem_accesses", self.table_walk_mem_accesses),
-            ("lookups_identity", self.lookups_identity),
-            ("lookups_nonidentity", self.lookups_nonidentity),
-            ("useful_bytes", self.useful_bytes),
-            ("fast_traffic_bytes", self.fast_traffic_bytes),
-            ("slow_traffic_bytes", self.slow_traffic_bytes),
-            ("migration_bytes", self.migration_bytes),
-            ("writeback_bytes", self.writeback_bytes),
-            ("metadata_traffic_bytes", self.metadata_traffic_bytes),
-            ("fills", self.fills),
-            ("evictions", self.evictions),
-            ("metadata_priority_evictions", self.metadata_priority_evictions),
-            ("saved_slot_fills", self.saved_slot_fills),
-            ("subblock_fetches", self.subblock_fetches),
-            ("dealloc_recycled", self.dealloc_recycled),
-            ("decay_epochs", self.decay_epochs),
-            ("decay_checked", self.decay_checked),
-            ("decay_reclaims", self.decay_reclaims),
-            ("metadata_bytes_used", self.metadata_bytes_used),
-            ("metadata_bytes_reserved", self.metadata_bytes_reserved),
-            ("donated_slots", self.donated_slots),
-            ("instructions", self.instructions),
-            ("max_core_cycles", self.max_core_cycles),
-            ("total_core_cycles", self.total_core_cycles),
-            ("l1_hits", self.l1_hits),
-            ("l2_hits", self.l2_hits),
-            ("llc_hits", self.llc_hits),
-            ("cache_accesses", self.cache_accesses),
-        ];
-        let mut out = String::with_capacity(pairs.len() * 24);
-        for (i, (k, v)) in pairs.iter().enumerate() {
-            if i > 0 {
-                out.push(';');
-            }
-            out.push_str(k);
-            out.push('=');
-            out.push_str(&v.to_string());
+        macro_rules! emit {
+            ($(($f:ident, $class:ident)),* $(,)?) => {{
+                // Exhaustive destructuring: a `Stats` field missing from
+                // `with_stat_counters!` fails to compile here instead of
+                // silently vanishing from merge and the golden snapshots.
+                let Stats { $($f),* } = self;
+                let pairs: [(&str, &u64); NUM_STAT_COUNTERS] =
+                    [$((stringify!($f), $f)),*];
+                let mut out = String::with_capacity(pairs.len() * 24);
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(';');
+                    }
+                    out.push_str(k);
+                    out.push('=');
+                    out.push_str(&v.to_string());
+                }
+                out
+            }};
         }
-        out
+        with_stat_counters!(emit)
     }
 }
 
@@ -312,6 +344,17 @@ mod tests {
         let c = s.canonical();
         assert_eq!(c.matches('=').count(), 41);
         assert!(c.ends_with("cache_accesses=7"), "{c}");
+    }
+
+    #[test]
+    fn counter_list_is_the_single_source_of_truth() {
+        // canonical(), merge(), and merge_shard() are all generated from
+        // `with_stat_counters!`; the pair count must track it exactly, so
+        // a counter can never be in the struct but absent from a merge.
+        let c = Stats::default().canonical();
+        assert_eq!(c.matches('=').count(), NUM_STAT_COUNTERS);
+        assert_eq!(c.split(';').count(), NUM_STAT_COUNTERS);
+        assert_eq!(NUM_STAT_COUNTERS, 41);
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod adversarial;
 pub mod pjrt;
 pub mod suite;
 pub mod synth;
+pub mod tenants;
 
 use crate::types::MemAccess;
 

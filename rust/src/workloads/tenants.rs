@@ -1,0 +1,350 @@
+//! The multi-tenant composite workload: N independent tenant sessions
+//! interleaved into one access stream (DESIGN.md §12).
+//!
+//! Each tenant owns a private **address slab** — a contiguous,
+//! page-aligned carve-out of the OS-visible space — and an independent
+//! per-tenant workload drawn from a named mix distribution
+//! ([`crate::config::MixProfile`]) with its own derived RNG seed. The
+//! interleave schedule is a pure function of `(core, step, seed)`:
+//! scenario weights are piecewise-constant over *phases*
+//! (`phase = step / phase_len`), and each step hashes into the phase's
+//! cumulative weight vector to pick the issuing tenant. Because both the
+//! schedule and every per-tenant generator are counter-based, the
+//! composite stream keeps the [`Workload`] per-core-purity contract and
+//! inherits all of the execution core's sharding/pipelining determinism.
+
+use super::synth::lowbias32;
+use super::{by_name, UnknownWorkload, Workload};
+use crate::config::{MixProfile, SystemConfig, TenantMixConfig, TenantScenario};
+use crate::types::MemAccess;
+
+/// Latency-sensitive serving mix.
+const SERVING: &[&str] = &["ycsb_a", "ycsb_b", "silo_tpcc", "520.omnetpp_r"];
+/// Scan/graph-heavy analytics mix.
+const ANALYTICS: &[&str] = &["gap_pr", "gap_bfs", "gap_cc", "554.roms_r"];
+/// Broad blend of both.
+const GENERAL: &[&str] = &[
+    "ycsb_a",
+    "ycsb_b",
+    "silo_tpcc",
+    "gap_pr",
+    "gap_bfs",
+    "505.mcf_r",
+    "520.omnetpp_r",
+    "554.roms_r",
+];
+
+/// The workload-name table a mix profile draws from.
+pub fn mix_table(mix: MixProfile) -> &'static [&'static str] {
+    match mix {
+        MixProfile::Serving => SERVING,
+        MixProfile::Analytics => ANALYTICS,
+        MixProfile::General => GENERAL,
+    }
+}
+
+/// Per-tenant address slab size: the OS-visible capacity divided evenly
+/// across tenants, rounded down to a 4 kB page multiple (so page-level
+/// occupancy attribution is exact), at least one page.
+pub fn slab_bytes(os_capacity: u64, tenants: u32) -> u64 {
+    ((os_capacity / tenants.max(1) as u64) / 4096 * 4096).max(4096)
+}
+
+/// Owning tenant of an address under the slab carve-out (the inverse of
+/// the composite stream's address fold; addresses past the last slab
+/// belong to the last tenant).
+#[inline]
+pub fn tenant_of(addr: u64, slab: u64, tenants: u32) -> u32 {
+    ((addr / slab) as u32).min(tenants.saturating_sub(1))
+}
+
+/// The workload name tenant `tenant` draws under `mix` (a pure hash of
+/// the seed and tenant id). The noisy-neighbor scenario pins tenant 0 to
+/// the `adv_set_thrash` adversary instead.
+pub fn tenant_workload_name(
+    mix: MixProfile,
+    scenario: TenantScenario,
+    seed: u32,
+    tenant: u32,
+) -> &'static str {
+    if scenario == TenantScenario::NoisyNeighbor && tenant == 0 {
+        return "adv_set_thrash";
+    }
+    let table = mix_table(mix);
+    table[lowbias32(seed ^ lowbias32(tenant.wrapping_add(0x5EED))) as usize % table.len()]
+}
+
+/// Schedule weight of `tenant` during `phase` — pure in all arguments,
+/// so churn and flash-crowd activity patterns replay identically every
+/// run and on every shard count.
+pub fn tenant_weight(
+    scenario: TenantScenario,
+    tenants: u32,
+    tenant: u32,
+    phase: u64,
+    seed: u32,
+) -> u32 {
+    let ph = lowbias32((phase as u32) ^ ((phase >> 32) as u32).wrapping_add(seed));
+    match scenario {
+        TenantScenario::Steady => 1,
+        // Tenant 0 gets as much weight as all victims combined (~50%).
+        TenantScenario::NoisyNeighbor => {
+            if tenant == 0 {
+                (tenants - 1).max(1)
+            } else {
+                1
+            }
+        }
+        // Tenant 0 is the always-active anchor; every other tenant is
+        // present in ~3/4 of the phases (arrives/departs at boundaries).
+        TenantScenario::Churn => {
+            if tenant == 0 || lowbias32(ph ^ lowbias32(tenant)) % 4 < 3 {
+                1
+            } else {
+                0
+            }
+        }
+        // The crowd tenant spikes to 8x everyone else combined during a
+        // periodic 2-of-8-phase window.
+        TenantScenario::FlashCrowd => {
+            if tenant == tenants - 1 && (3..5).contains(&(phase % 8)) {
+                8 * (tenants - 1).max(1)
+            } else {
+                1
+            }
+        }
+    }
+}
+
+/// One core's cached schedule state: its composite step counter plus the
+/// cumulative weight vector of the phase it is currently in (recomputed
+/// purely whenever the core crosses a phase boundary).
+struct CoreSched {
+    step: u64,
+    phase: u64,
+    cum: Vec<u32>,
+    total: u32,
+}
+
+/// The composite multi-tenant workload (see the module docs).
+///
+/// Each drawn access comes from the scheduled tenant's own generator and
+/// is folded into that tenant's slab
+/// (`addr = tenant * slab + inner % slab`), so tenants never alias each
+/// other's pages and any observer can attribute an address back to its
+/// tenant with [`tenant_of`].
+pub struct TenantMixWorkload {
+    tenants: Vec<Box<dyn Workload>>,
+    names: Vec<String>,
+    label: String,
+    slab: u64,
+    scenario: TenantScenario,
+    phase_len: u64,
+    num_tenants: u32,
+    seed: u32,
+    sched: Vec<CoreSched>,
+}
+
+impl TenantMixWorkload {
+    /// Build the composite for `cfg.tenant_mix` (which must be enabled
+    /// and validated). Tenant `t`'s generator gets an independent seed
+    /// derived from the base seed and `t`.
+    pub fn new(cfg: &SystemConfig) -> Result<TenantMixWorkload, UnknownWorkload> {
+        let t = cfg.tenant_mix;
+        let os_cap = super::suite::os_capacity(cfg);
+        let slab = slab_bytes(os_cap, t.tenants);
+        let seed = cfg.workload.seed as u32;
+        let mut tenants = Vec::with_capacity(t.tenants as usize);
+        let mut names = Vec::with_capacity(t.tenants as usize);
+        for i in 0..t.tenants {
+            let name = tenant_workload_name(t.mix, t.scenario, seed, i);
+            let mut sub = cfg.clone();
+            sub.workload.seed =
+                cfg.workload.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            tenants.push(by_name(name, &sub)?);
+            names.push(name.to_string());
+        }
+        let sched = (0..cfg.workload.cores)
+            .map(|_| CoreSched { step: 0, phase: u64::MAX, cum: vec![0; t.tenants as usize], total: 0 })
+            .collect();
+        Ok(TenantMixWorkload {
+            tenants,
+            names,
+            label: format!("tenants/{}x{}/{}", t.tenants, t.mix.label(), t.scenario.label()),
+            slab,
+            scenario: t.scenario,
+            phase_len: t.phase_len as u64,
+            num_tenants: t.tenants,
+            seed,
+            sched,
+        })
+    }
+
+    /// Per-tenant workload names, indexed by tenant id.
+    pub fn tenant_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The per-tenant address slab size, bytes.
+    pub fn slab(&self) -> u64 {
+        self.slab
+    }
+
+    /// The tenant `core`'s next access will be drawn from — pure in
+    /// `(core, step)`, shared with [`Workload::next`].
+    fn pick(&mut self, core: usize, step: u64) -> u32 {
+        let phase = step / self.phase_len;
+        let (scenario, n, seed) = (self.scenario, self.num_tenants, self.seed);
+        let s = &mut self.sched[core];
+        if s.phase != phase {
+            let mut total = 0u32;
+            for t in 0..n {
+                total += tenant_weight(scenario, n, t, phase, seed);
+                s.cum[t as usize] = total;
+            }
+            s.phase = phase;
+            s.total = total;
+        }
+        let h = lowbias32(
+            (step as u32) ^ lowbias32((core as u32).wrapping_add(seed)) ^ ((step >> 32) as u32),
+        );
+        let r = h % s.total;
+        let mut t = 0u32;
+        while s.cum[t as usize] <= r {
+            t += 1;
+        }
+        t
+    }
+}
+
+impl Workload for TenantMixWorkload {
+    fn next(&mut self, core: usize) -> MemAccess {
+        let step = self.sched[core].step;
+        self.sched[core].step += 1;
+        let t = self.pick(core, step);
+        let mut acc = self.tenants[t as usize].next(core);
+        acc.addr = t as u64 * self.slab + acc.addr % self.slab;
+        acc
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.slab * self.num_tenants as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+
+    fn cfg(tenants: u32, scenario: TenantScenario) -> SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.workload.cores = 3;
+        cfg = presets::with_tenants(cfg, tenants, scenario);
+        cfg.tenant_mix.phase_len = 64;
+        cfg
+    }
+
+    #[test]
+    fn composite_stays_in_slabs_and_attributes_back() {
+        let cfg = cfg(4, TenantScenario::Steady);
+        let mut wl = TenantMixWorkload::new(&cfg).unwrap();
+        let slab = wl.slab();
+        assert_eq!(slab % 4096, 0);
+        assert!(wl.footprint_bytes() <= crate::workloads::suite::os_capacity(&cfg));
+        for core in 0..3 {
+            for _ in 0..1000 {
+                let a = wl.next(core);
+                assert!(a.addr < wl.footprint_bytes());
+                let t = tenant_of(a.addr, slab, 4);
+                assert!(t < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn composite_is_per_core_pure_and_deterministic() {
+        let cfg = cfg(8, TenantScenario::Churn);
+        let mut a = TenantMixWorkload::new(&cfg).unwrap();
+        let mut b = TenantMixWorkload::new(&cfg).unwrap();
+        // Different core interleavings must replay identical per-core
+        // streams (batched generation relies on this).
+        let mut got_a = vec![Vec::new(); 3];
+        let mut got_b = vec![Vec::new(); 3];
+        for _ in 0..500 {
+            for core in [0usize, 1, 2] {
+                got_a[core].push(a.next(core));
+            }
+        }
+        for _ in 0..500 {
+            for core in [2usize, 0, 1] {
+                got_b[core].push(b.next(core));
+            }
+        }
+        assert_eq!(got_a, got_b);
+    }
+
+    #[test]
+    fn noisy_neighbor_pins_the_adversary_with_half_the_schedule() {
+        let cfg = cfg(8, TenantScenario::NoisyNeighbor);
+        let mut wl = TenantMixWorkload::new(&cfg).unwrap();
+        assert_eq!(wl.tenant_names()[0], "adv_set_thrash");
+        let slab = wl.slab();
+        let mut hits = 0u64;
+        let n = 20_000u64;
+        for _ in 0..n {
+            if tenant_of(wl.next(0).addr, slab, 8) == 0 {
+                hits += 1;
+            }
+        }
+        let share = hits as f64 / n as f64;
+        assert!((0.40..0.60).contains(&share), "noisy share = {share}");
+    }
+
+    #[test]
+    fn churn_idles_tenants_but_never_the_anchor() {
+        let seed = 0xD1CE;
+        let mut saw_idle = false;
+        for phase in 0..64u64 {
+            let mut active = 0;
+            for t in 0..8 {
+                let w = tenant_weight(TenantScenario::Churn, 8, t, phase, seed);
+                if t == 0 {
+                    assert_eq!(w, 1, "anchor must always be active");
+                }
+                if w == 0 {
+                    saw_idle = true;
+                } else {
+                    active += 1;
+                }
+            }
+            assert!(active >= 1);
+        }
+        assert!(saw_idle, "churn never idled any tenant across 64 phases");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_periodically() {
+        let seed = 7;
+        let w_quiet = tenant_weight(TenantScenario::FlashCrowd, 8, 7, 0, seed);
+        let w_spike = tenant_weight(TenantScenario::FlashCrowd, 8, 7, 3, seed);
+        assert_eq!(w_quiet, 1);
+        assert_eq!(w_spike, 8 * 7);
+        // Non-crowd tenants never spike.
+        assert_eq!(tenant_weight(TenantScenario::FlashCrowd, 8, 2, 3, seed), 1);
+    }
+
+    #[test]
+    fn mix_tables_only_name_buildable_workloads() {
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        for mix in MixProfile::ALL {
+            for name in mix_table(*mix) {
+                by_name(name, &cfg).unwrap_or_else(|e| panic!("{}: {e}", mix.label()));
+            }
+        }
+    }
+}

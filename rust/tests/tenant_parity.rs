@@ -1,0 +1,135 @@
+//! Multi-tenant parity: the TenantMix front end (DESIGN.md §12) inherits
+//! the sharded path's headline invariant — the merged canonical stat
+//! vector AND every per-tenant stat row of an N-shard run are
+//! **byte-identical** to the 1-shard run, pipelined or inline, for every
+//! contention scenario. Per-tenant attribution is a pure function of the
+//! composite address stream, so it must never see the shard topology.
+//!
+//! Also locked here: run-to-run determinism under tenant churn (sessions
+//! arriving/departing mid-run must not introduce any hidden state), and a
+//! verify-oracle-green noisy-neighbor run on the closed loop (the
+//! adversarial tenant's migration churn preserves every remap invariant).
+
+mod common;
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::{MixProfile, SystemConfig, TenantMixConfig, TenantScenario};
+use trimma::engine::EngineBuilder;
+use trimma::sim::TenantReport;
+
+/// Tiny tenant-mix config on the common tiny geometry: `tenants` tenants
+/// under `scenario`, short phases so churn/flash-crowd phases actually
+/// turn over within the run.
+fn tiny(dp: DesignPoint, tenants: u32, scenario: TenantScenario) -> SystemConfig {
+    let mut cfg = common::tiny(dp);
+    cfg.tenant_mix = TenantMixConfig {
+        enabled: true,
+        tenants,
+        scenario,
+        mix: MixProfile::General,
+        phase_len: 256,
+        ..TenantMixConfig::off()
+    };
+    cfg
+}
+
+fn run_mix(cfg: &SystemConfig, shards: usize, pipeline: bool) -> TenantReport {
+    EngineBuilder::from_config(cfg.clone())
+        .shards(shards)
+        .pipeline(pipeline)
+        .run_tenant_mix()
+        .unwrap_or_else(|e| panic!("{} x{shards} pipeline={pipeline}: {e}", cfg.name))
+}
+
+/// Shard counts {1, 2, 4} and pipelined vs inline, for every contention
+/// scenario: merged and per-tenant canonical stats must be byte-identical
+/// to the 1-shard inline run.
+#[test]
+fn shard_count_and_pipelining_never_change_tenant_stats() {
+    for scenario in TenantScenario::ALL {
+        let cfg = tiny(DesignPoint::TrimmaCache, 4, *scenario);
+        let base = run_mix(&cfg, 1, false);
+        assert!(
+            base.merged.stats.mem_accesses > 0,
+            "{}: nothing reached memory",
+            scenario.label()
+        );
+        assert_eq!(base.tenants.len(), 4, "{}", scenario.label());
+        let base_merged = base.merged.stats.canonical();
+        let base_tenants = base.canonical_tenants();
+        for shards in [1usize, 2, 4] {
+            for pipeline in [false, true] {
+                let got = run_mix(&cfg, shards, pipeline);
+                assert_eq!(
+                    got.merged.stats.canonical(),
+                    base_merged,
+                    "{}: merged stats diverged at {shards} shards (pipeline={pipeline})",
+                    scenario.label()
+                );
+                assert_eq!(
+                    got.canonical_tenants(),
+                    base_tenants,
+                    "{}: per-tenant stats diverged at {shards} shards (pipeline={pipeline})",
+                    scenario.label()
+                );
+            }
+        }
+    }
+}
+
+/// Tenant churn (sessions arriving/departing at phase boundaries) is
+/// deterministic run-to-run on both execution models, and the anchor
+/// tenant (0) never goes idle.
+#[test]
+fn churn_is_deterministic_and_keeps_the_anchor_busy() {
+    let cfg = tiny(DesignPoint::TrimmaCache, 6, TenantScenario::Churn);
+    for shards in [0usize, 2] {
+        let a = run_mix(&cfg, shards, false);
+        let b = run_mix(&cfg, shards, false);
+        assert_eq!(a.merged.stats.canonical(), b.merged.stats.canonical(), "x{shards}");
+        assert_eq!(a.canonical_tenants(), b.canonical_tenants(), "x{shards}");
+        assert!(a.tenants[0].accesses > 0, "x{shards}: anchor tenant idled");
+    }
+}
+
+/// Every measured access lands in exactly one tenant's row: the per-tenant
+/// access counts sum to the merged demand access count, on the closed loop
+/// and on every shard count of the open loop.
+#[test]
+fn attribution_is_exhaustive_across_execution_models() {
+    let cfg = tiny(DesignPoint::TrimmaFlat, 3, TenantScenario::FlashCrowd);
+    for shards in [0usize, 1, 4] {
+        let rep = run_mix(&cfg, shards, false);
+        let attributed: u64 = rep.tenants.iter().map(|t| t.accesses).sum();
+        let expected =
+            cfg.workload.cores as u64 * cfg.workload.accesses_per_core;
+        assert_eq!(attributed, expected, "x{shards}");
+        let rw: u64 = rep.tenants.iter().map(|t| t.reads + t.writes).sum();
+        assert_eq!(rw, attributed, "x{shards}: reads+writes must partition accesses");
+    }
+}
+
+/// The noisy-neighbor scenario under the differential remap oracle
+/// (`cfg.hybrid.verify`) on the closed loop: the adversarial tenant's
+/// set-thrash traffic exercises eviction and migration against every
+/// other tenant, and the oracle checks each translation, placement, and
+/// identity classification against ground truth. A green run proves
+/// multi-tenant interleaving preserves every remap invariant.
+#[test]
+fn noisy_neighbor_passes_the_differential_oracle() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let cfg = presets::with_verify(tiny(dp, 4, TenantScenario::NoisyNeighbor));
+        let rep = run_mix(&cfg, 0, false);
+        assert!(rep.merged.stats.mem_accesses > 0, "{dp:?}");
+        // The pinned adversary must actually dominate the schedule.
+        let noisy = &rep.tenants[0];
+        assert_eq!(noisy.workload, "adv_set_thrash", "{dp:?}");
+        let rest: u64 = rep.tenants[1..].iter().map(|t| t.accesses).sum();
+        assert!(
+            noisy.accesses > rest / 2,
+            "{dp:?}: noisy neighbor got {} accesses vs {} for the rest",
+            noisy.accesses,
+            rest
+        );
+    }
+}
