@@ -300,6 +300,82 @@ impl Default for TenantMixConfig {
     }
 }
 
+/// How [`TraceWorkload`](crate::trace::TraceWorkload) turns trace chunks
+/// back into an access stream (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceReplayMode {
+    /// Inline chunked reads on the simulation thread — the portable
+    /// default: one file handle, seek + read + decode on demand.
+    Buffered,
+    /// Chunk I/O + decode move to a dedicated read-ahead thread behind
+    /// per-core SPSC rings with a recycled buffer pool, overlapping disk
+    /// latency with simulation.
+    ReadAhead,
+}
+
+impl TraceReplayMode {
+    /// Stable CLI/bench label (`buffered` / `readahead`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceReplayMode::Buffered => "buffered",
+            TraceReplayMode::ReadAhead => "readahead",
+        }
+    }
+
+    /// Parse a CLI name produced by [`TraceReplayMode::label`].
+    pub fn parse(s: &str) -> Option<TraceReplayMode> {
+        match s {
+            "buffered" => Some(TraceReplayMode::Buffered),
+            "readahead" => Some(TraceReplayMode::ReadAhead),
+            _ => None,
+        }
+    }
+}
+
+/// Trace record/replay knobs (the `trace` subsystem, DESIGN.md §13).
+/// The trace file *path* is not configuration — it flows through
+/// [`EngineBuilder::trace`](crate::engine::EngineBuilder::trace) and the
+/// `trimma record`/`replay` CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Master switch; set by the engine when a trace path is attached.
+    pub enabled: bool,
+    /// Records per chunk — the unit of encoding, CRC, and buffered I/O.
+    pub chunk_records: u32,
+    /// Write chunks delta/varint-encoded (roughly 3-5x smaller than the
+    /// fixed 12-byte records on real streams); `false` writes raw.
+    pub delta: bool,
+    /// Replay I/O strategy (see [`TraceReplayMode`]).
+    pub replay: TraceReplayMode,
+    /// Chunks of read-ahead per core ring (>= 1; 2 = double-buffered).
+    pub read_ahead_chunks: u32,
+    /// Walk every chunk's CRC when opening a trace for replay, so
+    /// corruption surfaces as a typed error before the run starts.
+    pub validate_on_open: bool,
+}
+
+impl TraceConfig {
+    /// Tracing disabled, with sane knob defaults so attaching a path
+    /// alone yields a usable policy: 4096-record delta chunks, buffered
+    /// replay, double-buffered read-ahead, validate on open.
+    pub const fn off() -> Self {
+        TraceConfig {
+            enabled: false,
+            chunk_records: 4096,
+            delta: true,
+            replay: TraceReplayMode::Buffered,
+            read_ahead_chunks: 2,
+            validate_on_open: true,
+        }
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig::off()
+    }
+}
+
 /// Configuration of the hybrid memory system (both tiers + metadata design).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HybridConfig {
@@ -384,6 +460,8 @@ pub struct SystemConfig {
     pub workload: WorkloadConfig,
     /// Multi-tenant serving knobs (see [`TenantMixConfig`]; off by default).
     pub tenant_mix: TenantMixConfig,
+    /// Trace record/replay knobs (see [`TraceConfig`]; off by default).
+    pub trace: TraceConfig,
 }
 
 impl SystemConfig {
@@ -452,6 +530,15 @@ impl SystemConfig {
             }
             if t.hist_buckets == 0 {
                 return Err("tenant_mix.hist_buckets must be > 0".into());
+            }
+        }
+        let tr = &self.trace;
+        if tr.enabled {
+            if tr.chunk_records == 0 {
+                return Err("trace.chunk_records must be > 0".into());
+            }
+            if tr.read_ahead_chunks == 0 {
+                return Err("trace.read_ahead_chunks must be >= 1".into());
             }
         }
         Ok(())
@@ -549,6 +636,30 @@ mod tests {
         let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
         cfg.tenant_mix.tenants = 0;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_knobs_validate() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.trace.enabled = true;
+        cfg.validate().unwrap();
+        cfg.trace.chunk_records = 0;
+        assert!(cfg.validate().is_err());
+        cfg.trace.chunk_records = 4096;
+        cfg.trace.read_ahead_chunks = 0;
+        assert!(cfg.validate().is_err());
+        // Disabled tracing never blocks validation, whatever the knobs say.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.trace.chunk_records = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_replay_mode_round_trips() {
+        for m in [TraceReplayMode::Buffered, TraceReplayMode::ReadAhead] {
+            assert_eq!(TraceReplayMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(TraceReplayMode::parse("nope"), None);
     }
 
     #[test]

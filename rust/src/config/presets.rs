@@ -246,6 +246,7 @@ fn base(name: String, fast_mem: MemTech, slow_mem: MemTech, hybrid: HybridConfig
             seed: 0xD1CE,
         },
         tenant_mix: TenantMixConfig::off(),
+        trace: TraceConfig::off(),
     }
 }
 

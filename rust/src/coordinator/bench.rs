@@ -17,7 +17,7 @@
 use crate::bench_util::{Bench, BenchReport, SCHEMA_VERSION};
 use crate::cachesim::Hierarchy;
 use crate::config::presets::{self, DesignPoint};
-use crate::config::{TenantMixConfig, TenantScenario};
+use crate::config::{TenantMixConfig, TenantScenario, TraceReplayMode};
 use crate::coordinator::geomean;
 use crate::engine::EngineBuilder;
 use crate::hybrid::{Access, Controller};
@@ -27,6 +27,7 @@ use crate::metadata::irt::IrtTable;
 use crate::metadata::remap_cache::RemapCache;
 use crate::metadata::SetLayout;
 use crate::sim::{ShardedSimulation, Simulation};
+use crate::trace::TraceWorkload;
 use crate::types::{AccessKind, Rng64};
 use crate::workloads::synth::TraceGen;
 use crate::workloads::{by_name, suite};
@@ -410,6 +411,51 @@ pub fn run_decay_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, 
     out
 }
 
+/// The trace-replay comparison sweep: record one closed-loop Trimma-C /
+/// `gap_pr` run into a temporary trace file (recording happens **outside**
+/// the timed region — construction discipline as in [`run_sharded_sweep`]),
+/// then replay it through both I/O modes of
+/// [`TraceWorkload`](crate::trace::TraceWorkload). Records one label per
+/// mode — `trace_replay/buffered` and `trace_replay/readahead` — with the
+/// replay throughput attached (M mem-steps/s), prints the read-ahead
+/// throughput ratio over buffered, and returns the `(mode, msteps)` pairs.
+/// The temporary trace is removed afterwards.
+pub fn run_trace_sweep(b: &mut Bench, quick: bool) -> Vec<(TraceReplayMode, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let path =
+        std::env::temp_dir().join(format!("trimma-bench-{}.trimtrace", std::process::id()));
+    let builder = EngineBuilder::new(DesignPoint::TrimmaCache).workload("gap_pr").configure(
+        move |cfg| {
+            cfg.workload.accesses_per_core = accesses;
+            cfg.workload.warmup_per_core = warmup;
+        },
+    );
+    builder.run_recorded(&path).unwrap_or_else(|e| panic!("trace recording: {e}"));
+    let mut out = Vec::new();
+    for mode in [TraceReplayMode::Buffered, TraceReplayMode::ReadAhead] {
+        let mut cfg = builder.build_config().expect("sweep preset");
+        cfg.trace.replay = mode;
+        let steps = cfg.workload.cores as f64 * (accesses + warmup) as f64;
+        let workload =
+            TraceWorkload::open(&path, &cfg).unwrap_or_else(|e| panic!("trace open: {e}"));
+        let mut sim = Simulation::new(&cfg, Box::new(workload));
+        let label = format!("trace_replay/{}", mode.label());
+        let (_rep, dt) = b.once(&label, move || sim.run());
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((mode, msteps));
+    }
+    std::fs::remove_file(&path).ok();
+    if let [(_, buffered), (_, readahead)] = out[..] {
+        println!(
+            "  trace replay read-ahead: {:.2}x throughput over buffered",
+            readahead / buffered.max(1e-12)
+        );
+    }
+    out
+}
+
 /// Tenant counts the multi-tenant sweep measures: `--quick` keeps it to
 /// `{1, 8}` so CI smoke stays fast; full runs add the 64-tenant point.
 pub fn tenant_counts(quick: bool) -> Vec<u32> {
@@ -474,7 +520,10 @@ pub fn run_tenant_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(u32, 
 /// `trimma bench --decay`, also asserted by CI's bench-smoke).
 /// `tenants` additionally runs [`run_tenant_sweep`] (the
 /// `tenant_mix/<n>` labels — `trimma bench --tenants`, gated by CI's
-/// `bench-check --require-labels` pass).
+/// `bench-check --require-labels` pass). `trace` additionally runs
+/// [`run_trace_sweep`] (the `trace_replay/{buffered,readahead}` labels —
+/// `trimma bench --trace`, also gated by the same label pass).
+#[allow(clippy::fn_params_excessive_bools)]
 pub fn full_report(
     tag: &str,
     quick: bool,
@@ -482,6 +531,7 @@ pub fn full_report(
     pipeline: bool,
     decay: bool,
     tenants: bool,
+    trace: bool,
 ) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
@@ -500,6 +550,9 @@ pub fn full_report(
     }
     if tenants {
         run_tenant_sweep(&mut b, quick, shards);
+    }
+    if trace {
+        run_trace_sweep(&mut b, quick);
     }
     BenchReport {
         schema_version: SCHEMA_VERSION,

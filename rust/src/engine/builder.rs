@@ -6,7 +6,7 @@ use crate::engine::sharded::{self, ShardPlan, ShardedSession};
 use crate::engine::{AnyController, EngineError, Session};
 use crate::metadata::SetLayout;
 use crate::sim::{tenants, ShardedSimulation, SimReport, Simulation, TenantReport};
-use crate::workloads;
+use crate::workloads::{self, Workload};
 
 /// Memory technology combination, mirroring the paper's Table 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +91,7 @@ pub struct EngineBuilder {
     shards: usize,
     pipeline: bool,
     tenant_mix: Option<TenantMixConfig>,
+    trace: Option<std::path::PathBuf>,
     tweaks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
 }
 
@@ -109,6 +110,7 @@ impl EngineBuilder {
             shards: 1,
             pipeline: false,
             tenant_mix: None,
+            trace: None,
             tweaks: Vec::new(),
         }
     }
@@ -212,6 +214,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Drive the run from a recorded trace file instead of a synthetic
+    /// generator ([`crate::trace::TraceWorkload`]; DESIGN.md §13): the
+    /// trace replaces [`EngineBuilder::workload`] on the `build()` /
+    /// `run()` / `run_sharded()` paths, `cfg.trace.enabled` is forced on,
+    /// and the config's core count and access budgets must match the
+    /// trace header (use [`EngineBuilder::configure`] or the `trimma
+    /// replay` CLI, which adopts them from the header). Replay I/O knobs
+    /// — chunking, buffered vs read-ahead, validate-on-open — come from
+    /// [`TraceConfig`](crate::config::TraceConfig).
+    pub fn trace(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.trace = Some(path.into());
+        self
+    }
+
     /// Queue a raw config tweak, applied (in call order) after the preset
     /// is materialized — capacities, core counts, access budgets, remap
     /// cache geometry: anything the typed knobs don't cover.
@@ -241,6 +257,7 @@ impl EngineBuilder {
             cfg.tenant_mix = mix;
             cfg.tenant_mix.enabled = true;
         }
+        cfg.trace.enabled |= self.trace.is_some();
         cfg.validate().map_err(EngineError::InvalidConfig)?;
         Ok(cfg)
     }
@@ -304,11 +321,47 @@ impl EngineBuilder {
     /// (see [`sharded`](crate::engine::sharded) for the execution model
     /// and its determinism guarantee). Requires a workload.
     pub fn run_sharded(&self) -> Result<SimReport, EngineError> {
+        let cfg = self.build_config()?;
+        let wl = self.resolve_workload(&cfg)?;
+        let session = self.build_sharded()?;
+        Ok(ShardedSimulation::new(&cfg, wl, session).pipelined(self.pipeline).run())
+    }
+
+    /// The run's access-stream source: the attached trace file when
+    /// [`EngineBuilder::trace`] was called (opened per `cfg.trace`'s
+    /// replay knobs), the named synthetic workload otherwise.
+    fn resolve_workload(&self, cfg: &SystemConfig) -> Result<Box<dyn Workload>, EngineError> {
+        if let Some(path) = &self.trace {
+            let wl = crate::trace::TraceWorkload::open(path, cfg)?;
+            Ok(Box::new(wl))
+        } else {
+            let name = self.workload.as_deref().ok_or(EngineError::MissingWorkload)?;
+            Ok(workloads::by_name(name, cfg)?)
+        }
+    }
+
+    /// Run the **closed-loop** simulation of this builder's (synthetic)
+    /// workload while recording every consumed access into a trace file
+    /// at `path` ([`crate::trace::TraceRecorder`]; truncates an existing
+    /// file). Returns the live run's report — replaying the trace
+    /// reproduces its canonical stats byte-for-byte in every execution
+    /// mode (`tests/trace_parity.rs`). Encoding knobs come from
+    /// [`TraceConfig`](crate::config::TraceConfig).
+    pub fn run_recorded(&self, path: impl AsRef<std::path::Path>) -> Result<SimReport, EngineError> {
         let name = self.workload.as_deref().ok_or(EngineError::MissingWorkload)?;
         let cfg = self.build_config()?;
         let wl = workloads::by_name(name, &cfg)?;
-        let session = self.build_sharded()?;
-        Ok(ShardedSimulation::new(&cfg, wl, session).pipelined(self.pipeline).run())
+        let mut rec = crate::trace::TraceRecorder::create(
+            path.as_ref(),
+            &cfg,
+            wl.name(),
+            wl.footprint_bytes(),
+        )?;
+        let ctrl = self.controller_for(&cfg);
+        let mut sim = Simulation::with_controller(&cfg, wl, ctrl);
+        let rep = sim.run_tapped(&mut rec);
+        rec.finish()?;
+        Ok(rep)
     }
 
     /// Build and run the multi-tenant front end over this builder's
@@ -334,11 +387,11 @@ impl EngineBuilder {
         }
     }
 
-    /// Build the full trace-driven simulation (requires a workload).
+    /// Build the full trace-driven simulation (requires a workload or an
+    /// attached trace file).
     pub fn build(&self) -> Result<Simulation, EngineError> {
-        let name = self.workload.as_deref().ok_or(EngineError::MissingWorkload)?;
         let cfg = self.build_config()?;
-        let wl = workloads::by_name(name, &cfg)?;
+        let wl = self.resolve_workload(&cfg)?;
         let ctrl = self.controller_for(&cfg);
         Ok(Simulation::with_controller(&cfg, wl, ctrl))
     }
@@ -498,6 +551,31 @@ mod tests {
             .run_tenant_mix()
             .unwrap_err();
         assert!(matches!(err, EngineError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn record_then_replay_reproduces_the_run() {
+        let path = std::env::temp_dir()
+            .join(format!("trimma-builder-{}-roundtrip.trimtrace", std::process::id()));
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache).workload("adv_drift").configure(shrink);
+        let live = b.run_recorded(&path).unwrap();
+        assert!(live.stats.mem_accesses > 0);
+        let replayed = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .trace(&path)
+            .configure(shrink)
+            .run()
+            .unwrap();
+        assert_eq!(replayed.name, "adv_drift", "replay reports the recorded label");
+        assert_eq!(live.stats.canonical(), replayed.stats.canonical());
+        // The trace toggle reaches the config; a bogus path is typed.
+        let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).trace(&path).build_config().unwrap();
+        assert!(cfg.trace.enabled);
+        std::fs::remove_file(&path).unwrap();
+        let err = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .trace("/nonexistent/trimma.trimtrace")
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Trace(_)));
     }
 
     #[test]

@@ -105,6 +105,10 @@ pub enum EngineError {
     /// every failing job's label and error (not just the first), so a
     /// long sweep reports all its casualties in one pass.
     Jobs(JobFailures),
+    /// A trace record/replay failure: file corruption (typed per layer —
+    /// header, index, chunk), I/O loss, or a header/config mismatch. See
+    /// [`crate::trace::TraceError`].
+    Trace(crate::trace::TraceError),
 }
 
 impl std::fmt::Display for EngineError {
@@ -117,6 +121,7 @@ impl std::fmt::Display for EngineError {
             EngineError::InvalidConfig(e) => write!(f, "invalid config: {e}"),
             EngineError::UnknownFigure(id) => write!(f, "unknown figure '{id}'"),
             EngineError::Jobs(e) => write!(f, "{e}"),
+            EngineError::Trace(e) => write!(f, "{e}"),
         }
     }
 }
@@ -132,5 +137,11 @@ impl From<UnknownWorkload> for EngineError {
 impl From<JobFailures> for EngineError {
     fn from(e: JobFailures) -> Self {
         EngineError::Jobs(e)
+    }
+}
+
+impl From<crate::trace::TraceError> for EngineError {
+    fn from(e: crate::trace::TraceError) -> Self {
+        EngineError::Trace(e)
     }
 }

@@ -319,7 +319,10 @@ pub(crate) fn spsc_channel<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
 }
 
 impl<T> Producer<T> {
-    fn try_push(&mut self, v: T) -> Result<(), T> {
+    /// Non-blocking push; hands `v` back if the ring is full. Crate-visible
+    /// for the trace replay I/O thread, which must never block on a full
+    /// per-core ring (it round-robins the other cores instead).
+    pub(crate) fn try_push(&mut self, v: T) -> Result<(), T> {
         let tail = self.0.tail.load(Ordering::Relaxed);
         let head = self.0.head.load(Ordering::Acquire);
         if tail.wrapping_sub(head) == self.0.buf.len() {
@@ -353,7 +356,9 @@ impl<T> Producer<T> {
 }
 
 impl<T> Consumer<T> {
-    fn try_pop(&mut self) -> Option<T> {
+    /// Non-blocking pop; `None` if the ring is currently empty.
+    /// Crate-visible for the trace replay I/O thread's recycle ring.
+    pub(crate) fn try_pop(&mut self) -> Option<T> {
         let head = self.0.head.load(Ordering::Relaxed);
         let tail = self.0.tail.load(Ordering::Acquire);
         if head == tail {

@@ -38,6 +38,16 @@
 //! tenant sessions into one shared memory system with per-tenant stats
 //! and contention scenarios (DESIGN.md §12).
 //!
+//! Runs are no longer generator-only: the [`trace`] subsystem records any
+//! run's access stream into a compact binary trace file (CRC'd chunks,
+//! optional delta/varint encoding) via an [`sim::AccessTap`], and replays
+//! it as a streaming [`workloads::Workload`] ([`trace::TraceWorkload`];
+//! `EngineBuilder::trace(path)`, the `trace:<path>` workload name, or the
+//! `trimma record`/`replay` CLI pair) — buffered chunked reads by
+//! default, or double-buffered read-ahead on a dedicated I/O thread, with
+//! replayed stats byte-identical to the live run across every execution
+//! mode (DESIGN.md §13).
+//!
 //! The AOT-compiled JAX/Pallas trace generator is loaded through
 //! [`runtime`] (PJRT CPU client); Python never runs at simulation time.
 //!
@@ -64,6 +74,7 @@ pub mod metadata;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod trace;
 pub mod types;
 pub mod verify;
 pub mod workloads;
@@ -82,8 +93,10 @@ pub mod prelude {
     };
     pub use crate::hybrid::{Access, Controller};
     pub use crate::config::{MixProfile, TenantMixConfig, TenantScenario};
+    pub use crate::config::{TraceConfig, TraceReplayMode};
     pub use crate::sim::{ShardedSimulation, SimReport, Simulation, TenantReport, TenantStats};
     pub use crate::stats::Stats;
+    pub use crate::trace::{TraceError, TraceSummary, TraceWorkload};
     pub use crate::types::AccessKind;
     pub use crate::workloads::Workload;
 }

@@ -15,8 +15,14 @@
 //!                flash_crowd] [--mix serving|analytics|general]
 //!                [--shards N] [--pipeline]  multi-tenant serving run with
 //!                                           per-tenant stats (DESIGN.md §12)
+//! trimma record --workload gap_pr [--out FILE.trimtrace] [--accesses N]
+//!               [--warmup N] [--cores N]    record a closed-loop run into a
+//!                                           compact binary trace (DESIGN.md §13)
+//! trimma replay --trace FILE.trimtrace [--design trimma-c] [--readahead]
+//!               [--shards N] [--pipeline]   replay a recorded trace (the
+//!                                           header's run shape is adopted)
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
-//!              [--pipeline] [--decay] [--tenants]
+//!              [--pipeline] [--decay] [--tenants] [--trace]
 //!                                           hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json [--require-labels L1,L2,...]
@@ -53,8 +59,19 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
                  [--shards N]   N>0: open-loop sharded run; 0 (default):
                                 closed loop with real miss latencies
                  [--pipeline]   pipelined front end (needs --shards N, N>=1)
+  trimma record --workload gap_pr [--design trimma-c] [--mem ddr5+nvm]
+                [--accesses N] [--warmup N] [--cores N]
+                [--out FILE.trimtrace]
+                               record a closed-loop run into a compact
+                               binary trace file (DESIGN.md §13)
+  trimma replay --trace FILE.trimtrace [--design trimma-c] [--mem ddr5+nvm]
+                [--readahead]  double-buffered read-ahead I/O thread
+                               (default: buffered chunked reads)
+                [--shards N] [--pipeline] [--verify] [--decay]
+                               replay a recorded trace; cores/accesses/
+                               warmup are adopted from the trace header
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
-               [--decay] [--tenants]
+               [--decay] [--tenants] [--trace]
   trimma bench-check --report bench.json [--require-labels L1,L2,...]
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -77,6 +94,8 @@ fn main() {
         "compare" => compare(&get),
         "sweep" => sweep(&get, &has),
         "tenants" => tenants(&get, &has),
+        "record" => record(&get),
+        "replay" => replay(&get, &has),
         "bench" => bench(&get, &has),
         "bench-check" => bench_check(&get),
         "bench-compare" => bench_compare(&get),
@@ -128,6 +147,9 @@ fn build_cfg(get: &dyn Fn(&str) -> Option<String>) -> SystemConfig {
     }
     if let Some(n) = get("--cores") {
         cfg.workload.cores = n.parse().expect("--cores");
+    }
+    if let Some(n) = get("--warmup") {
+        cfg.workload.warmup_per_core = n.parse().expect("--warmup");
     }
     cfg.validate().unwrap_or_else(|e| {
         eprintln!("invalid config: {e}");
@@ -295,6 +317,106 @@ fn tenants(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     println!("sim wall time: {:.2}s", dt.as_secs_f64());
 }
 
+/// `trimma record`: run a workload through the closed loop and capture its
+/// per-core access stream into a compact binary trace file (DESIGN.md
+/// §13). The recording tap is allocation-free on the hot path; the file
+/// carries the run shape in its header, so `trimma replay` needs no flags
+/// beyond the path.
+fn record(get: &dyn Fn(&str) -> Option<String>) {
+    let cfg = build_cfg(get);
+    let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
+    let out = get("--out").unwrap_or_else(|| format!("{wl}.trimtrace"));
+    let t0 = std::time::Instant::now();
+    let rep = trimma::engine::EngineBuilder::from_config(cfg)
+        .workload(&wl)
+        .run_recorded(&out)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let dt = t0.elapsed();
+    let summary = trimma::trace::validate(std::path::Path::new(&out)).unwrap_or_else(|e| {
+        eprintln!("internal error: freshly recorded trace fails validation: {e}");
+        std::process::exit(2);
+    });
+    println!("== recorded {wl} -> {out} ==");
+    println!("records:        {} ({} cores)", summary.total_records, summary.meta.cores);
+    println!("chunks:         {} x {} records", summary.chunk_count, summary.meta.chunk_records);
+    println!(
+        "file size:      {} KiB ({:.2} B/record, {} encoding)",
+        summary.file_bytes >> 10,
+        summary.file_bytes as f64 / summary.total_records.max(1) as f64,
+        summary.meta.encoding.label()
+    );
+    println!("mem accesses:   {}", rep.stats.mem_accesses);
+    println!("record wall time: {:.2}s", dt.as_secs_f64());
+}
+
+/// `trimma replay`: re-run a recorded trace through the simulator. The
+/// header's run shape (cores, accesses, warmup) is adopted into the
+/// config, so a trace recorded anywhere replays under any design point or
+/// memory preset; `--readahead` moves chunk I/O onto a dedicated
+/// read-ahead thread (`TraceReplayMode::ReadAhead`).
+fn replay(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
+    use trimma::config::TraceReplayMode;
+
+    let path = get("--trace").unwrap_or_else(|| {
+        eprintln!("need --trace <file.trimtrace>");
+        std::process::exit(2);
+    });
+    let summary = trimma::trace::validate(std::path::Path::new(&path)).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    let mut cfg = build_cfg(get);
+    cfg.workload.cores = summary.meta.cores;
+    cfg.workload.accesses_per_core = summary.meta.accesses_per_core;
+    cfg.workload.warmup_per_core = summary.meta.warmup_per_core;
+    cfg.hybrid.verify |= has("--verify");
+    cfg.hybrid.decay.enabled |= has("--decay");
+    if has("--readahead") {
+        cfg.trace.replay = TraceReplayMode::ReadAhead;
+    }
+    let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(0);
+    if has("--pipeline") && shards == 0 {
+        eprintln!("--pipeline needs --shards N (N >= 1): the pipelined front end is part of the open-loop sharded path");
+        std::process::exit(2);
+    }
+    let builder = trimma::engine::EngineBuilder::from_config(cfg)
+        .trace(&path)
+        .shards(shards)
+        .pipeline(has("--pipeline"));
+    let t0 = std::time::Instant::now();
+    let result = if shards > 0 { builder.run_sharded() } else { builder.run() };
+    let rep = result.unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let dt = t0.elapsed();
+    let s = &rep.stats;
+    println!(
+        "== replayed {} ({} records, {} mode{}) ==",
+        rep.name,
+        summary.total_records,
+        cfg_replay_label(has),
+        if shards > 0 { format!(", {shards} shard(s)") } else { String::new() }
+    );
+    println!("performance (IPC proxy):   {}", fmt(rep.performance()));
+    println!("fast-mem serve rate:       {}", pct(s.fast_serve_rate()));
+    println!("remap cache hit rate:      {}", pct(s.rc_hit_rate()));
+    println!("mem accesses:              {}", s.mem_accesses);
+    println!(
+        "replay wall time: {:.2}s ({:.1} M mem-steps/s)",
+        dt.as_secs_f64(),
+        (summary.total_records as f64 / 1e6) / dt.as_secs_f64().max(1e-9)
+    );
+}
+
+/// The replay-mode label for `trimma replay`'s banner line.
+fn cfg_replay_label(has: &dyn Fn(&str) -> bool) -> &'static str {
+    if has("--readahead") { "readahead" } else { "buffered" }
+}
+
 /// `trimma bench`: run the hot-path + sim-sweep suite and (optionally)
 /// write the schema-versioned JSON report. See EXPERIMENTS.md §Perf.
 fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
@@ -304,8 +426,10 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let pipeline = has("--pipeline");
     let decay = has("--decay");
     let tenants = has("--tenants");
-    let report =
-        trimma::coordinator::bench::full_report(&tag, quick, shards, pipeline, decay, tenants);
+    let trace = has("--trace");
+    let report = trimma::coordinator::bench::full_report(
+        &tag, quick, shards, pipeline, decay, tenants, trace,
+    );
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",
         report.geomean_sim_msteps_per_s,

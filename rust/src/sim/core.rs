@@ -124,9 +124,10 @@ pub trait MissSink {
 /// ([`crate::sim::tenants`]) uses a tap to attribute each access to its
 /// owning tenant by address slab.
 pub trait AccessTap {
-    /// One completed access: the generated `acc`, whether it missed the
-    /// LLC, and the stall the sink charged for it (`0` on an LLC hit).
-    fn record(&mut self, acc: &MemAccess, llc_miss: bool, miss_lat: Cycle);
+    /// One completed access: the issuing `core`, the generated `acc`,
+    /// whether it missed the LLC, and the stall the sink charged for it
+    /// (`0` on an LLC hit).
+    fn record(&mut self, core: usize, acc: &MemAccess, llc_miss: bool, miss_lat: Cycle);
 
     /// End-of-warmup reset, delivered at the same in-stream point as
     /// [`MissSink::reset_stats`].
@@ -138,7 +139,7 @@ pub struct NoTap;
 
 impl AccessTap for NoTap {
     #[inline]
-    fn record(&mut self, _acc: &MemAccess, _llc_miss: bool, _miss_lat: Cycle) {}
+    fn record(&mut self, _core: usize, _acc: &MemAccess, _llc_miss: bool, _miss_lat: Cycle) {}
     #[inline]
     fn reset(&mut self) {}
 }
@@ -452,7 +453,7 @@ impl ExecCore {
             miss_lat = sink.demand(&mut self.mapper, acc.addr, line, acc.kind, now + hr.latency);
             lat += miss_lat;
         }
-        tap.record(&acc, hr.llc_miss, miss_lat);
+        tap.record(core, &acc, hr.llc_miss, miss_lat);
         // Posted writebacks: charge banks/stats, do not stall the core.
         let wbs = hr.writebacks();
         if !wbs.is_empty() {

@@ -110,7 +110,14 @@ impl<C: Controller> Simulation<C> {
 
     /// Run warmup + measurement; returns the report.
     pub fn run(&mut self) -> SimReport {
-        self.core.run(&mut self.sink);
+        self.run_tapped(&mut NoTap)
+    }
+
+    /// [`Simulation::run`] with an [`AccessTap`] observing every access
+    /// (the trace recorder hangs off this; `run` delegates here with the
+    /// zero-sized [`NoTap`], so untapped runs monomorphize unchanged).
+    pub fn run_tapped<T: self::core::AccessTap>(&mut self, tap: &mut T) -> SimReport {
+        self.core.run_tapped(&mut self.sink, tap);
         let mut rep = self.sink.session_mut().report();
         self.core.finalize_report(&mut rep.stats);
         rep

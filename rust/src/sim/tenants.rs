@@ -229,7 +229,7 @@ impl TenantRecorder {
 
 impl AccessTap for TenantRecorder {
     #[inline]
-    fn record(&mut self, acc: &MemAccess, llc_miss: bool, miss_lat: Cycle) {
+    fn record(&mut self, _core: usize, acc: &MemAccess, llc_miss: bool, miss_lat: Cycle) {
         let n = self.stats.len() as u32;
         let s = &mut self.stats[tenant_of(acc.addr, self.slab, n) as usize];
         s.accesses += 1;

@@ -1,0 +1,37 @@
+//! Trace subsystem: record any run's access stream into a compact binary
+//! trace file and replay it later as a [`Workload`](crate::workloads::Workload),
+//! byte-identical to the live run (DESIGN.md §13).
+//!
+//! Three layers:
+//!
+//! * [`format`] — the versioned, little-endian container: CRC'd header,
+//!   per-core chunks (raw or delta/varint encoded), and an end-of-file
+//!   chunk index that gives every core an independent cursor. The
+//!   [`validate`] entry point walks the whole file and returns a
+//!   [`TraceSummary`], mirroring `bench_util`'s validate-the-JSON
+//!   discipline for the binary format.
+//! * [`record`] — [`TraceRecorder`], an
+//!   [`AccessTap`](crate::sim::AccessTap) that taps `ExecCore`'s issue
+//!   point, so recording works for any synthetic or tenant run with zero
+//!   cost when unused (the `NoTap` path monomorphizes away).
+//! * [`replay`] — [`TraceWorkload`], a streaming `Workload` over the
+//!   chunked reader: an inline buffered mode (portable default) and a
+//!   read-ahead mode that moves chunk I/O + decode onto a dedicated
+//!   thread behind per-core SPSC rings with a recycled buffer pool
+//!   (the PR 5 router-thread pattern). An mmap path is future work —
+//!   this container has no `libc`/mmap crate, and buffered reads with
+//!   read-ahead already overlap I/O with simulation.
+//!
+//! Determinism contract: the recorder captures each core's *consumed*
+//! stream (warmup included), and per-core consumption is identical in
+//! every execution mode (closed loop, any shard count, pipelined or
+//! inline) — so one recording replays byte-identically everywhere.
+//! `tests/trace_parity.rs` locks this across the adversarial suite.
+
+pub mod format;
+pub mod record;
+pub mod replay;
+
+pub use format::{validate, Encoding, TraceError, TraceMeta, TraceSummary};
+pub use record::TraceRecorder;
+pub use replay::TraceWorkload;

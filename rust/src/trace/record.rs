@@ -1,0 +1,89 @@
+//! The trace recorder: an [`AccessTap`] that captures a run's per-core
+//! access streams into a trace file (DESIGN.md §13).
+//!
+//! The tap fires at `ExecCore`'s issue point — once per *consumed*
+//! access — so the recording is exactly the stream the run executed:
+//! `warmup_per_core + accesses_per_core` records per core, independent of
+//! the generator's double-buffered prefill overdraw. Crucially,
+//! [`AccessTap::reset`] is a **no-op** here: warmup accesses are part of
+//! the trace, because a replay must re-execute them to reproduce the
+//! post-warmup cache, table, and migration state byte-for-byte.
+//!
+//! Because per-core consumption is identical in every execution mode, a
+//! closed-loop recording replays byte-identically under any shard count
+//! and under the pipelined or inline front end — so recording is only
+//! wired through the closed loop
+//! ([`EngineBuilder::run_recorded`](crate::engine::EngineBuilder::run_recorded)),
+//! which is also the execution model whose stats the parity tests pin.
+
+use std::path::Path;
+
+use crate::config::SystemConfig;
+use crate::sim::AccessTap;
+use crate::types::{Cycle, MemAccess};
+
+use super::format::{fingerprint, Encoding, TraceError, TraceMeta, TraceSummary, TraceWriter};
+
+/// An [`AccessTap`] that streams every consumed access into a
+/// [`TraceWriter`]. Create it, run the simulation with the tap attached,
+/// then call [`TraceRecorder::finish`] to seal the file.
+///
+/// Disk I/O happens one encoded chunk at a time (`cfg.trace.chunk_records`
+/// records per chunk), so the tap's per-access cost is a bounds-checked
+/// push onto a staging buffer. Writer errors are deferred: the tap
+/// signature cannot return them, so the first failure is remembered and
+/// surfaced by `finish()` as a typed [`TraceError`].
+pub struct TraceRecorder {
+    writer: TraceWriter,
+    failed: Option<TraceError>,
+}
+
+impl TraceRecorder {
+    /// Create a recorder writing to `path` for a run of `cfg` driving
+    /// `workload` (its registered label and footprint go into the
+    /// header). Truncates any existing file at `path`.
+    pub fn create(
+        path: &Path,
+        cfg: &SystemConfig,
+        workload: &str,
+        footprint_bytes: u64,
+    ) -> Result<TraceRecorder, TraceError> {
+        let meta = TraceMeta {
+            cores: cfg.workload.cores,
+            accesses_per_core: cfg.workload.accesses_per_core,
+            warmup_per_core: cfg.workload.warmup_per_core,
+            seed: cfg.workload.seed,
+            footprint_bytes,
+            fingerprint: fingerprint(cfg, workload),
+            chunk_records: cfg.trace.chunk_records,
+            encoding: if cfg.trace.delta { Encoding::Delta } else { Encoding::Raw },
+            name: workload.to_string(),
+        };
+        Ok(TraceRecorder { writer: TraceWriter::create(path, meta)?, failed: None })
+    }
+
+    /// Seal the trace: flush partial chunks, write the index, patch the
+    /// header, and return the file summary. Surfaces any write error that
+    /// occurred mid-run.
+    pub fn finish(self) -> Result<TraceSummary, TraceError> {
+        if let Some(e) = self.failed {
+            return Err(e);
+        }
+        self.writer.finish()
+    }
+}
+
+impl AccessTap for TraceRecorder {
+    #[inline]
+    fn record(&mut self, core: usize, acc: &MemAccess, _llc_miss: bool, _miss_lat: Cycle) {
+        if self.failed.is_none() {
+            if let Err(e) = self.writer.push(core, *acc) {
+                self.failed = Some(e);
+            }
+        }
+    }
+
+    /// End-of-warmup is **not** a recording boundary: replay needs the
+    /// warmup stream to rebuild state, so the recorder keeps writing.
+    fn reset(&mut self) {}
+}

@@ -1,0 +1,499 @@
+//! Streaming trace replay: [`TraceWorkload`] turns a recorded trace file
+//! back into a [`Workload`], byte-identical to the live run it captured
+//! (DESIGN.md §13).
+//!
+//! ## Streaming, not loading
+//!
+//! The whole file is never resident: each core owns one decoded chunk
+//! buffer (`trace.chunk_records` records) plus whatever the read-ahead
+//! rings hold, so a multi-billion-access trace replays in a few MiB of
+//! memory. Two I/O strategies, selected by `cfg.trace.replay`:
+//!
+//! * **Buffered** (portable default): the simulation thread seeks and
+//!   reads the next chunk of a core's stream on demand, decoding into
+//!   that core's reused buffer. No threads, no rings.
+//! * **ReadAhead**: chunk I/O + CRC + decode move to one dedicated I/O
+//!   thread (the PR 5 router-thread pattern), which stages decoded
+//!   buffers into per-core SPSC rings (`read_ahead_chunks` deep; 2 =
+//!   double-buffered). Consumed buffers return through a recycle ring,
+//!   so the buffer pool — `cores * (read_ahead_chunks + 2)` buffers,
+//!   preallocated at open — circulates with **zero steady-state
+//!   allocations** (locked by `tests/alloc_free.rs`). The I/O thread
+//!   never blocks: a full per-core ring just means it serves the other
+//!   cores, so cross-core schedule skew (which differs between closed,
+//!   sharded, and pipelined runs) can never deadlock it. An mmap path
+//!   is future work — this container has no mmap crate, and read-ahead
+//!   already overlaps disk latency with simulation.
+//!
+//! The per-core chunk index at the end of the file is what makes both
+//! modes schedule-proof: every core has an independent cursor into its
+//! own chunk chain, so nothing about replay depends on how the recording
+//! run interleaved cores.
+//!
+//! ## Determinism and the filler contract
+//!
+//! A trace stores exactly `warmup_per_core + accesses_per_core` records
+//! per core — the consumed stream — and every execution mode consumes
+//! exactly that many, so replayed stats are byte-identical to the live
+//! run across shard counts and the pipelined/inline front end
+//! (`tests/trace_parity.rs`). The generation stage, however, *prefetches*
+//! past consumption: [`ExecCore`](crate::sim::ExecCore) double-buffers
+//! `2 * GEN_BATCH` accesses per core. Draws past end-of-trace therefore
+//! return an inert filler access (`read 0, gap 0`) — provably never
+//! consumed, merely buffered and dropped.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::{SystemConfig, TraceReplayMode};
+use crate::engine::sharded::{spsc_channel, Consumer, Producer};
+use crate::types::MemAccess;
+use crate::workloads::Workload;
+
+use super::format::{TraceError, TraceMeta, TraceReader};
+
+/// The inert access served past end-of-trace (see the module docs).
+#[inline]
+fn filler() -> MemAccess {
+    MemAccess::read(0, 0)
+}
+
+/// One core's replay position: the currently decoded chunk, the draw
+/// offset within it, how many chunks were consumed, and how many records
+/// the trace still owes this core.
+struct Cursor {
+    buf: Vec<MemAccess>,
+    pos: usize,
+    chunks_taken: usize,
+    remaining: u64,
+}
+
+/// Where refills come from — the replay I/O strategy.
+enum Source {
+    /// Inline reads on the simulation thread.
+    Buffered(TraceReader),
+    /// Dedicated I/O thread behind per-core rings.
+    ReadAhead(ReadAhead),
+}
+
+/// The read-ahead machinery owned by the consumer side: per-core data
+/// rings, the recycle ring back to the I/O thread, and the thread handle.
+struct ReadAhead {
+    rings: Vec<Consumer<Vec<MemAccess>>>,
+    recycle: Producer<Vec<MemAccess>>,
+    stop: Arc<AtomicBool>,
+    failure: Arc<Mutex<Option<String>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+fn take_failure(failure: &Mutex<Option<String>>) -> Option<String> {
+    match failure.lock() {
+        Ok(mut g) => g.take(),
+        Err(p) => p.into_inner().take(),
+    }
+}
+
+impl ReadAhead {
+    /// Move `reader` onto a spawned I/O thread and wire up the rings.
+    /// `depth` is `read_ahead_chunks` (ring depth per core).
+    fn spawn(mut reader: TraceReader, cores: usize, depth: usize, chunk_records: usize) -> Self {
+        let ring_cap = depth.next_power_of_two();
+        let mut data_tx = Vec::with_capacity(cores);
+        let mut rings = Vec::with_capacity(cores);
+        for _ in 0..cores {
+            let (tx, rx) = spsc_channel::<Vec<MemAccess>>(ring_cap);
+            data_tx.push(tx);
+            rings.push(rx);
+        }
+        // Pool sizing: each core can hold at most `depth` buffers in its
+        // ring plus one staged on the I/O thread — the consumer's held
+        // buffer is allocated with the cursors. The recycle ring is sized
+        // to hold every pool buffer at once, so returning one never spins.
+        let pool = cores * (depth + 1);
+        let (recycle, mut recycle_rx) =
+            spsc_channel::<Vec<MemAccess>>((pool + cores).next_power_of_two());
+        let mut free: Vec<Vec<MemAccess>> =
+            (0..pool).map(|_| Vec::with_capacity(chunk_records)).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let failure = Arc::new(Mutex::new(None));
+        let chunks: Vec<usize> = (0..cores).map(|c| reader.chunks_for(c)).collect();
+
+        let stop2 = Arc::clone(&stop);
+        let failure2 = Arc::clone(&failure);
+        let handle = std::thread::Builder::new()
+            .name("trace-readahead".into())
+            .spawn(move || {
+                let mut next_chunk = vec![0usize; cores];
+                let mut staged: Vec<Option<Vec<MemAccess>>> = (0..cores).map(|_| None).collect();
+                'io: loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Harvest returned buffers without blocking.
+                    while let Some(buf) = recycle_rx.try_pop() {
+                        free.push(buf);
+                    }
+                    let mut progress = false;
+                    let mut done = true;
+                    for core in 0..cores {
+                        // Decode ahead into a free buffer, if one exists.
+                        if staged[core].is_none() && next_chunk[core] < chunks[core] {
+                            if let Some(mut buf) = free.pop() {
+                                match reader.read_core_chunk(core, next_chunk[core], &mut buf) {
+                                    Ok(()) => {
+                                        next_chunk[core] += 1;
+                                        staged[core] = Some(buf);
+                                        progress = true;
+                                    }
+                                    Err(e) => {
+                                        if let Ok(mut g) = failure2.lock() {
+                                            *g = Some(e.to_string());
+                                        }
+                                        break 'io;
+                                    }
+                                }
+                            }
+                        }
+                        // Hand the staged buffer over — never blocking: a
+                        // full ring means the consumer is behind on this
+                        // core, so serve the others and retry later.
+                        if let Some(buf) = staged[core].take() {
+                            match data_tx[core].try_push(buf) {
+                                Ok(()) => progress = true,
+                                Err(back) => staged[core] = Some(back),
+                            }
+                        }
+                        if staged[core].is_some() || next_chunk[core] < chunks[core] {
+                            done = false;
+                        }
+                    }
+                    if done {
+                        break;
+                    }
+                    if !progress {
+                        std::thread::yield_now();
+                    }
+                }
+                // Dropping `data_tx` here closes every ring: consumers see
+                // `None` after draining whatever was staged.
+            })
+            .expect("failed to spawn the trace read-ahead thread");
+        ReadAhead { rings, recycle, stop, failure, handle: Some(handle) }
+    }
+}
+
+impl Drop for ReadAhead {
+    fn drop(&mut self) {
+        // The I/O thread never blocks, so it observes the stop flag
+        // promptly, drops its producers, and the drain below terminates.
+        self.stop.store(true, Ordering::Relaxed);
+        for ring in &mut self.rings {
+            while ring.recv().is_some() {}
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Refill `c` with `core`'s next chunk. Only called while the trace still
+/// owes this core records, so a closed ring / read failure here is an
+/// unrecoverable mid-run I/O loss — surfaced as a panic with the typed
+/// error's message (all *anticipatable* failures — corruption, config
+/// mismatch — were already returned as [`TraceError`]s at open).
+fn refill(source: &mut Source, c: &mut Cursor, core: usize) {
+    match source {
+        Source::Buffered(reader) => {
+            if let Err(e) = reader.read_core_chunk(core, c.chunks_taken, &mut c.buf) {
+                panic!("trace replay failed mid-run: {e}");
+            }
+        }
+        Source::ReadAhead(ra) => {
+            // Return the drained buffer to the pool first (the recycle
+            // ring holds the whole pool, so this never spins), then wait
+            // for the staged refill.
+            let old = std::mem::take(&mut c.buf);
+            ra.recycle.send(old);
+            match ra.rings[core].recv() {
+                Some(buf) => c.buf = buf,
+                None => {
+                    let msg = take_failure(&ra.failure)
+                        .unwrap_or_else(|| "read-ahead thread ended early".to_string());
+                    panic!("trace replay failed mid-run: {msg}");
+                }
+            }
+        }
+    }
+    c.chunks_taken += 1;
+    c.pos = 0;
+}
+
+/// A recorded trace replayed as a [`Workload`] — open with
+/// [`TraceWorkload::open`] (or `EngineBuilder::trace(path)`, or the
+/// `trace:<path>` workload name). `name()` reports the *recorded
+/// workload's* label, so live and replayed reports line up.
+pub struct TraceWorkload {
+    meta: TraceMeta,
+    cursors: Vec<Cursor>,
+    source: Source,
+}
+
+impl TraceWorkload {
+    /// Open `path` for replay under `cfg`. Fails with a typed
+    /// [`TraceError`] on corruption (header/index/chunk CRCs — the full
+    /// chunk walk runs when `cfg.trace.validate_on_open` is set) or when
+    /// the config's core count / access budgets disagree with the header
+    /// (`cfg.workload.{cores,accesses_per_core,warmup_per_core}` must
+    /// match; the `trimma replay` CLI adopts them from the header
+    /// automatically). Geometry may differ freely — replaying one
+    /// recording against many designs is the point.
+    pub fn open(path: &Path, cfg: &SystemConfig) -> Result<TraceWorkload, TraceError> {
+        let mut reader = TraceReader::open(path)?;
+        let meta = reader.meta().clone();
+        let w = &cfg.workload;
+        if meta.cores != w.cores {
+            return Err(TraceError::ConfigMismatch(format!(
+                "trace was recorded with {} cores, config wants {}",
+                meta.cores, w.cores
+            )));
+        }
+        if meta.accesses_per_core != w.accesses_per_core
+            || meta.warmup_per_core != w.warmup_per_core
+        {
+            return Err(TraceError::ConfigMismatch(format!(
+                "trace carries {}+{} (warmup+measured) accesses per core, config wants {}+{}",
+                meta.warmup_per_core,
+                meta.accesses_per_core,
+                w.warmup_per_core,
+                w.accesses_per_core
+            )));
+        }
+        if cfg.trace.validate_on_open {
+            reader.validate_chunks()?;
+        }
+        let cores = meta.cores as usize;
+        let chunk_records = meta.chunk_records as usize;
+        let per_core = meta.records_per_core();
+        let cursors = (0..cores)
+            .map(|_| Cursor {
+                buf: Vec::with_capacity(chunk_records),
+                pos: 0,
+                chunks_taken: 0,
+                remaining: per_core,
+            })
+            .collect();
+        let source = match cfg.trace.replay {
+            TraceReplayMode::Buffered => Source::Buffered(reader),
+            TraceReplayMode::ReadAhead => Source::ReadAhead(ReadAhead::spawn(
+                reader,
+                cores,
+                cfg.trace.read_ahead_chunks.max(1) as usize,
+                chunk_records,
+            )),
+        };
+        Ok(TraceWorkload { meta, cursors, source })
+    }
+
+    /// The trace header's recording-time identity.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn next(&mut self, core: usize) -> MemAccess {
+        let c = &mut self.cursors[core];
+        if c.remaining == 0 {
+            return filler();
+        }
+        if c.pos == c.buf.len() {
+            refill(&mut self.source, c, core);
+        }
+        let a = c.buf[c.pos];
+        c.pos += 1;
+        c.remaining -= 1;
+        a
+    }
+
+    /// Monomorphic bulk path: memcpy out of the decoded chunk across
+    /// chunk boundaries, then filler past end-of-trace. Zero allocations
+    /// in steady state (`tests/alloc_free.rs`).
+    fn next_batch(&mut self, core: usize, out: &mut [MemAccess]) {
+        let mut filled = 0;
+        while filled < out.len() {
+            let c = &mut self.cursors[core];
+            if c.remaining == 0 {
+                out[filled..].fill(filler());
+                return;
+            }
+            if c.pos == c.buf.len() {
+                refill(&mut self.source, c, core);
+            }
+            let c = &mut self.cursors[core];
+            let want = out.len() - filled;
+            let take = (c.buf.len() - c.pos).min(want).min(c.remaining as usize);
+            out[filled..filled + take].copy_from_slice(&c.buf[c.pos..c.pos + take]);
+            c.pos += take;
+            c.remaining -= take as u64;
+            filled += take;
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn footprint_bytes(&self) -> u64 {
+        self.meta.footprint_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{self, DesignPoint};
+    use crate::trace::format::{Encoding, TraceMeta, TraceWriter};
+    use std::sync::atomic::AtomicU32;
+
+    const CORES: u32 = 3;
+    const WARMUP: u64 = 250;
+    const ACCESSES: u64 = 1000;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        static N: AtomicU32 = AtomicU32::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("trimma-replay-{}-{tag}-{n}.trimtrace", std::process::id()))
+    }
+
+    fn reference(core: u64, i: u64) -> MemAccess {
+        let addr = (core * 7_654_321 + i * 173) % (1 << 30);
+        if (core + i) % 4 == 0 {
+            MemAccess::write(addr, (i % 9) as u32)
+        } else {
+            MemAccess::read(addr, (i % 13) as u32)
+        }
+    }
+
+    fn write_trace(path: &std::path::Path, chunk_records: u32) {
+        let meta = TraceMeta {
+            cores: CORES,
+            accesses_per_core: ACCESSES,
+            warmup_per_core: WARMUP,
+            seed: 1,
+            footprint_bytes: 1 << 30,
+            fingerprint: 0,
+            chunk_records,
+            encoding: Encoding::Delta,
+            name: "replay-unit".to_string(),
+        };
+        let mut w = TraceWriter::create(path, meta).unwrap();
+        for i in 0..WARMUP + ACCESSES {
+            for core in 0..CORES as usize {
+                w.push(core, reference(core as u64, i)).unwrap();
+            }
+        }
+        w.finish().unwrap();
+    }
+
+    fn cfg(mode: TraceReplayMode) -> crate::config::SystemConfig {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.workload.cores = CORES;
+        cfg.workload.accesses_per_core = ACCESSES;
+        cfg.workload.warmup_per_core = WARMUP;
+        cfg.trace.replay = mode;
+        cfg
+    }
+
+    #[test]
+    fn replays_the_exact_stream_in_both_modes() {
+        let path = tmp("stream");
+        write_trace(&path, 128); // several chunks per core
+        for mode in [TraceReplayMode::Buffered, TraceReplayMode::ReadAhead] {
+            let mut wl = TraceWorkload::open(&path, &cfg(mode)).unwrap();
+            assert_eq!(wl.name(), "replay-unit");
+            assert_eq!(wl.footprint_bytes(), 1 << 30);
+            // Mixed next/next_batch draws, cores interleaved out of order
+            // and at different rates — the per-core purity contract.
+            let mut drawn = vec![0u64; CORES as usize];
+            let mut batch = vec![filler(); 37];
+            // 2x the rounds a core needs, so even the lagging core (which
+            // skips every other round) fully drains into filler territory.
+            for round in 0..2 * ((WARMUP + ACCESSES) / 37 + 2) {
+                for &core in &[2usize, 0, 1] {
+                    if core == 1 && round % 2 == 0 {
+                        continue; // core 1 lags behind
+                    }
+                    wl.next_batch(core, &mut batch);
+                    for (k, got) in batch.iter().enumerate() {
+                        let i = drawn[core] + k as u64;
+                        let want = if i < WARMUP + ACCESSES {
+                            reference(core as u64, i)
+                        } else {
+                            filler()
+                        };
+                        assert_eq!(*got, want, "{mode:?} core {core} record {i}");
+                    }
+                    drawn[core] += batch.len() as u64;
+                }
+            }
+            // Every core must be fully drained and into filler territory.
+            for core in 0..CORES as usize {
+                assert!(drawn[core] >= WARMUP + ACCESSES, "core {core} under-drawn");
+                assert_eq!(wl.next(core), filler());
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn next_and_next_batch_agree() {
+        let path = tmp("agree");
+        write_trace(&path, 64);
+        let mut a = TraceWorkload::open(&path, &cfg(TraceReplayMode::Buffered)).unwrap();
+        let mut b = TraceWorkload::open(&path, &cfg(TraceReplayMode::ReadAhead)).unwrap();
+        let mut batch = vec![filler(); 50];
+        for core in 0..CORES as usize {
+            for _ in 0..30 {
+                b.next_batch(core, &mut batch);
+                for got in &batch {
+                    assert_eq!(a.next(core), *got);
+                }
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_mismatched_run_shape() {
+        let path = tmp("shape");
+        write_trace(&path, 64);
+        let mut bad = cfg(TraceReplayMode::Buffered);
+        bad.workload.cores = CORES + 1;
+        assert!(matches!(
+            TraceWorkload::open(&path, &bad).unwrap_err(),
+            TraceError::ConfigMismatch(_)
+        ));
+        let mut bad = cfg(TraceReplayMode::Buffered);
+        bad.workload.accesses_per_core += 1;
+        assert!(matches!(
+            TraceWorkload::open(&path, &bad).unwrap_err(),
+            TraceError::ConfigMismatch(_)
+        ));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn dropping_a_partially_consumed_readahead_replay_is_clean() {
+        let path = tmp("drop");
+        write_trace(&path, 32);
+        let mut wl = TraceWorkload::open(&path, &cfg(TraceReplayMode::ReadAhead)).unwrap();
+        wl.next(0); // touch one core only, then drop mid-stream
+        drop(wl);
+        let wl = TraceWorkload::open(&path, &cfg(TraceReplayMode::ReadAhead)).unwrap();
+        drop(wl); // never touched at all
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -105,7 +105,7 @@ impl std::fmt::Display for UnknownWorkload {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "unknown workload '{}'; valid names: {}",
+            "unknown workload '{}'; valid names: {}, or trace:<file> to replay a recorded trace",
             self.name,
             all_names().collect::<Vec<_>>().join(", ")
         )
@@ -115,13 +115,25 @@ impl std::fmt::Display for UnknownWorkload {
 impl std::error::Error for UnknownWorkload {}
 
 /// Build a workload by name for a system configuration (footprints scale
-/// with the configured capacities). Covers the calibrated suite and the
-/// `adv_*` adversarial scenarios ([`adversarial::ADVERSARIAL`]); unknown
-/// names return an [`UnknownWorkload`] error listing the valid ones.
+/// with the configured capacities). Covers the calibrated suite, the
+/// `adv_*` adversarial scenarios ([`adversarial::ADVERSARIAL`]), and
+/// `trace:<file>` — a recorded trace replayed through
+/// [`TraceWorkload`](crate::trace::TraceWorkload) (the config's core
+/// count and access budgets must match the trace header; the `trimma
+/// replay` subcommand adopts them automatically). Unknown names return an
+/// [`UnknownWorkload`] error listing the valid ones; a failing trace open
+/// embeds the typed [`TraceError`](crate::trace::TraceError)'s message in
+/// the same error shape, so CLI surfacing stays uniform.
 pub fn by_name(
     name: &str,
     cfg: &crate::config::SystemConfig,
 ) -> Result<Box<dyn Workload>, UnknownWorkload> {
+    if let Some(path) = name.strip_prefix("trace:") {
+        return match crate::trace::TraceWorkload::open(std::path::Path::new(path), cfg) {
+            Ok(wl) => Ok(Box::new(wl)),
+            Err(e) => Err(UnknownWorkload::new(format!("{name} ({e})"))),
+        };
+    }
     suite::build(name, cfg)
         .or_else(|| adversarial::build(name, cfg))
         .ok_or_else(|| UnknownWorkload::new(name))
@@ -146,6 +158,55 @@ mod tests {
         for name in all_names() {
             assert!(msg.contains(name), "error must list '{name}'");
         }
+    }
+
+    #[test]
+    fn registry_is_complete_for_every_cli_reachable_scenario() {
+        // Every name a CLI flag can request — the calibrated suite AND the
+        // adversarial scenarios (adv_metadata_bloat regressed out of an
+        // earlier registry test's coverage; never again) — round-trips
+        // through by_name, and the exit-2 error message lists all of them
+        // plus the trace:<file> entry.
+        let cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        let names: Vec<&str> = all_names().collect();
+        assert!(names.contains(&"adv_metadata_bloat"));
+        assert_eq!(names.len(), SUITE.len() + adversarial::ADVERSARIAL.len());
+        for name in &names {
+            let wl = by_name(name, &cfg).unwrap_or_else(|e| panic!("missing {name}: {e}"));
+            assert_eq!(wl.name(), *name, "by_name round-trip");
+            assert!(wl.footprint_bytes() > 0, "{name}");
+        }
+        let msg = by_name("nonexistent", &cfg).unwrap_err().to_string();
+        for name in &names {
+            assert!(msg.contains(name), "error must list '{name}'");
+        }
+        assert!(msg.contains("trace:<file>"), "error must mention trace replay: {msg}");
+    }
+
+    #[test]
+    fn trace_prefix_builds_a_replay_workload() {
+        let path = std::env::temp_dir()
+            .join(format!("trimma-registry-{}.trimtrace", std::process::id()));
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fast_bytes = 1 << 20;
+        cfg.hybrid.slow_bytes = 32 << 20;
+        cfg.hybrid.num_sets = 4;
+        cfg.workload.cores = 2;
+        cfg.workload.accesses_per_core = 600;
+        cfg.workload.warmup_per_core = 200;
+        crate::engine::EngineBuilder::from_config(cfg.clone())
+            .workload("adv_drift")
+            .run_recorded(&path)
+            .unwrap();
+        let spec = format!("trace:{}", path.display());
+        let mut wl = by_name(&spec, &cfg).unwrap();
+        assert_eq!(wl.name(), "adv_drift", "replay reports the recorded label");
+        let a = wl.next(0);
+        assert_eq!(a, by_name("adv_drift", &cfg).unwrap().next(0), "replays the stream");
+        std::fs::remove_file(&path).unwrap();
+        // A failing open keeps the typed detail in the registry error.
+        let err = by_name(&spec, &cfg).unwrap_err();
+        assert!(err.name.contains("trace I/O error"), "{err}");
     }
 
     #[test]

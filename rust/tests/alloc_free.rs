@@ -6,6 +6,12 @@
 //! (`ev_buf`, `walk_buf`, `hot_buf`, the pre-sized free stacks, the MEA
 //! drain scratch) exists to make this hold.
 //!
+//! The trace replay path carries the same guarantee: once a
+//! `TraceWorkload`'s chunk buffers are warm, `next_batch` performs zero
+//! allocations in both I/O modes — buffered inline reads reuse the
+//! reader's pre-sized payload scratch, and the read-ahead mode circulates
+//! its preallocated buffer pool through the SPSC rings (DESIGN.md §13).
+//!
 //! This file contains exactly one #[test] so no concurrent test can
 //! pollute the allocation counter.
 
@@ -112,4 +118,62 @@ fn translate_path_is_allocation_free_in_steady_state() {
             );
         }
     }
+
+    trace_replay_is_allocation_free_in_steady_state();
+}
+
+/// Record a small trace (2 cores, 256-record chunks so the measured
+/// window crosses several refills per core), then draw batches through
+/// both replay modes with the allocation counter armed. Called from the
+/// file's single #[test] (see the module docs). In read-ahead mode the
+/// I/O thread runs concurrently with the measured window, and the global
+/// counter sees its allocations too — so this asserts the whole
+/// buffer-pool circulation, not just the consumer side.
+fn trace_replay_is_allocation_free_in_steady_state() {
+    use trimma::config::{TraceConfig, TraceReplayMode};
+    use trimma::trace::TraceWorkload;
+    use trimma::types::MemAccess;
+    use trimma::workloads::Workload;
+
+    let path =
+        std::env::temp_dir().join(format!("trimma-allocfree-{}.trimtrace", std::process::id()));
+    let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+    cfg.hybrid.fast_bytes = 1 << 20;
+    cfg.hybrid.slow_bytes = 32 << 20;
+    cfg.hybrid.num_sets = 4;
+    cfg.workload.cores = 2;
+    cfg.workload.accesses_per_core = 6_000;
+    cfg.workload.warmup_per_core = 1_000;
+    cfg.trace = TraceConfig { enabled: true, chunk_records: 256, ..TraceConfig::off() };
+    trimma::engine::EngineBuilder::from_config(cfg.clone())
+        .workload("gap_pr")
+        .run_recorded(&path)
+        .expect("trace recording");
+
+    for mode in [TraceReplayMode::Buffered, TraceReplayMode::ReadAhead] {
+        cfg.trace.replay = mode;
+        let mut wl = TraceWorkload::open(&path, &cfg).expect("trace open");
+        let mut batch = vec![MemAccess::read(0, 0); 64];
+        // Warm: prime each cursor past its first refill so every pool
+        // buffer has circulated at least once.
+        for core in 0..2 {
+            for _ in 0..8 {
+                wl.next_batch(core, &mut batch);
+            }
+        }
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        // 20 x 64 records per core: crosses ~5 chunk refills per core,
+        // all mid-stream (far from end-of-trace filler territory).
+        for _ in 0..20 {
+            for core in 0..2 {
+                wl.next_batch(core, &mut batch);
+            }
+        }
+        let delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "{mode:?}: {delta} heap allocation(s) in steady-state trace replay"
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
 }

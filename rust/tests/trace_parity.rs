@@ -1,0 +1,215 @@
+//! Trace record/replay parity: the headline invariant of the trace
+//! subsystem is that replaying a recording reproduces the live run's
+//! merged canonical stat vector **byte-identically** — in the closed
+//! loop, and across every open-loop execution mode (shard counts 1/2/4,
+//! inline and pipelined front ends, both replay I/O strategies).
+//!
+//! Why this must hold: a trace stores exactly the consumed per-core
+//! stream (warmup included), every execution mode consumes exactly
+//! `warmup + accesses` records per core, and workload streams are
+//! per-core pure — so the replayed front end feeds every slice the same
+//! sub-stream the live generator would have (see `trace::replay`'s
+//! module docs). The second half of the file locks the failure side:
+//! corruption anywhere in a trace file surfaces as a *typed*
+//! `TraceError` (wrapped in `EngineError::Trace` by the engine), never
+//! as a panic or a garbage replay.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use trimma::config::presets::DesignPoint;
+use trimma::config::{SystemConfig, TraceReplayMode};
+use trimma::engine::{EngineBuilder, EngineError};
+use trimma::trace::{self, TraceError};
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("trimma-parity-{}-{tag}.trimtrace", std::process::id()))
+}
+
+/// Record `wl` under `cfg` through the closed loop, returning the live
+/// run's canonical stats (the recording tap is pure observation, so the
+/// report `run_recorded` returns *is* the live closed-loop run).
+fn record(cfg: &SystemConfig, wl: &str, path: &Path) -> Vec<u64> {
+    EngineBuilder::from_config(cfg.clone())
+        .workload(wl)
+        .run_recorded(path)
+        .unwrap_or_else(|e| panic!("recording {wl}: {e}"))
+        .stats
+        .canonical()
+}
+
+/// Replay `path` under `cfg` through the sharded open loop.
+fn replay_sharded(
+    cfg: &SystemConfig,
+    path: &Path,
+    mode: TraceReplayMode,
+    shards: usize,
+    pipeline: bool,
+) -> Vec<u64> {
+    let mut cfg = cfg.clone();
+    cfg.trace.replay = mode;
+    EngineBuilder::from_config(cfg)
+        .trace(path)
+        .shards(shards)
+        .pipeline(pipeline)
+        .run_sharded()
+        .unwrap_or_else(|e| panic!("replay x{shards} pipeline={pipeline} {mode:?}: {e}"))
+        .stats
+        .canonical()
+}
+
+/// The full parity matrix, per adversarial scenario: the closed-loop
+/// replay must equal the live closed-loop run, and the sharded replays
+/// (shards 1/2/4 x inline/pipelined x buffered/read-ahead) must equal
+/// the live 1-shard open-loop run (open- and closed-loop stats differ by
+/// design — constant nominal vs. real miss latencies — so each replay is
+/// compared against the live run of its own execution model).
+#[test]
+fn replaying_a_recording_reproduces_the_live_stats_everywhere() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    for wl in ADVERSARIAL {
+        let path = tmp(wl);
+        let live_closed = record(&cfg, wl, &path);
+
+        let replay_closed = EngineBuilder::from_config(cfg.clone())
+            .trace(&path)
+            .run()
+            .unwrap_or_else(|e| panic!("{wl}: closed replay: {e}"));
+        assert_eq!(replay_closed.name, *wl, "{wl}: replay must report the recorded label");
+        assert!(replay_closed.stats.mem_accesses > 0, "{wl}: nothing reached memory");
+        assert_eq!(
+            replay_closed.stats.canonical(),
+            live_closed,
+            "{wl}: closed-loop replay diverged from the live run"
+        );
+
+        let live_sharded = EngineBuilder::from_config(cfg.clone())
+            .workload(*wl)
+            .shards(1)
+            .run_sharded()
+            .unwrap_or_else(|e| panic!("{wl}: live sharded: {e}"))
+            .stats
+            .canonical();
+        for mode in [TraceReplayMode::Buffered, TraceReplayMode::ReadAhead] {
+            for shards in [1usize, 2, 4] {
+                for pipeline in [false, true] {
+                    assert_eq!(
+                        replay_sharded(&cfg, &path, mode, shards, pipeline),
+                        live_sharded,
+                        "{wl}: {mode:?} replay x{shards} pipeline={pipeline} \
+                         diverged from the live open-loop run"
+                    );
+                }
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// Replay is deterministic run-to-run, including the read-ahead mode
+/// (fresh I/O thread, fresh ring schedule each time).
+#[test]
+fn readahead_replay_is_deterministic_run_to_run() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let path = tmp("determinism");
+    record(&cfg, "adv_migration_storm", &path);
+    let a = replay_sharded(&cfg, &path, TraceReplayMode::ReadAhead, 4, true);
+    let b = replay_sharded(&cfg, &path, TraceReplayMode::ReadAhead, 4, true);
+    assert_eq!(a, b);
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// The `trace:<path>` workload-registry entry drives the same replay:
+/// one recording, replayed by name through the ordinary workload-building
+/// path, reproduces the live closed-loop run.
+#[test]
+fn trace_name_prefix_replays_through_the_registry() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let path = tmp("registry");
+    let live = record(&cfg, "adv_pointer_chase", &path);
+    let rep = EngineBuilder::from_config(cfg.clone())
+        .workload(format!("trace:{}", path.display()))
+        .run()
+        .unwrap();
+    assert_eq!(rep.stats.canonical(), live);
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Write a corrupted copy of `good` (mutated by `mutate`), then assert
+/// that both the standalone validator and an engine-level replay attempt
+/// reject it with the expected *typed* error (checked by `is_expected`) —
+/// no panics, no garbage replays.
+fn check_corruption(
+    cfg: &SystemConfig,
+    good: &Path,
+    tag: &str,
+    mutate: impl FnOnce(&mut Vec<u8>),
+    is_expected: impl Fn(&TraceError) -> bool,
+) {
+    let bad = tmp(&format!("corrupt-{tag}"));
+    let mut bytes = std::fs::read(good).unwrap();
+    mutate(&mut bytes);
+    std::fs::write(&bad, &bytes).unwrap();
+
+    let err = trace::validate(&bad).expect_err(tag);
+    assert!(is_expected(&err), "{tag}: unexpected error {err:?}");
+    let engine_err = EngineBuilder::from_config(cfg.clone()).trace(&bad).run().expect_err(tag);
+    match &engine_err {
+        EngineError::Trace(e) => {
+            assert!(is_expected(e), "{tag}: engine wrapped the wrong error: {e:?}")
+        }
+        other => panic!("{tag}: expected EngineError::Trace, got {other:?}"),
+    }
+    std::fs::remove_file(&bad).unwrap();
+}
+
+/// Every corruption mode yields a *typed* error — from the standalone
+/// validator and from an engine-level replay attempt alike — and never a
+/// panic. The validator on the pristine file doubles as the
+/// record-totals check.
+#[test]
+fn corruption_is_rejected_with_typed_errors_not_panics() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let good = tmp("corrupt-src");
+    record(&cfg, "adv_set_thrash", &good);
+
+    let summary = trace::validate(&good).expect("pristine file validates");
+    let w = &cfg.workload;
+    assert_eq!(
+        summary.total_records,
+        u64::from(w.cores) * (w.warmup_per_core + w.accesses_per_core),
+        "trace must store exactly the consumed stream"
+    );
+    // The first chunk's payload starts right after the variable-length
+    // header: 88 fixed bytes, the workload name, the header CRC, then the
+    // 12-byte chunk header.
+    let name_len = {
+        let bytes = std::fs::read(&good).unwrap();
+        u32::from_le_bytes(bytes[84..88].try_into().unwrap()) as usize
+    };
+    let first_payload_byte = 88 + name_len + 4 + 12;
+
+    check_corruption(&cfg, &good, "magic", |b| b[0] ^= 0xFF, |e| {
+        matches!(e, TraceError::BadMagic)
+    });
+    check_corruption(&cfg, &good, "header", |b| b[16] ^= 0xFF, |e| {
+        matches!(e, TraceError::CorruptHeader(_))
+    });
+    check_corruption(
+        &cfg,
+        &good,
+        "truncated",
+        |b| b.truncate(b.len() / 2),
+        |e| matches!(e, TraceError::CorruptIndex(_)),
+    );
+    check_corruption(
+        &cfg,
+        &good,
+        "chunk-crc",
+        move |b| b[first_payload_byte] ^= 0xFF,
+        |e| matches!(e, TraceError::ChunkCrcMismatch { .. }),
+    );
+    std::fs::remove_file(&good).unwrap();
+}
