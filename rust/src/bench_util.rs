@@ -12,6 +12,11 @@
 //! irt_lookup_hit          ... 12.3 ns/iter (4096 reps)
 //! ```
 
+// Panic audit: measurement harness, not a production path — its
+// `unwrap`s are on UTF-8 slices it just built and on JSON it just
+// serialized; aborting a bench run loudly is the desired failure mode.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Instant;
 
 /// Version of the JSON report schema emitted by [`BenchReport::to_json`].

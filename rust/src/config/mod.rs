@@ -178,6 +178,69 @@ impl Default for DecayConfig {
     }
 }
 
+/// Deterministic fault injection + degraded-mode recovery knobs (DESIGN.md
+/// §14). When enabled, the remap controller's [`FaultInjector`]
+/// (`hybrid::fault`) injects three fault classes — transient slow-tier
+/// read failures (recovered by bounded retry with exponential backoff
+/// charged as extra latency), metadata corruption (a bit flip in a sampled
+/// iRT entry, detected by the involution audit and rebuilt from the
+/// surviving inverse direction), and stuck sets (persistent faults that
+/// defeat rebuilding and force the set into identity-mapped quarantine).
+/// Every decision is a pure hash of `(seed, set, per-set event counter)`,
+/// so fault streams are set-stream-local and byte-identical across shard
+/// counts and pipelined/inline execution, exactly like decay.
+///
+/// [`FaultInjector`]: crate::hybrid::fault::FaultInjector
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Master switch; all presets default to `false` (faults off).
+    pub enabled: bool,
+    /// Seed of the fault stream (independent of the workload seed so the
+    /// same traffic can be replayed under different fault universes).
+    pub seed: u64,
+    /// Per-mille of slow-tier demand reads that fail transiently and must
+    /// be retried (each retry re-rolls independently).
+    pub transient_read_milli: u32,
+    /// Per-mille of demand accesses that flip a bit in one of the set's
+    /// live iRT entries (forward direction; the inverse survives).
+    pub metadata_flip_milli: u32,
+    /// Per-mille of sets whose metadata cells are stuck: corruption there
+    /// returns after every rebuild, so the scrub quarantines the set
+    /// instead (sampled once per set from the fault seed).
+    pub stuck_set_milli: u32,
+    /// Bounded retry budget for transient read faults (must be >= 1 when
+    /// faults are enabled; exhaustion quarantines the set).
+    pub max_retries: u32,
+    /// Backoff latency of the first retry, CPU cycles; doubles per attempt
+    /// (`backoff_base << attempt`), charged to the access's slow-tier
+    /// latency.
+    pub backoff_base: u64,
+}
+
+impl FaultConfig {
+    /// Faults disabled, with moderate knob defaults so flipping `enabled`
+    /// alone yields a sane policy: ~2% transient read faults, ~0.5%
+    /// metadata flips, ~0.1% stuck sets, 4 retries from a 64-cycle
+    /// backoff.
+    pub const fn off() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 0xFA17,
+            transient_read_milli: 20,
+            metadata_flip_milli: 5,
+            stuck_set_milli: 1,
+            max_retries: 4,
+            backoff_base: 64,
+        }
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig::off()
+    }
+}
+
 /// Contention scenario shaping the per-phase tenant schedule of a
 /// multi-tenant run (see [`TenantMixConfig`] and DESIGN.md §12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -414,6 +477,8 @@ pub struct HybridConfig {
     pub verify: bool,
     /// Pressure-driven metadata decay knobs (see [`DecayConfig`]).
     pub decay: DecayConfig,
+    /// Deterministic fault injection knobs (see [`FaultConfig`]).
+    pub fault: FaultConfig,
 }
 
 impl HybridConfig {
@@ -517,6 +582,24 @@ impl SystemConfig {
                 return Err("metadata decay requires a remap table scheme".into());
             }
         }
+        if h.fault.enabled {
+            for (milli, knob) in [
+                (h.fault.transient_read_milli, "fault.transient_read_milli"),
+                (h.fault.metadata_flip_milli, "fault.metadata_flip_milli"),
+                (h.fault.stuck_set_milli, "fault.stuck_set_milli"),
+            ] {
+                if milli > 1000 {
+                    return Err(format!("{knob} {milli} out of range 0..=1000"));
+                }
+            }
+            if h.fault.max_retries == 0 {
+                return Err(
+                    "fault.max_retries must be >= 1 (a zero budget cannot recover any \
+                     transient fault)"
+                        .into(),
+                );
+            }
+        }
         let t = &self.tenant_mix;
         if t.enabled {
             if t.tenants == 0 {
@@ -613,6 +696,33 @@ mod tests {
         // Disabled decay never blocks validation, whatever the knobs say.
         let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
         cfg.hybrid.decay.sweep_budget = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_knobs_validate() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fault.enabled = true;
+        cfg.validate().unwrap();
+        cfg.hybrid.fault.transient_read_milli = 1001;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.fault.transient_read_milli = 1000;
+        cfg.hybrid.fault.metadata_flip_milli = 1001;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.fault.metadata_flip_milli = 0;
+        cfg.hybrid.fault.stuck_set_milli = 2000;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.fault.stuck_set_milli = 0;
+        cfg.hybrid.fault.max_retries = 0;
+        assert!(cfg.validate().is_err());
+        // Tag baselines carry no remap metadata; faults are allowed but the
+        // injector is inert there (DESIGN.md §14), so validation passes.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::AlloyCache);
+        cfg.hybrid.fault.enabled = true;
+        cfg.validate().unwrap();
+        // Disabled faults never block validation, whatever the knobs say.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.fault.max_retries = 0;
         cfg.validate().unwrap();
     }
 

@@ -209,6 +209,7 @@ fn hybrid_for(dp: DesignPoint, fast_bytes: u64, slow_bytes: u64, block: u32) -> 
         subblock: false,
         verify: false,
         decay: DecayConfig::off(),
+        fault: FaultConfig::off(),
     }
 }
 
@@ -225,6 +226,15 @@ pub fn with_verify(mut cfg: SystemConfig) -> SystemConfig {
 /// cold after 4 untouched epochs.
 pub fn with_decay(mut cfg: SystemConfig) -> SystemConfig {
     cfg.hybrid.decay.enabled = true;
+    cfg
+}
+
+/// Enable deterministic fault injection with the default fault profile
+/// ([`FaultConfig::off`]'s values with `enabled = true`): ~2% transient
+/// slow reads, ~0.5% metadata flips, ~0.1% stuck sets, 4 retries from a
+/// 64-cycle backoff.
+pub fn with_faults(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.hybrid.fault.enabled = true;
     cfg
 }
 

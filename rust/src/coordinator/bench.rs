@@ -411,6 +411,56 @@ pub fn run_decay_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, 
     out
 }
 
+/// The fault-injection comparison sweep: [`SIM_DESIGNS`] x the fault
+/// subsystem's target scenario (`adv_fault_storm` — a hot working set
+/// hammered under wide sweeps, so flips land on live remapped pairs and
+/// slow-tier reads keep rolling the transient fault), sharded at `shards`
+/// workers, faults off vs on. Records one label per mode —
+/// `fault_injection/off` and `fault_injection/on` — with the aggregate
+/// throughput attached (M mem-steps/s), prints the faults-on throughput
+/// ratio over off (the cost of injection + scrub/rebuild/quarantine
+/// recovery), and returns the `(faults, msteps)` pairs. Construction stays
+/// outside the timed region for the same reason as in
+/// [`run_sharded_sweep`].
+pub fn run_fault_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, f64)> {
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let n = shards.max(1);
+    let mut out = Vec::new();
+    for faults in [false, true] {
+        let mut sims: Vec<ShardedSimulation> = Vec::new();
+        let mut steps = 0.0;
+        for dp in SIM_DESIGNS {
+            let builder = EngineBuilder::new(*dp)
+                .workload("adv_fault_storm")
+                .shards(n)
+                .faults(faults)
+                .configure(move |cfg| {
+                    cfg.workload.accesses_per_core = accesses;
+                    cfg.workload.warmup_per_core = warmup;
+                });
+            let cfg = builder.build_config().expect("sweep preset");
+            steps += cfg.workload.cores as f64 * (accesses + warmup) as f64;
+            let workload = by_name("adv_fault_storm", &cfg).unwrap_or_else(|e| panic!("{e}"));
+            let session = builder.build_sharded().expect("sharded session");
+            sims.push(ShardedSimulation::new(&cfg, workload, session));
+        }
+        let label = format!("fault_injection/{}", if faults { "on" } else { "off" });
+        let (_done, dt) = b.once(&label, move || {
+            for sim in sims {
+                sim.run();
+            }
+        });
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((faults, msteps));
+    }
+    if let [(_, off), (_, on)] = out[..] {
+        println!("  fault injection on: {:.2}x throughput over off", on / off.max(1e-12));
+    }
+    out
+}
+
 /// The trace-replay comparison sweep: record one closed-loop Trimma-C /
 /// `gap_pr` run into a temporary trace file (recording happens **outside**
 /// the timed region — construction discipline as in [`run_sharded_sweep`]),
@@ -518,11 +568,14 @@ pub fn run_tenant_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(u32, 
 /// what CI's bench-smoke asserts); `decay` additionally runs
 /// [`run_decay_sweep`] (the `metadata_decay/{off,on}` labels —
 /// `trimma bench --decay`, also asserted by CI's bench-smoke).
-/// `tenants` additionally runs [`run_tenant_sweep`] (the
-/// `tenant_mix/<n>` labels — `trimma bench --tenants`, gated by CI's
-/// `bench-check --require-labels` pass). `trace` additionally runs
-/// [`run_trace_sweep`] (the `trace_replay/{buffered,readahead}` labels —
-/// `trimma bench --trace`, also gated by the same label pass).
+/// `faults` additionally runs [`run_fault_sweep`] (the
+/// `fault_injection/{off,on}` labels — `trimma bench --faults`, also
+/// asserted by CI's bench-smoke). `tenants` additionally runs
+/// [`run_tenant_sweep`] (the `tenant_mix/<n>` labels — `trimma bench
+/// --tenants`, gated by CI's `bench-check --require-labels` pass).
+/// `trace` additionally runs [`run_trace_sweep`] (the
+/// `trace_replay/{buffered,readahead}` labels — `trimma bench --trace`,
+/// also gated by the same label pass).
 #[allow(clippy::fn_params_excessive_bools)]
 pub fn full_report(
     tag: &str,
@@ -530,6 +583,7 @@ pub fn full_report(
     shards: usize,
     pipeline: bool,
     decay: bool,
+    faults: bool,
     tenants: bool,
     trace: bool,
 ) -> BenchReport {
@@ -547,6 +601,9 @@ pub fn full_report(
     }
     if decay {
         run_decay_sweep(&mut b, quick, shards);
+    }
+    if faults {
+        run_fault_sweep(&mut b, quick, shards);
     }
     if tenants {
         run_tenant_sweep(&mut b, quick, shards);

@@ -87,6 +87,7 @@ pub struct EngineBuilder {
     ideal: bool,
     verify: bool,
     decay: bool,
+    faults: bool,
     tag_match: bool,
     shards: usize,
     pipeline: bool,
@@ -106,6 +107,7 @@ impl EngineBuilder {
             ideal: false,
             verify: false,
             decay: false,
+            faults: false,
             tag_match: false,
             shards: 1,
             pipeline: false,
@@ -170,6 +172,19 @@ impl EngineBuilder {
     /// overridden via [`EngineBuilder::configure`].
     pub fn decay(mut self, decay: bool) -> Self {
         self.decay = decay;
+        self
+    }
+
+    /// Enable deterministic fault injection ([`crate::hybrid::fault`],
+    /// DESIGN.md §14): seeded transient slow-tier read failures, metadata
+    /// bit flips, and stuck sets drive the remap controller's recovery
+    /// paths (bounded retry, scrub/rebuild, quarantine). Knob values come
+    /// from the config's [`FaultConfig`](crate::config::FaultConfig)
+    /// defaults unless overridden via [`EngineBuilder::configure`]. Inert
+    /// on the Ideal oracle and the tag-matching baselines, which carry no
+    /// remap metadata.
+    pub fn faults(mut self, faults: bool) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -253,6 +268,7 @@ impl EngineBuilder {
         }
         cfg.hybrid.verify |= self.verify;
         cfg.hybrid.decay.enabled |= self.decay;
+        cfg.hybrid.fault.enabled |= self.faults;
         if let Some(mix) = self.tenant_mix {
             cfg.tenant_mix = mix;
             cfg.tenant_mix.enabled = true;
@@ -525,6 +541,21 @@ mod tests {
         // Off by default.
         let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
         assert!(!cfg.hybrid.decay.enabled);
+    }
+
+    #[test]
+    fn faults_toggle_enables_the_knob_and_runs() {
+        let b = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .configure(|cfg| cfg.hybrid.fault.metadata_flip_milli = 200)
+            .faults(true);
+        assert!(b.build_config().unwrap().hybrid.fault.enabled);
+        let rep = b.workload("adv_drift").verify(true).run().unwrap();
+        assert!(rep.stats.mem_accesses > 0);
+        assert!(rep.stats.fault_injected > 0, "faults should fire under the oracle");
+        // Off by default.
+        let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
+        assert!(!cfg.hybrid.fault.enabled);
     }
 
     #[test]

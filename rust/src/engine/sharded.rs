@@ -580,6 +580,11 @@ impl ShardedSession {
     /// Returns the combined [`Completion`] (accesses fed, summed demand
     /// latency), exactly what the equivalent [`ShardedSession::push_batch`]
     /// calls would return.
+    // Panic audit: the worker `join()` expect is the intentional
+    // survivor — a shard worker only panics if a controller panicked on
+    // its thread, and re-raising that on the feeding thread (instead of
+    // merging a partial run) is the correct behavior.
+    #[allow(clippy::expect_used)]
     pub fn run_stream<F>(&mut self, feed: F) -> Completion
     where
         F: FnOnce(&mut ShardFeeder),

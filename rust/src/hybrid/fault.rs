@@ -1,0 +1,289 @@
+//! Deterministic fault injection for the hybrid controller (DESIGN.md §14).
+//!
+//! Trimma's remap metadata is a single point of failure: one corrupted
+//! iRT/iRC entry silently misroutes every access to that block. This module
+//! models three fault classes at the controller boundary so the recovery
+//! paths in `hybrid/remap.rs` (scrub, rebuild, quarantine, retry) can be
+//! exercised under load:
+//!
+//! 1. **Transient slow-tier read failures** — the device NACKs a read;
+//!    recovered by bounded retry with deterministic exponential backoff,
+//!    charged as extra slow-tier latency. A spent retry budget surfaces as
+//!    the typed [`RetryExhausted`] error (never an unbounded loop) and the
+//!    controller quarantines the set.
+//! 2. **Metadata corruption** — a bit flip in a sampled remap-table entry
+//!    (the forward, slow-side direction of a live pair). Detected by the
+//!    controller's `audit_set` invariant sweep and repaired from the
+//!    surviving inverse direction in the *same* access, so no corrupt state
+//!    is ever observable from outside.
+//! 3. **Stuck sets** — persistent faults sampled once per set at
+//!    construction; a stuck set cannot be rebuilt and is quarantined on the
+//!    first detected corruption (identity-mapped, direct-to-slow: degraded
+//!    but correct).
+//!
+//! ## Determinism
+//!
+//! Every decision is a pure hash of `(seed, fault class, set, per-set event
+//! counter)` — no wall clock, no global state. The sharded engine partitions
+//! sets geometrically and slices see shard-count-invariant local set ids, so
+//! the per-set decision stream is byte-identical across shard counts and
+//! pipelined/inline frontends (locked by `rust/tests/faults.rs`).
+//!
+//! The Ideal oracle carries no remap metadata and constructs the injector
+//! inert; the tag-based baselines (Alloy, LohHill) never instantiate it.
+//! With `enabled = false` nothing is allocated and every hook reduces to a
+//! single branch, keeping `--faults`-off runs byte-identical to builds that
+//! predate this module.
+
+use crate::config::FaultConfig;
+use crate::types::Cycle;
+
+/// Salt per fault class so the three decision streams are independent even
+/// though they share one per-set counter.
+const SALT_TRANSIENT: u64 = 0x7161_6E73_6965_6E74; // "transient"
+const SALT_FLIP: u64 = 0x666C_6970_0BAD_F00D; // "flip"
+const SALT_STUCK: u64 = 0x5374_7563_6B53_6574; // "StuckSet"
+
+/// Retry budget spent without a successful read: the typed surface of fault
+/// class 1. The controller reacts by charging the full backoff and
+/// quarantining the set; callers probing the injector directly (tests) get
+/// a real `Error` type instead of a hang.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryExhausted {
+    /// Set whose slow-tier read kept failing.
+    pub set: u32,
+    /// Retries attempted (== `FaultConfig::max_retries`).
+    pub attempts: u32,
+    /// Total backoff latency spent across the failed attempts.
+    pub backoff: Cycle,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "slow-tier read on set {} still failing after {} retries ({} cycles of backoff)",
+            self.set, self.attempts, self.backoff
+        )
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
+
+/// Seeded, fully deterministic fault source. One per controller; all state
+/// is preallocated at construction so the hot path stays allocation-free.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    /// Config flag and the controller actually carries remap metadata
+    /// (the Ideal oracle constructs this inert).
+    enabled: bool,
+    /// Per-set event counter: advances on every roll, making each set's
+    /// decision stream independent of every other set's access pattern.
+    counter: Vec<u64>,
+    /// Per-set persistent-fault flag, sampled once at construction.
+    stuck: Vec<bool>,
+}
+
+#[inline]
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultInjector {
+    /// Build the injector for `num_sets` sets. When `enabled` is false no
+    /// arrays are allocated and every hook reduces to a single branch.
+    pub fn new(cfg: FaultConfig, enabled: bool, num_sets: usize) -> Self {
+        let (counter, stuck) = if enabled {
+            let stuck = (0..num_sets)
+                .map(|set| {
+                    splitmix64(cfg.seed ^ SALT_STUCK ^ (set as u64)) % 1000
+                        < cfg.stuck_set_milli as u64
+                })
+                .collect();
+            (vec![0u64; num_sets], stuck)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        FaultInjector { cfg, enabled, counter, stuck }
+    }
+
+    /// Whether the fault hooks are live for this controller.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Whether `set` was sampled as persistently faulty (cannot be rebuilt;
+    /// quarantined on the first detected corruption). `false` when the
+    /// injector is disabled.
+    #[inline]
+    pub fn is_stuck(&self, set: u32) -> bool {
+        !self.stuck.is_empty() && self.stuck[set as usize]
+    }
+
+    /// One deterministic per-mille roll on `set`'s stream: advances the
+    /// set's counter and fires with probability `milli / 1000`. Returns the
+    /// raw hash on a hit so callers can derive secondary choices (e.g. a
+    /// victim cursor) without consuming another roll.
+    #[inline]
+    fn roll(&mut self, set: u32, salt: u64, milli: u32) -> Option<u64> {
+        let c = &mut self.counter[set as usize];
+        *c += 1;
+        let h = splitmix64(
+            self.cfg.seed ^ salt ^ splitmix64((set as u64) << 32 | (*c & 0xFFFF_FFFF)) ^ (*c >> 32),
+        );
+        (h % 1000 < milli as u64).then_some(h)
+    }
+
+    /// Roll for a metadata bit flip on `set`. `Some(h)` means the flip
+    /// fires; `h` is a deterministic cursor the controller uses to pick the
+    /// victim entry. Caller gates on [`Self::enabled`].
+    #[inline]
+    pub fn metadata_flip(&mut self, set: u32) -> Option<u64> {
+        self.roll(set, SALT_FLIP, self.cfg.metadata_flip_milli)
+    }
+
+    /// Roll for a transient slow-tier read failure on `set`.
+    ///
+    /// `None`: the read succeeded first try (the common case). Otherwise
+    /// the injector replays the bounded-retry protocol — each attempt adds
+    /// `backoff_base << attempt` cycles and re-rolls the fault — returning
+    /// `Ok((backoff, retries))` when a retry lands, or the typed
+    /// [`RetryExhausted`] (with the full budget's backoff) when all
+    /// `max_retries` attempts fail. Caller gates on [`Self::enabled`].
+    pub fn transient_read(&mut self, set: u32) -> Option<Result<(Cycle, u32), RetryExhausted>> {
+        self.roll(set, SALT_TRANSIENT, self.cfg.transient_read_milli)?;
+        let mut backoff: Cycle = 0;
+        for attempt in 0..self.cfg.max_retries {
+            backoff =
+                backoff.saturating_add(self.cfg.backoff_base.saturating_mul(1u64 << attempt.min(31)));
+            if self.roll(set, SALT_TRANSIENT, self.cfg.transient_read_milli).is_none() {
+                return Some(Ok((backoff, attempt + 1)));
+            }
+        }
+        Some(Err(RetryExhausted { set, attempts: self.cfg.max_retries, backoff }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(transient: u32, flip: u32, stuck: u32) -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            transient_read_milli: transient,
+            metadata_flip_milli: flip,
+            stuck_set_milli: stuck,
+            ..FaultConfig::off()
+        }
+    }
+
+    #[test]
+    fn disabled_injector_allocates_nothing() {
+        let f = FaultInjector::new(FaultConfig::off(), false, 64);
+        assert!(!f.enabled());
+        assert!(f.counter.is_empty() && f.stuck.is_empty());
+        assert!(!f.is_stuck(7));
+    }
+
+    #[test]
+    fn decision_streams_are_deterministic() {
+        let mut a = FaultInjector::new(cfg(100, 100, 50), true, 4);
+        let mut b = FaultInjector::new(cfg(100, 100, 50), true, 4);
+        for i in 0..2000u64 {
+            let set = (i % 4) as u32;
+            assert_eq!(a.metadata_flip(set), b.metadata_flip(set));
+            assert_eq!(a.transient_read(set), b.transient_read(set));
+        }
+    }
+
+    #[test]
+    fn streams_are_per_set_independent() {
+        // Interleaving accesses to other sets must not perturb set 0's
+        // stream — this is the shard-count-invariance argument.
+        let mut solo = FaultInjector::new(cfg(100, 100, 0), true, 4);
+        let mut mixed = FaultInjector::new(cfg(100, 100, 0), true, 4);
+        let mut got = Vec::new();
+        for _ in 0..500 {
+            got.push(solo.metadata_flip(0));
+        }
+        let mut interleaved = Vec::new();
+        for i in 0..500u32 {
+            mixed.metadata_flip(1 + i % 3);
+            interleaved.push(mixed.metadata_flip(0));
+            mixed.transient_read(1 + i % 3);
+        }
+        assert_eq!(got, interleaved);
+    }
+
+    #[test]
+    fn milli_brackets_fire_rates() {
+        let mut never = FaultInjector::new(cfg(0, 0, 0), true, 1);
+        let mut always = FaultInjector::new(cfg(1000, 1000, 1000), true, 2);
+        for _ in 0..200 {
+            assert_eq!(never.metadata_flip(0), None);
+            assert_eq!(never.transient_read(0), None);
+            assert!(always.metadata_flip(0).is_some());
+        }
+        assert!(always.is_stuck(0) && always.is_stuck(1));
+        let mut clean = FaultInjector::new(cfg(0, 0, 0), true, 8);
+        assert!((0..8).all(|s| !clean.is_stuck(s)));
+        let _ = clean.metadata_flip(0);
+    }
+
+    #[test]
+    fn moderate_rate_fires_sometimes_not_always() {
+        let mut f = FaultInjector::new(cfg(200, 200, 0), true, 1);
+        let fired = (0..1000).filter(|_| f.metadata_flip(0).is_some()).count();
+        assert!(fired > 100 && fired < 350, "~20% expected, got {fired}/1000");
+    }
+
+    #[test]
+    fn exhaustion_is_a_typed_error_with_the_full_backoff() {
+        // milli = 1000: every attempt fails, the budget is spent, and the
+        // caller gets a typed error instead of a loop.
+        let mut c = cfg(1000, 0, 0);
+        c.max_retries = 3;
+        c.backoff_base = 64;
+        let mut f = FaultInjector::new(c, true, 1);
+        let err = f.transient_read(0).expect("must fire at 1000 milli").unwrap_err();
+        assert_eq!(err, RetryExhausted { set: 0, attempts: 3, backoff: 64 + 128 + 256 });
+        let msg = err.to_string();
+        assert!(msg.contains("3 retries"), "{msg}");
+    }
+
+    #[test]
+    fn recovered_retries_charge_exponential_backoff() {
+        // Scan a moderate rate until a fault recovers on a later attempt;
+        // its backoff must be the exact prefix sum of the exponential.
+        let mut c = cfg(500, 0, 0);
+        c.max_retries = 4;
+        c.backoff_base = 10;
+        let mut f = FaultInjector::new(c, true, 1);
+        let mut seen_multi = false;
+        for _ in 0..2000 {
+            if let Some(Ok((backoff, retries))) = f.transient_read(0) {
+                let expect: u64 = (0..retries).map(|a| 10u64 << a).sum();
+                assert_eq!(backoff, expect);
+                seen_multi |= retries > 1;
+            }
+        }
+        assert!(seen_multi, "at 50% per-attempt failure some recovery needs >1 retry");
+    }
+
+    #[test]
+    fn stuck_sampling_is_seed_stable() {
+        let a = FaultInjector::new(cfg(0, 0, 500), true, 64);
+        let b = FaultInjector::new(cfg(0, 0, 500), true, 64);
+        let stuck_a: Vec<bool> = (0..64).map(|s| a.is_stuck(s)).collect();
+        let stuck_b: Vec<bool> = (0..64).map(|s| b.is_stuck(s)).collect();
+        assert_eq!(stuck_a, stuck_b);
+        let n = stuck_a.iter().filter(|&&x| x).count();
+        assert!(n > 16 && n < 48, "~50% of 64 sets expected, got {n}");
+    }
+}

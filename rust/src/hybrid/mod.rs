@@ -13,14 +13,23 @@
 //! * [`mea`] — MemPod's Majority Element Algorithm counters.
 //! * [`decay`] — pressure-driven metadata decay: cold remapped blocks
 //!   migrate home and their table entries reclaim to identity format.
+//! * [`fault`] — seeded deterministic fault injection (transient slow-tier
+//!   read failures, metadata bit flips, stuck sets) driving the remap
+//!   engine's recovery paths: bounded retry, scrub/rebuild, quarantine.
 //!
 //! All controllers implement [`Controller`]: the simulation engine feeds
 //! them LLC-miss accesses in `(set, per-set index)` physical form and gets
 //! back the demand latency; everything else (migration, metadata updates)
 //! happens off the critical path but still occupies device banks.
+//!
+//! Panic audit (crate lint: `clippy::unwrap_used`): the controller hot
+//! paths contain no production `unwrap`/`expect` at all — fallible
+//! conditions either return typed errors at construction or are
+//! `debug_assert`ed invariants the verify oracle re-checks.
 
 pub mod alloy;
 pub mod decay;
+pub mod fault;
 pub mod lohhill;
 pub mod mea;
 pub mod remap;

@@ -32,6 +32,7 @@
 
 use crate::config::{Mode, RemapCacheKind, ReplacementPolicy, SystemConfig};
 use crate::hybrid::decay::DecayState;
+use crate::hybrid::fault::FaultInjector;
 use crate::hybrid::mea::MeaTracker;
 use crate::hybrid::{Access, Controller};
 use crate::mem::MemDevice;
@@ -103,6 +104,12 @@ pub struct RemapController {
     mea: Vec<MeaTracker>,
     /// Pressure-driven metadata decay bookkeeping (DESIGN.md §11).
     decay: DecayState,
+    /// Deterministic fault source (DESIGN.md §14); inert unless enabled.
+    fault: FaultInjector,
+    /// Per-set degraded-mode flag: a quarantined set is pinned to identity
+    /// mapping (no fills, migration, or decay) after an unrecoverable
+    /// fault. Allocated only when fault injection is enabled.
+    quarantined: Vec<bool>,
     rng: Rng64,
     stats: Stats,
     /// Reusable table-update event buffers. Two, because a table update
@@ -222,6 +229,9 @@ impl RemapController {
         // The Ideal oracle has no metadata to trim: decay stays inert.
         let decay =
             DecayState::new(h.decay, h.decay.enabled && !ideal, n_sets, layout.fast_per_set);
+        // Likewise no metadata to corrupt: the injector stays inert there.
+        let fault = FaultInjector::new(h.fault, h.fault.enabled && !ideal, n_sets);
+        let quarantined = if fault.enabled() { vec![false; n_sets] } else { Vec::new() };
 
         RemapController {
             layout,
@@ -236,6 +246,8 @@ impl RemapController {
             lru,
             mea,
             decay,
+            fault,
+            quarantined,
             rng: Rng64::new(cfg.workload.seed ^ 0x5107),
             stats: Stats::default(),
             ev_buf: Vec::with_capacity(8),
@@ -867,6 +879,15 @@ impl RemapController {
             AccessKind::Write => self.stats.mem_writes += 1,
         }
 
+        // Fault class 2 (DESIGN.md §14): metadata bit flip, injected and
+        // scrubbed within this same access — no corrupt mapping is ever
+        // observable from outside the controller.
+        if self.fault.enabled() && !self.is_quarantined(set) {
+            if let Some(cursor) = self.fault.metadata_flip(set) {
+                self.inject_flip(set, cursor, now);
+            }
+        }
+
         // 1. metadata lookup
         let (device, meta_lat) = self.lookup(set, idx, now);
         self.stats.metadata_cycles += meta_lat;
@@ -888,6 +909,7 @@ impl RemapController {
                 sub_fill = Some(device);
             }
         }
+        let mut retry_exhausted = false;
         let data_lat = if is_fast {
             let r = self.fast.access(daddr, LINE_BYTES, kind, t0);
             self.stats.fast_served += 1;
@@ -921,14 +943,43 @@ impl RemapController {
             let r = self.slow.access(saddr, LINE_BYTES, kind, t0);
             self.stats.slow_served += 1;
             self.stats.slow_traffic_bytes += LINE_BYTES as u64;
-            self.stats.slow_data_cycles += r.done - t0;
-            r.done - t0
+            let mut dl = r.done - t0;
+            // Fault class 1: transient slow-tier read failure, recovered by
+            // bounded retry; the backoff is demand latency on the slow tier.
+            if self.fault.enabled() && kind == AccessKind::Read && !self.is_quarantined(set) {
+                match self.fault.transient_read(set) {
+                    None => {}
+                    Some(Ok((backoff, retries))) => {
+                        self.stats.fault_injected += 1;
+                        self.stats.fault_retried += retries as u64;
+                        dl += backoff;
+                    }
+                    Some(Err(err)) => {
+                        // Typed exhaustion: charge the whole budget's
+                        // backoff now, quarantine once `done` is known.
+                        self.stats.fault_injected += 1;
+                        self.stats.fault_retried += err.attempts as u64;
+                        dl += err.backoff;
+                        retry_exhausted = true;
+                    }
+                }
+            }
+            self.stats.slow_data_cycles += dl;
+            dl
         };
         self.stats.useful_bytes += LINE_BYTES as u64;
 
         // 3. off the critical path: insertion / migration
         let done = t0 + data_lat;
-        if let Some(slot) = sub_fill {
+        if retry_exhausted {
+            // The device kept failing past the retry budget: take the set
+            // out of service (identity-mapped, direct-to-slow).
+            self.quarantine_set(set, done);
+        }
+        if self.is_quarantined(set) {
+            // Degraded mode: no fills, migration, or decay — the set stays
+            // identity-mapped and every access goes straight to its home.
+        } else if let Some(slot) = sub_fill {
             // Install the fetched line into the partially-present block.
             let f = self.layout.fast_per_set as usize;
             self.present[set as usize * f + slot as usize] |=
@@ -954,7 +1005,11 @@ impl RemapController {
             }
         }
         // Cache mode paces decay epochs by demand-access count.
-        if self.decay.enabled() && self.mode == Mode::Cache && self.decay.on_access(set) {
+        if self.decay.enabled()
+            && self.mode == Mode::Cache
+            && !self.is_quarantined(set)
+            && self.decay.on_access(set)
+        {
             self.decay_epoch(set, done);
         }
 
@@ -985,58 +1040,22 @@ impl RemapController {
             }
         }
     }
-}
 
-impl Controller for RemapController {
+    // ---------------- fault injection & recovery (DESIGN.md §14) ----------------
+
+    /// Whether `set` is in degraded identity-mapped mode.
     #[inline]
-    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
-        self.do_access(set, idx, line, kind, now)
+    fn is_quarantined(&self, set: u32) -> bool {
+        !self.quarantined.is_empty() && self.quarantined[set as usize]
     }
 
-    /// Batched entry point: one dispatch, then a monomorphic loop over
-    /// `Self::do_access` — stat-for-stat identical to `N` single
-    /// `access` calls (locked by `rust/tests/perf_harness.rs`).
-    fn access_block(&mut self, batch: &[Access]) -> Cycle {
-        let mut total = 0;
-        for a in batch {
-            total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
-        }
-        total
-    }
-
-    fn finalize(&mut self) {
-        self.stats.metadata_bytes_used = self.table.metadata_bytes_used();
-        self.stats.metadata_bytes_reserved = self.layout.meta_per_set
-            * self.layout.num_sets as u64
-            * self.layout.block_bytes as u64;
-        self.stats.donated_slots = self.table.donated_blocks();
-    }
-
-    fn reset_stats(&mut self) {
-        self.stats = Stats::default();
-    }
-
-    fn stats(&self) -> &Stats {
-        &self.stats
-    }
-
-    fn layout(&self) -> &SetLayout {
-        &self.layout
-    }
-
-    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
-        Some(self.table.lookup(set, idx))
-    }
-
-    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
-        Some(self.table.nonidentity_entries(set))
-    }
-
-    /// Deep invariant sweep of one set: every slot state must agree with
+    /// Deep invariant audit of one set: every slot state must agree with
     /// the remap table, donated-slot accounting must match iRT occupancy,
-    /// and every vacant slot must be reachable through the free stack.
-    /// The verify oracle calls this periodically and at finalize.
-    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+    /// and every vacant slot must be reachable through the free stack —
+    /// the same checks the verify oracle runs through
+    /// [`Controller::debug_check_set`], callable by the controller itself
+    /// as the detection half of [`Self::scrub_set`].
+    pub fn audit_set(&self, set: u32) -> Result<(), String> {
         let f = self.layout.fast_per_set;
         let mut non_meta_reserved = 0u64;
         for s in 0..f {
@@ -1114,6 +1133,159 @@ impl Controller for RemapController {
             }
         }
         Ok(())
+    }
+
+    /// Inject fault class 2: corrupt the forward (slow-side) entry of a
+    /// live remapped pair in `set`, then immediately scrub. `cursor` seeds
+    /// the deterministic victim choice. An all-identity set has no entry to
+    /// corrupt and the flip is dropped.
+    fn inject_flip(&mut self, set: u32, cursor: u64, t: Cycle) {
+        let f = self.layout.fast_per_set;
+        let start = cursor % f;
+        let mut victim = None;
+        for i in 0..f {
+            let s = (start + i) % f;
+            // The flipped device index `s ^ 1` must stay inside the fast
+            // tier so the corruption is an in-range, plausible entry.
+            if (s ^ 1) < f {
+                if let Slot::Data { phys, .. } = self.slot(set, s) {
+                    victim = Some((s, phys as u64));
+                    break;
+                }
+            }
+        }
+        let Some((s, p)) = victim else {
+            return;
+        };
+        // Flip the low bit of the forward entry's device index through the
+        // normal table write so the table's internal occupancy bookkeeping
+        // stays coherent — the *mapping* is now wrong (slot `s ^ 1` does
+        // not hold block `p`), which is exactly what `audit_set` detects.
+        let mut ev = self.take_ev_buf();
+        ev.clear();
+        self.table.set_mapping(set, p, s ^ 1, &mut ev);
+        debug_assert!(ev.is_empty(), "rewriting a live entry must not move metadata blocks");
+        self.handle_events(set, &ev, t);
+        self.put_ev_buf(ev);
+        // Any cached copy of the entry is equally suspect: drop it.
+        self.rc_update(set, p);
+        self.stats.fault_injected += 1;
+        self.scrub_set(set, t);
+        debug_assert!(
+            self.audit_set(set).is_ok(),
+            "scrub must leave the set consistent (rebuilt or quarantined)"
+        );
+    }
+
+    /// Scrub `set`: audit its invariants, and on corruption rebuild the
+    /// forward direction from the surviving inverse entries — or quarantine
+    /// the set when it is stuck (persistent fault) or the rebuild fails.
+    /// On a healthy set this is a pure read: no stats, table, or latency
+    /// side effects (locked by `rust/tests/faults.rs`).
+    pub fn scrub_set(&mut self, set: u32, t: Cycle) {
+        if self.audit_set(set).is_ok() {
+            return;
+        }
+        self.stats.fault_scrubbed += 1;
+        if !self.fault.is_stuck(set) {
+            self.rebuild_set(set, t);
+            if self.audit_set(set).is_ok() {
+                return;
+            }
+        }
+        self.quarantine_set(set, t);
+    }
+
+    /// Rebuild forward entries from the surviving inverse direction: slot
+    /// `s` holding block `p` guarantees the inverse entry `s -> p`, so the
+    /// forward entry must read `p -> s`; restore it wherever the pair
+    /// disagrees. Repairs are real table writes (metadata traffic, remap
+    /// cache invalidation) charged at `t`.
+    fn rebuild_set(&mut self, set: u32, t: Cycle) {
+        for s in 0..self.layout.fast_per_set {
+            let p = self.table.lookup(set, s);
+            if p != s && self.table.lookup(set, p) != s {
+                self.table_set(set, p, s, t);
+                self.stats.fault_rebuilt += 1;
+            }
+        }
+    }
+
+    /// Take `set` out of service: migrate every resident foreign block home
+    /// through the normal eviction path (which restores the involution and
+    /// free-stack invariants by construction), leaving the set pinned to
+    /// identity mapping. Fills, MEA migration, decay, and further fault
+    /// injection are disabled for it — degraded but correct.
+    fn quarantine_set(&mut self, set: u32, t: Cycle) {
+        if self.is_quarantined(set) {
+            return;
+        }
+        for s in 0..self.layout.fast_per_set {
+            if matches!(self.slot(set, s), Slot::Data { .. }) {
+                self.evict_slot(set, s, t);
+            }
+        }
+        if self.quarantined.is_empty() {
+            // Reachable only through a manual `scrub_set` call with faults
+            // disabled; grow lazily rather than carrying the vector always.
+            self.quarantined = vec![false; self.layout.num_sets as usize];
+        }
+        self.quarantined[set as usize] = true;
+        self.stats.fault_quarantined += 1;
+        debug_assert_eq!(self.table.nonidentity_entries(set), 0);
+    }
+}
+
+impl Controller for RemapController {
+    #[inline]
+    fn access(&mut self, set: u32, idx: u64, line: u32, kind: AccessKind, now: Cycle) -> Cycle {
+        self.do_access(set, idx, line, kind, now)
+    }
+
+    /// Batched entry point: one dispatch, then a monomorphic loop over
+    /// `Self::do_access` — stat-for-stat identical to `N` single
+    /// `access` calls (locked by `rust/tests/perf_harness.rs`).
+    fn access_block(&mut self, batch: &[Access]) -> Cycle {
+        let mut total = 0;
+        for a in batch {
+            total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
+        }
+        total
+    }
+
+    fn finalize(&mut self) {
+        self.stats.metadata_bytes_used = self.table.metadata_bytes_used();
+        self.stats.metadata_bytes_reserved = self.layout.meta_per_set
+            * self.layout.num_sets as u64
+            * self.layout.block_bytes as u64;
+        self.stats.donated_slots = self.table.donated_blocks();
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = Stats::default();
+    }
+
+    fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    fn layout(&self) -> &SetLayout {
+        &self.layout
+    }
+
+    fn debug_translate(&self, set: u32, idx: u64) -> Option<u64> {
+        Some(self.table.lookup(set, idx))
+    }
+
+    fn debug_nonidentity_entries(&self, set: u32) -> Option<u64> {
+        Some(self.table.nonidentity_entries(set))
+    }
+
+    /// Deep invariant sweep of one set; see [`RemapController::audit_set`],
+    /// which the controller's own scrub pass shares. The verify oracle
+    /// calls this periodically and at finalize.
+    fn debug_check_set(&self, set: u32) -> Result<(), String> {
+        self.audit_set(set)
     }
 }
 
@@ -1374,6 +1546,137 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn with_faults(mut cfg: SystemConfig, flip: u32, transient: u32, stuck: u32) -> SystemConfig {
+        cfg.hybrid.fault.enabled = true;
+        cfg.hybrid.fault.metadata_flip_milli = flip;
+        cfg.hybrid.fault.transient_read_milli = transient;
+        cfg.hybrid.fault.stuck_set_milli = stuck;
+        cfg
+    }
+
+    fn storm(c: &mut RemapController, accesses: u64) -> Cycle {
+        let span = c.layout.slow_per_set.min(4000);
+        let sets = c.layout.num_sets as u64;
+        let mut total = 0;
+        let mut t = 0;
+        for n in 0..accesses {
+            let set = (n % sets) as u32;
+            let idx = c.layout.fast_per_set + (n * 7) % span;
+            let kind = if n % 5 == 0 { AccessKind::Write } else { AccessKind::Read };
+            total += c.access(set, idx, 0, kind, t);
+            t += 900;
+        }
+        total
+    }
+
+    #[test]
+    fn flip_is_scrubbed_within_the_access() {
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 300, 0, 0);
+        let mut c = RemapController::new(&cfg, false);
+        storm(&mut c, 20_000);
+        assert!(c.stats.fault_injected > 0, "flips must fire at 30%");
+        assert_eq!(
+            c.stats.fault_scrubbed, c.stats.fault_injected,
+            "every landed flip must be detected by the audit"
+        );
+        assert!(c.stats.fault_rebuilt > 0, "non-stuck sets rebuild from the inverse");
+        assert_eq!(c.stats.fault_quarantined, 0, "nothing is stuck here");
+        for set in 0..c.layout.num_sets {
+            c.audit_set(set).expect("post-run sets must be consistent");
+        }
+    }
+
+    #[test]
+    fn stuck_set_quarantines_and_serves_identity() {
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 500, 0, 1000);
+        let mut c = RemapController::new(&cfg, false);
+        let t_end = storm(&mut c, 20_000);
+        assert!(c.stats.fault_quarantined > 0, "every set is stuck: first flip quarantines");
+        assert_eq!(c.stats.fault_rebuilt, 0, "stuck sets are never rebuilt");
+        for set in 0..c.layout.num_sets {
+            c.audit_set(set).expect("quarantined set stays consistent");
+            if c.quarantined[set as usize] {
+                assert_eq!(c.table.nonidentity_entries(set), 0, "pinned to identity");
+            }
+        }
+        // Degraded mode still serves accesses (direct-to-slow).
+        let before = c.stats.slow_served;
+        let (set, idx) = slow_idx(&c, 11);
+        c.access(set, idx, 0, AccessKind::Read, t_end);
+        assert_eq!(c.stats.slow_served, before + 1);
+    }
+
+    #[test]
+    fn transient_faults_add_backoff_latency() {
+        let mut off = RemapController::new(&small(DesignPoint::TrimmaCache), false);
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 0, 400, 0);
+        let mut on = RemapController::new(&cfg, false);
+        storm(&mut off, 5_000);
+        storm(&mut on, 5_000);
+        assert!(on.stats.fault_injected > 0);
+        assert!(on.stats.fault_retried >= on.stats.fault_injected, "each fault retries >= once");
+        assert!(
+            on.stats.slow_data_cycles > off.stats.slow_data_cycles,
+            "backoff must be charged as slow-tier demand latency"
+        );
+        assert_eq!(on.stats.slow_served, off.stats.slow_served, "recovered reads still serve");
+    }
+
+    #[test]
+    fn faulted_latency_breakdown_still_sums() {
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 200, 300, 20);
+        let mut c = RemapController::new(&cfg, false);
+        let total = {
+            let span = c.layout.slow_per_set.min(4000);
+            let mut sum = 0;
+            let mut t = 0;
+            for n in 0..10_000u64 {
+                let set = (n % 4) as u32;
+                let idx = c.layout.fast_per_set + (n * 3) % span;
+                sum += c.access(set, idx, 0, AccessKind::Read, t);
+                t += 1100;
+            }
+            sum
+        };
+        let s = c.stats();
+        assert!(s.fault_injected > 0);
+        assert_eq!(
+            s.metadata_cycles + s.fast_data_cycles + s.slow_data_cycles,
+            total,
+            "retry backoff must stay inside the demand-latency breakdown"
+        );
+    }
+
+    #[test]
+    fn retry_exhaustion_quarantines_the_set() {
+        // transient_read_milli = 1000: the first slow read fails every
+        // retry; the typed exhaustion quarantines instead of looping.
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 0, 1000, 0);
+        let mut c = RemapController::new(&cfg, false);
+        let (set, idx) = slow_idx(&c, 3);
+        c.access(set, idx, 0, AccessKind::Read, 0);
+        assert!(c.quarantined[set as usize]);
+        assert_eq!(c.stats.fault_quarantined, 1);
+        assert_eq!(c.stats.fault_retried, cfg.hybrid.fault.max_retries as u64);
+        // Quarantined: the injector is bypassed, accesses still complete.
+        c.access(set, idx, 0, AccessKind::Read, 500_000);
+        assert_eq!(c.stats.fault_injected, 1, "no further injection after quarantine");
+        assert_eq!(c.stats.slow_served, 2, "identity-mapped set serves direct-to-slow");
+        c.audit_set(set).expect("degraded set stays consistent");
+    }
+
+    #[test]
+    fn scrub_on_clean_set_is_a_stats_identical_noop() {
+        let cfg = with_faults(small(DesignPoint::TrimmaCache), 0, 0, 0);
+        let mut c = RemapController::new(&cfg, false);
+        storm(&mut c, 2_000);
+        let before = c.stats.canonical();
+        for set in 0..c.layout.num_sets {
+            c.scrub_set(set, 1 << 40);
+        }
+        assert_eq!(c.stats.canonical(), before, "clean scrub must be a pure read");
     }
 
     #[test]

@@ -62,6 +62,22 @@
 //!     .unwrap();
 //! println!("IPC-proxy perf: {:.4}", report.performance());
 //! ```
+//!
+//! ## Panic policy
+//!
+//! Production code returns typed errors ([`engine::EngineError`],
+//! [`trace::TraceError`]) for everything a caller could anticipate;
+//! `unwrap`/`expect` are linted crate-wide (below) and each survivor
+//! carries a targeted `#[allow]` with its infallibility argument — see
+//! the panic-audit notes in the module docs of [`trace::format`],
+//! [`trace::replay`], [`sim`], and [`engine::sharded`]. Test code is
+//! exempt (the `cfg_attr` gate), as are the harness-style modules that
+//! opt out at their own top with a stated reason.
+
+// Fallible-by-construction `unwrap`/`expect` must not reach production
+// paths: CI runs clippy with `-D warnings`, which turns these into hard
+// errors everywhere an `#[allow]` doesn't argue otherwise.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod bench_util;
 pub(crate) mod cachesim;

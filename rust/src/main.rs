@@ -3,8 +3,8 @@
 //! ```text
 //! trimma list                               available workloads / presets
 //! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
-//!            [--accesses N] [--ideal] [--verify] [--decay] [--ratio R]
-//!            [--block B]
+//!            [--accesses N] [--ideal] [--verify] [--decay] [--faults]
+//!            [--ratio R] [--block B]
 //!            [--shards N]                  N>0: open-loop sharded run
 //!                                          across N worker threads
 //!            [--pipeline]                  pipelined front end (needs
@@ -22,7 +22,7 @@
 //!               [--shards N] [--pipeline]   replay a recorded trace (the
 //!                                           header's run shape is adopted)
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
-//!              [--pipeline] [--decay] [--tenants] [--trace]
+//!              [--pipeline] [--decay] [--faults] [--tenants] [--trace]
 //!                                           hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json [--require-labels L1,L2,...]
@@ -46,6 +46,8 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma list                               workloads / designs / figures
   trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
              [--accesses N] [--cores N] [--ideal] [--verify] [--decay]
+             [--faults]     deterministic fault injection + recovery
+                            (scrub/rebuild/quarantine; DESIGN.md §14)
              [--ratio R] [--block B]
              [--shards N]   N>0: open-loop sharded run across N workers
              [--pipeline]   pipelined front end (needs --shards N, N>=1)
@@ -67,11 +69,11 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
   trimma replay --trace FILE.trimtrace [--design trimma-c] [--mem ddr5+nvm]
                 [--readahead]  double-buffered read-ahead I/O thread
                                (default: buffered chunked reads)
-                [--shards N] [--pipeline] [--verify] [--decay]
+                [--shards N] [--pipeline] [--verify] [--decay] [--faults]
                                replay a recorded trace; cores/accesses/
                                warmup are adopted from the trace header
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
-               [--decay] [--tenants] [--trace]
+               [--decay] [--faults] [--tenants] [--trace]
   trimma bench-check --report bench.json [--require-labels L1,L2,...]
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -172,6 +174,7 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let mut cfg = build_cfg(get);
     cfg.hybrid.verify |= has("--verify");
     cfg.hybrid.decay.enabled |= has("--decay");
+    cfg.hybrid.fault.enabled |= has("--faults");
     let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
     let mut job = Job::new(format!("{}:{}", cfg.name, wl), cfg, &wl);
     job.ideal = has("--ideal");
@@ -374,6 +377,7 @@ fn replay(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     cfg.workload.warmup_per_core = summary.meta.warmup_per_core;
     cfg.hybrid.verify |= has("--verify");
     cfg.hybrid.decay.enabled |= has("--decay");
+    cfg.hybrid.fault.enabled |= has("--faults");
     if has("--readahead") {
         cfg.trace.replay = TraceReplayMode::ReadAhead;
     }
@@ -425,10 +429,11 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let shards: usize = get("--shards").map(|v| v.parse().expect("--shards")).unwrap_or(2);
     let pipeline = has("--pipeline");
     let decay = has("--decay");
+    let faults = has("--faults");
     let tenants = has("--tenants");
     let trace = has("--trace");
     let report = trimma::coordinator::bench::full_report(
-        &tag, quick, shards, pipeline, decay, tenants, trace,
+        &tag, quick, shards, pipeline, decay, faults, tenants, trace,
     );
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",

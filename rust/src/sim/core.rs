@@ -325,6 +325,11 @@ impl MissSink for PipelineSink {
 /// drains the hand-off ring into `feed` in arrival order. Merged stats
 /// are byte-identical to the inline [`OpenLoop`] run (see the module
 /// docs for why).
+// Panic audit: the router `join()` expect is the intentional survivor —
+// the router thread only panics if a controller panicked under it, and
+// propagating that panic (not swallowing it into a half-merged run) is
+// the correct behavior for a deterministic simulation.
+#[allow(clippy::expect_used)]
 pub(super) fn run_pipelined<T: AccessTap>(
     core: &mut ExecCore,
     feed: &mut ShardFeeder,

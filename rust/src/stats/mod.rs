@@ -92,6 +92,20 @@ pub struct Stats {
     /// decay sweep.
     pub decay_reclaims: u64,
 
+    // ---- fault injection & recovery (DESIGN.md §14) ----
+    /// Faults injected by the deterministic injector (all three classes:
+    /// transient reads, metadata flips, stuck-set corruption).
+    pub fault_injected: u64,
+    /// Transient-read retry attempts (each charged exponential backoff).
+    pub fault_retried: u64,
+    /// Scrub passes that detected and reacted to metadata corruption.
+    pub fault_scrubbed: u64,
+    /// Corrupted iRT entries rebuilt from the surviving inverse direction.
+    pub fault_rebuilt: u64,
+    /// Sets quarantined to degraded identity mapping (stuck metadata or
+    /// retry exhaustion).
+    pub fault_quarantined: u64,
+
     // ---- metadata storage (sampled at end of run) ----
     /// Bytes of remap-table storage currently allocated in the fast tier.
     pub metadata_bytes_used: u64,
@@ -166,6 +180,11 @@ macro_rules! with_stat_counters {
             (decay_epochs, sum),
             (decay_checked, sum),
             (decay_reclaims, sum),
+            (fault_injected, sum),
+            (fault_retried, sum),
+            (fault_scrubbed, sum),
+            (fault_rebuilt, sum),
+            (fault_quarantined, sum),
             (metadata_bytes_used, gauge),
             (metadata_bytes_reserved, gauge),
             (donated_slots, gauge),
@@ -338,11 +357,11 @@ mod tests {
 
     #[test]
     fn canonical_serializes_the_full_vector() {
-        // Every one of the 41 counters must appear — `cache_accesses` was
+        // Every one of the 46 counters must appear — `cache_accesses` was
         // historically omitted, leaving golden snapshots blind to it.
         let s = Stats { cache_accesses: 7, ..Default::default() };
         let c = s.canonical();
-        assert_eq!(c.matches('=').count(), 41);
+        assert_eq!(c.matches('=').count(), 46);
         assert!(c.ends_with("cache_accesses=7"), "{c}");
     }
 
@@ -354,7 +373,7 @@ mod tests {
         let c = Stats::default().canonical();
         assert_eq!(c.matches('=').count(), NUM_STAT_COUNTERS);
         assert_eq!(c.split(';').count(), NUM_STAT_COUNTERS);
-        assert_eq!(NUM_STAT_COUNTERS, 41);
+        assert_eq!(NUM_STAT_COUNTERS, 46);
     }
 
     #[test]

@@ -45,6 +45,16 @@
 //! on its own cursor without scanning other cores' interleaved chunks,
 //! so a replayed core can run arbitrarily far ahead of another without
 //! the reader buffering the gap.
+//!
+//! ## Panic audit (crate lint: `clippy::unwrap_used`)
+//!
+//! Every fallible parse in this module returns a typed [`TraceError`].
+//! The surviving `unwrap()`s — marked `#[allow(clippy::unwrap_used)]` on
+//! their functions — are all `try_into()` conversions of fixed-width
+//! subslices whose bounds are compile-visible constants (`rec[0..8]`,
+//! `fixed[off..off + 4]`, …); they cannot fail without an arithmetic bug
+//! in this file itself, which the round-trip and corruption tests below
+//! would catch.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -360,6 +370,8 @@ fn record(addr: u64, write: bool, gap: u32) -> MemAccess {
 /// Decode one chunk payload of `count` records into `out` (cleared
 /// first). Returns a human-readable reason on malformed input; the caller
 /// wraps it into [`TraceError::MalformedChunk`].
+// Fixed-width subslice conversions only (see the module's panic audit).
+#[allow(clippy::unwrap_used)]
 pub(crate) fn decode_chunk(
     encoding: Encoding,
     payload: &[u8],
@@ -443,6 +455,8 @@ struct ParsedHeader {
     header_len: u64,
 }
 
+// Fixed-width subslice conversions only (see the module's panic audit).
+#[allow(clippy::unwrap_used)]
 fn read_header(file: &mut File) -> Result<ParsedHeader, TraceError> {
     let mut fixed = [0u8; HEADER_FIXED];
     file.read_exact(&mut fixed)
@@ -655,6 +669,8 @@ impl TraceReader {
     /// parse + CRC, chunk bounds, and per-core record totals. Does not
     /// touch chunk payloads — pair with [`TraceReader::validate_chunks`]
     /// for a full walk.
+    // Fixed-width subslice conversions only (see the module's panic audit).
+    #[allow(clippy::unwrap_used)]
     pub fn open(path: &Path) -> Result<TraceReader, TraceError> {
         let mut file = File::open(path)?;
         let h = read_header(&mut file)?;
@@ -765,6 +781,8 @@ impl TraceReader {
         self.read_chunk(chunk_no, out)
     }
 
+    // Fixed-width subslice conversions only (see the module's panic audit).
+    #[allow(clippy::unwrap_used)]
     fn read_chunk(&mut self, chunk_no: u32, out: &mut Vec<MemAccess>) -> Result<(), TraceError> {
         let c = self.chunks[chunk_no as usize];
         let total = CHUNK_HEADER + c.payload_len as usize + 4;

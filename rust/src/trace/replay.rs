@@ -41,6 +41,17 @@
 //! `2 * GEN_BATCH` accesses per core. Draws past end-of-trace therefore
 //! return an inert filler access (`read 0, gap 0`) — provably never
 //! consumed, merely buffered and dropped.
+//!
+//! ## Panic audit (crate lint: `clippy::unwrap_used`)
+//!
+//! All *anticipatable* failures — corruption, truncation, config
+//! mismatch, thread-spawn failure — surface as typed [`TraceError`]s at
+//! [`TraceWorkload::open`]. The deliberate panics in [`refill`] are the
+//! one survivor class: a chunk read failing *mid-run*, after open-time
+//! validation passed, means the file changed or the disk failed under
+//! us; `Workload::next` has no error channel (by design — the hot path
+//! returns accesses, not `Result`s), and no caller could meaningfully
+//! continue a half-replayed deterministic run anyway.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -97,8 +108,15 @@ fn take_failure(failure: &Mutex<Option<String>>) -> Option<String> {
 
 impl ReadAhead {
     /// Move `reader` onto a spawned I/O thread and wire up the rings.
-    /// `depth` is `read_ahead_chunks` (ring depth per core).
-    fn spawn(mut reader: TraceReader, cores: usize, depth: usize, chunk_records: usize) -> Self {
+    /// `depth` is `read_ahead_chunks` (ring depth per core). Thread
+    /// creation can fail under resource exhaustion, so this surfaces
+    /// [`TraceError::Io`] instead of panicking.
+    fn spawn(
+        mut reader: TraceReader,
+        cores: usize,
+        depth: usize,
+        chunk_records: usize,
+    ) -> Result<Self, TraceError> {
         let ring_cap = depth.next_power_of_two();
         let mut data_tx = Vec::with_capacity(cores);
         let mut rings = Vec::with_capacity(cores);
@@ -179,8 +197,10 @@ impl ReadAhead {
                 // Dropping `data_tx` here closes every ring: consumers see
                 // `None` after draining whatever was staged.
             })
-            .expect("failed to spawn the trace read-ahead thread");
-        ReadAhead { rings, recycle, stop, failure, handle: Some(handle) }
+            .map_err(|e| {
+                TraceError::Io(format!("failed to spawn the trace read-ahead thread: {e}"))
+            })?;
+        Ok(ReadAhead { rings, recycle, stop, failure, handle: Some(handle) })
     }
 }
 
@@ -291,7 +311,7 @@ impl TraceWorkload {
                 cores,
                 cfg.trace.read_ahead_chunks.max(1) as usize,
                 chunk_records,
-            )),
+            )?),
         };
         Ok(TraceWorkload { meta, cursors, source })
     }

@@ -38,6 +38,12 @@
 //! seeded mutation in `hybrid/remap.rs` (e.g. skipping the inverse-entry
 //! write on a swap) fails the scenario tests immediately.
 
+// Panic audit: panicking *is* this module's contract — the oracle's one
+// job is to halt the run the instant an invariant breaks, and its two
+// `expect`s guard introspection hooks whose availability it itself
+// probed at construction.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::engine::AnyController;
 use crate::hybrid::Controller;
 use crate::metadata::SetLayout;

@@ -29,6 +29,13 @@
 //! |                       | abandons the last phase's, so stale             |
 //! |                       | non-identity mappings pile up (the decay        |
 //! |                       | subsystem's target workload, DESIGN.md §11)     |
+//! | `adv_fault_storm`     | a drifting hot region keeps every set full of   |
+//! |                       | live remapped pairs while every 4th access      |
+//! |                       | probes the whole footprint: maximal surface     |
+//! |                       | for metadata-flip and transient-read injection  |
+//! |                       | and the scrub/rebuild/quarantine recovery       |
+//! |                       | paths (the fault subsystem's target workload,   |
+//! |                       | DESIGN.md §14)                                  |
 //!
 //! Scenarios are pure functions of `(seed, core, step)` plus the config
 //! geometry, so runs are bit-reproducible across thread counts and hosts.
@@ -49,6 +56,7 @@ pub const ADVERSARIAL: &[&str] = &[
     "adv_drift",
     "adv_pointer_chase",
     "adv_metadata_bloat",
+    "adv_fault_storm",
 ];
 
 /// Geometry every scenario derives its parameters from.
@@ -245,6 +253,26 @@ fn bloat_addr(g: &Geom, stream: u32, step: u32) -> u64 {
     block * g.block
 }
 
+/// Fault storm: three of every four accesses hammer a hot region about
+/// the fast tier's size (and past the LLC) that drifts slowly, so every
+/// hybrid set stays full of live non-identity pairs — targets for the
+/// metadata-flip injector and work for scrub/rebuild. The fourth access
+/// probes hash-uniformly over the whole footprint, keeping a steady
+/// stream of slow-tier reads for the transient-fault injector to stall
+/// and, at high rates, exhaust into quarantine.
+fn fault_storm_addr(g: &Geom, stream: u32, step: u32) -> u64 {
+    let h = lowbias32(lowbias32(step ^ stream.wrapping_mul(0x0100_0193)) ^ 0xFA17);
+    if step & 3 == 3 {
+        let total_blocks = (g.os_cap / g.block).max(1);
+        (h as u64 % total_blocks) * g.block
+    } else {
+        let hot_blocks = ((2 * g.llc_bytes / g.block).max(g.fast_blocks)).max(64);
+        let epoch = step / 4096;
+        let base = (epoch as u64).wrapping_mul(hot_blocks / 4 + 1);
+        (base + (h as u64 % hot_blocks)) * g.block
+    }
+}
+
 /// Build a scenario by name, or `None` if the name is not adversarial.
 pub fn build(name: &str, cfg: &SystemConfig) -> Option<Box<dyn Workload>> {
     let geom = Geom::of(cfg);
@@ -263,6 +291,7 @@ pub fn build(name: &str, cfg: &SystemConfig) -> Option<Box<dyn Workload>> {
             "adv_drift" => (drift_addr, geom.os_cap, 204, 20),
             "adv_pointer_chase" => (chase_addr, geom.os_cap, 51, 8),
             "adv_metadata_bloat" => (bloat_addr, geom.os_cap, 307, 16),
+            "adv_fault_storm" => (fault_storm_addr, geom.os_cap, 153, 16),
             _ => return None,
         };
     Some(Box::new(Scenario {

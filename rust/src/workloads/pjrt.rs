@@ -10,6 +10,11 @@
 //! `rust/tests/pjrt_crosscheck.rs` asserts this path agrees with the pure
 //! rust twin ([`super::synth::TraceGen`]).
 
+// Panic audit: `tile_for` expects a tile the immediately preceding
+// generation call staged into the cache; a miss is a bug in this file's
+// own cache keying, not a runtime condition.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use anyhow::Result;
 
 use super::synth::TraceGen;

@@ -1,0 +1,190 @@
+//! Chaos-matrix tests of deterministic fault injection and degraded-mode
+//! recovery (DESIGN.md §14): every design point must run green under the
+//! verify oracle with faults firing, merged stats must stay byte-identical
+//! across shard counts and frontend modes with faults on, a disabled
+//! injector must be byte-identical to a config that never heard of faults,
+//! quarantine must compose with MEA-epoch decay under the oracle, and
+//! retry exhaustion must surface as a typed error.
+
+mod common;
+
+use trimma::config::presets::DesignPoint;
+use trimma::config::{FaultConfig, SystemConfig};
+use trimma::engine::EngineBuilder;
+use trimma::hybrid::fault::FaultInjector;
+use trimma::stats::Stats;
+
+/// The scenario built for the injector: a drifting hot region keeps live
+/// remapped pairs in every set (flip targets) while wide probes keep
+/// slow-tier reads flowing (transient targets).
+const STORM: &str = "adv_fault_storm";
+
+/// Design points whose controller is the remap engine (and not the Ideal
+/// oracle): the only ones where the injector actually fires.
+const REMAP: &[DesignPoint] = &[
+    DesignPoint::TrimmaCache,
+    DesignPoint::MemPod,
+    DesignPoint::TrimmaFlat,
+    DesignPoint::LinearCache,
+];
+
+/// Moderate profile: every class armed at rates a tiny run crosses many
+/// times, without drowning the workload in quarantines.
+fn moderate(cfg: &mut SystemConfig) {
+    cfg.hybrid.fault.enabled = true;
+    cfg.hybrid.fault.metadata_flip_milli = 50;
+    cfg.hybrid.fault.transient_read_milli = 100;
+    cfg.hybrid.fault.stuck_set_milli = 0;
+}
+
+/// Storm profile: high flip and transient rates plus a real chance of
+/// stuck sets, so scrub, rebuild, retry and quarantine all trigger.
+fn storm(cfg: &mut SystemConfig) {
+    cfg.hybrid.fault.enabled = true;
+    cfg.hybrid.fault.metadata_flip_milli = 300;
+    cfg.hybrid.fault.transient_read_milli = 500;
+    cfg.hybrid.fault.stuck_set_milli = 250;
+    cfg.hybrid.fault.max_retries = 3;
+    cfg.hybrid.fault.backoff_base = 32;
+}
+
+fn fault_counters(s: &Stats) -> [u64; 5] {
+    [s.fault_injected, s.fault_retried, s.fault_scrubbed, s.fault_rebuilt, s.fault_quarantined]
+}
+
+#[test]
+fn chaos_matrix_is_green_under_oracle() {
+    // Every design point x scenario x fault profile runs to completion
+    // with the verify oracle checking mappings and the latency breakdown
+    // on every access. The injector is structurally inert on the
+    // tag-matching baselines and the Ideal oracle.
+    let scenarios = [STORM, "adv_migration_storm", "adv_identity_flip"];
+    let profiles: [(&str, fn(&mut SystemConfig)); 2] =
+        [("moderate", moderate), ("storm", storm)];
+    for dp in DesignPoint::ALL {
+        for wl in scenarios {
+            for (pname, profile) in profiles {
+                let mut cfg = common::tiny(*dp);
+                profile(&mut cfg);
+                cfg.hybrid.verify = true;
+                let stats = common::run(*dp, &cfg, wl);
+                if REMAP.contains(dp) {
+                    assert!(
+                        stats.fault_injected > 0,
+                        "{dp:?}/{wl}/{pname}: armed injector never fired"
+                    );
+                } else {
+                    assert_eq!(
+                        fault_counters(&stats),
+                        [0; 5],
+                        "{dp:?}/{wl}/{pname}: injector must be inert here"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_stats_shard_and_pipeline_invariant() {
+    // Fault decisions are pure hashes of (seed, set, per-set counter) and
+    // slice partitioning is geometry-only, so merged stats with faults
+    // firing must stay byte-identical across shard counts and across the
+    // inline vs pipelined frontend.
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+        let run = |shards: usize, pipeline: bool| {
+            EngineBuilder::new(dp)
+                .workload(STORM)
+                .faults(true)
+                .configure(|cfg| {
+                    cfg.hybrid.fast_bytes = 1 << 20;
+                    cfg.hybrid.slow_bytes = 32 << 20;
+                    cfg.hybrid.num_sets = 4;
+                    cfg.workload.cores = 2;
+                    cfg.workload.accesses_per_core = 3000;
+                    cfg.workload.warmup_per_core = 500;
+                    storm(cfg);
+                })
+                .shards(shards)
+                .pipeline(pipeline)
+                .run_sharded()
+                .unwrap_or_else(|e| panic!("{e}"))
+                .stats
+        };
+        let base = run(1, false);
+        assert!(base.fault_injected > 0, "{dp:?}: parity run must exercise faults");
+        for shards in [1usize, 2, 4] {
+            for pipeline in [false, true] {
+                assert_eq!(
+                    base.canonical(),
+                    run(shards, pipeline).canonical(),
+                    "{dp:?}: {shards} shards / pipeline={pipeline} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_injector_is_byte_identical_to_no_injector() {
+    // `--faults` left off must not perturb a single stat: a config with
+    // every fault knob cranked but `enabled = false` is byte-identical to
+    // the untouched config, for every design point.
+    for dp in DesignPoint::ALL {
+        let plain = common::run(*dp, &common::tiny(*dp), STORM);
+        let mut cfg = common::tiny(*dp);
+        storm(&mut cfg);
+        cfg.hybrid.fault.enabled = false;
+        let off = common::run(*dp, &cfg, STORM);
+        assert_eq!(fault_counters(&off), [0; 5], "{dp:?}");
+        assert_eq!(plain.canonical(), off.canonical(), "{dp:?}: disabled injector perturbed stats");
+    }
+}
+
+#[test]
+fn quarantine_composes_with_decay_under_oracle() {
+    // Retry exhaustion quarantines sets mid-run while MEA-epoch decay is
+    // sweeping the same sets: cursors, free stacks and donated-slot
+    // accounting must survive both (the oracle audits every access).
+    for dp in [DesignPoint::TrimmaFlat, DesignPoint::MemPod] {
+        let mut cfg = common::tiny(dp);
+        cfg.workload.accesses_per_core = 6000;
+        cfg.hybrid.verify = true;
+        cfg.hybrid.decay.enabled = true;
+        cfg.hybrid.decay.epoch_accesses = 32;
+        cfg.hybrid.decay.pressure_milli = 0;
+        cfg.hybrid.decay.sweep_budget = 256;
+        cfg.hybrid.decay.cold_epochs = 1;
+        cfg.hybrid.fault.enabled = true;
+        cfg.hybrid.fault.metadata_flip_milli = 100;
+        cfg.hybrid.fault.transient_read_milli = 450;
+        let stats = common::run(dp, &cfg, STORM);
+        assert!(stats.fault_quarantined > 0, "{dp:?}: run must reach quarantine");
+        assert!(stats.decay_epochs > 0, "{dp:?}: run must tick decay epochs");
+    }
+}
+
+#[test]
+fn retry_exhaustion_is_a_typed_error() {
+    // A certain-to-fail transient stream exhausts its retry budget on the
+    // first probe and surfaces the full deterministic backoff as a typed,
+    // std::error::Error-implementing value.
+    let cfg = FaultConfig {
+        enabled: true,
+        transient_read_milli: 1000,
+        max_retries: 3,
+        backoff_base: 64,
+        ..FaultConfig::off()
+    };
+    let mut inj = FaultInjector::new(cfg, true, 4);
+    let err = inj
+        .transient_read(2)
+        .expect("certain rate must fire")
+        .expect_err("certain rate must exhaust every retry");
+    assert_eq!(err.set, 2);
+    assert_eq!(err.attempts, 3);
+    assert_eq!(err.backoff, 64 + 128 + 256);
+    let msg = format!("{err}");
+    assert!(msg.contains("set 2"), "display must name the set: {msg}");
+    let _: &dyn std::error::Error = &err;
+}

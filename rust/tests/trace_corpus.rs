@@ -1,0 +1,186 @@
+//! Golden trace corpus: tiny checked-in `.trimtrc` files, constructed
+//! byte-by-byte from the format spec by `scripts/make_trace_corpus.py`
+//! (NOT by the Rust writer), that pin the on-disk trace format and its
+//! replay semantics. Whatever `trace::format` evolves into, it must keep
+//! parsing these files, and replaying them must keep producing the
+//! canonical stat vectors locked in `tests/golden/trace_stats.json`
+//! (same insta-style bless-on-first-run workflow as `tests/golden.rs`:
+//! absent combinations are blessed and printed — commit the file;
+//! re-bless intentional changes with `TRIMMA_BLESS=1`).
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use trimma::config::presets::DesignPoint;
+use trimma::config::{SystemConfig, TraceReplayMode};
+use trimma::sim::Simulation;
+use trimma::stats::Stats;
+use trimma::trace;
+use trimma::workloads;
+
+/// Per-file expectations, mirrored from the generator script.
+struct Corpus {
+    file: &'static str,
+    name: &'static str,
+    cores: u32,
+    warmup: u64,
+    accesses: u64,
+    chunks: u32,
+}
+
+const CORPUS: &[Corpus] = &[
+    Corpus {
+        file: "corpus_seq_raw.trimtrc",
+        name: "corpus_seq_raw",
+        cores: 2,
+        warmup: 64,
+        accesses: 192,
+        chunks: 2,
+    },
+    Corpus {
+        file: "corpus_stride_delta.trimtrc",
+        name: "corpus_stride_delta",
+        cores: 2,
+        warmup: 32,
+        accesses: 288,
+        chunks: 6,
+    },
+    Corpus {
+        file: "corpus_solo_delta.trimtrc",
+        name: "corpus_solo_delta",
+        cores: 1,
+        warmup: 16,
+        accesses: 240,
+        chunks: 3,
+    },
+];
+
+fn trace_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/traces").join(file)
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/trace_stats.json")
+}
+
+/// Same one-pair-per-line snapshot format as `tests/golden.rs`.
+fn load(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, rest)) = rest.split_once("\": \"") else { continue };
+        let Some(value) = rest.strip_suffix('"') else { continue };
+        map.insert(key.to_string(), value.to_string());
+    }
+    map
+}
+
+fn save(map: &BTreeMap<String, String>) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in map.iter().enumerate() {
+        out.push_str(&format!("  \"{k}\": \"{v}\""));
+        out.push_str(if i + 1 < map.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn first_diff(want: &str, got: &str) -> String {
+    for (w, g) in want.split(';').zip(got.split(';')) {
+        if w != g {
+            return format!("expected `{w}`, got `{g}`");
+        }
+    }
+    "vectors differ".to_string()
+}
+
+/// Shape a tiny config to the trace header's run identity (which
+/// `TraceWorkload::open` insists on) for design point `dp`.
+fn cfg_for(c: &Corpus, dp: DesignPoint, replay: TraceReplayMode) -> SystemConfig {
+    let mut cfg = common::tiny(dp);
+    cfg.workload.cores = c.cores;
+    cfg.workload.warmup_per_core = c.warmup;
+    cfg.workload.accesses_per_core = c.accesses;
+    cfg.trace.replay = replay;
+    cfg
+}
+
+fn replay(c: &Corpus, dp: DesignPoint, mode: TraceReplayMode) -> Stats {
+    let cfg = cfg_for(c, dp, mode);
+    let spec = format!("trace:{}", trace_path(c.file).display());
+    let wl = workloads::by_name(&spec, &cfg).unwrap_or_else(|e| panic!("{}: {e}", c.file));
+    Simulation::new(&cfg, wl).run().stats
+}
+
+#[test]
+fn corpus_files_validate_against_their_spec() {
+    for c in CORPUS {
+        let s = trace::validate(&trace_path(c.file)).unwrap_or_else(|e| panic!("{}: {e}", c.file));
+        assert_eq!(s.meta.name, c.name, "{}", c.file);
+        assert_eq!(s.meta.cores, c.cores, "{}", c.file);
+        assert_eq!(s.meta.warmup_per_core, c.warmup, "{}", c.file);
+        assert_eq!(s.meta.accesses_per_core, c.accesses, "{}", c.file);
+        assert_eq!(s.chunk_count, c.chunks, "{}", c.file);
+        assert_eq!(s.total_records, c.cores as u64 * (c.warmup + c.accesses), "{}", c.file);
+    }
+}
+
+#[test]
+fn corpus_replay_stats_match_golden() {
+    let path = golden_path();
+    let mut golden = load(&std::fs::read_to_string(&path).unwrap_or_default());
+    let bless_all = std::env::var("TRIMMA_BLESS").is_ok();
+
+    let mut blessed = Vec::new();
+    let mut failures = Vec::new();
+    for c in CORPUS {
+        for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat] {
+            let key = format!("{}/{}", c.name, dp.label());
+            let stats = replay(c, dp, TraceReplayMode::Buffered);
+            assert!(stats.mem_accesses > 0, "{key}: replay never reached memory");
+            let got = stats.canonical();
+            match golden.get(&key).cloned() {
+                Some(want) if want == got => {}
+                Some(_) if bless_all => {
+                    golden.insert(key.clone(), got);
+                    blessed.push(key);
+                }
+                Some(want) => failures.push(format!("  {key}: {}", first_diff(&want, &got))),
+                None => {
+                    golden.insert(key.clone(), got);
+                    blessed.push(key);
+                }
+            }
+        }
+    }
+
+    if !blessed.is_empty() {
+        std::fs::write(&path, save(&golden)).expect("write trace golden snapshots");
+        eprintln!(
+            "trace corpus: blessed {} new snapshot(s) into {} — commit the file:\n  {}",
+            blessed.len(),
+            path.display(),
+            blessed.join("\n  ")
+        );
+    }
+    assert!(
+        failures.is_empty(),
+        "trace-corpus replay stats drifted (re-bless intentional changes with \
+         TRIMMA_BLESS=1):\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn corpus_replay_is_io_mode_invariant() {
+    // Buffered and read-ahead replay must be byte-identical — the corpus
+    // exercises both the raw and the delta decode paths through each.
+    for c in CORPUS {
+        let buf = replay(c, DesignPoint::TrimmaCache, TraceReplayMode::Buffered);
+        let ra = replay(c, DesignPoint::TrimmaCache, TraceReplayMode::ReadAhead);
+        assert_eq!(buf.canonical(), ra.canonical(), "{}: I/O modes diverged", c.file);
+    }
+}

@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Generate the golden trace corpus under rust/tests/golden/traces/.
+
+These are tiny, hand-constructed TRIMTRC1 files (format spec:
+rust/src/trace/format.rs module docs) that pin the on-disk format
+independently of the Rust writer: rust/tests/trace_corpus.rs must parse,
+validate, and replay them forever, whatever the writer evolves into. The
+script is deterministic — re-running it reproduces byte-identical files —
+and self-verifies each file against the spec before writing.
+
+Layout (all little-endian):
+    file    := header chunk* index
+    header  := magic[8] version:u32 cores:u32 fingerprint:u64
+               total_records:u64 accesses_per_core:u64 warmup_per_core:u64
+               seed:u64 footprint_bytes:u64 chunk_records:u32 encoding:u32
+               index_offset:u64 chunk_count:u32 name_len:u32
+               name[name_len] header_crc:u32
+    chunk   := core:u32 record_count:u32 payload_len:u32
+               payload[payload_len] chunk_crc:u32
+    index   := { core:u32 record_count:u32 payload_len:u32 offset:u64 }
+               * chunk_count, then index_crc:u32
+"""
+
+import struct
+import zlib
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "rust" / "tests" / "golden" / "traces"
+MAGIC = b"TRIMTRC1"
+VERSION = 1
+RAW, DELTA = 0, 1
+WRITE_BIT = 1 << 63
+LINE = 64
+
+assert zlib.crc32(b"123456789") == 0xCBF43926  # IEEE reflected CRC32
+
+
+def zigzag(v: int) -> int:
+    return (v << 1) ^ (v >> 63) if v >= 0 else ((-v) << 1) - 1
+
+
+def varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def encode(encoding: int, records) -> bytes:
+    out = bytearray()
+    if encoding == RAW:
+        for addr, write, gap in records:
+            out += struct.pack("<QI", addr | (WRITE_BIT if write else 0), gap)
+    else:
+        prev = 0
+        for addr, write, gap in records:
+            out += varint(zigzag(addr - prev))
+            prev = addr
+            out += varint((gap << 1) | (1 if write else 0))
+    return bytes(out)
+
+
+def build(name, cores, warmup, accesses, seed, footprint, chunk_records, encoding, gen):
+    """Assemble one trace file's bytes. `gen(core, i)` -> (addr, write, gap)."""
+    per_core = warmup + accesses
+    streams = [[gen(c, i) for i in range(per_core)] for c in range(cores)]
+    nm = name.encode()
+    header_len = 88 + len(nm) + 4
+
+    chunks = []  # (core, count, payload)
+    for start in range(0, per_core, chunk_records):
+        for core in range(cores):
+            recs = streams[core][start : start + chunk_records]
+            chunks.append((core, len(recs), encode(encoding, recs)))
+
+    body = bytearray()
+    index = []  # (core, count, payload_len, offset)
+    offset = header_len
+    for core, count, payload in chunks:
+        ch = struct.pack("<III", core, count, len(payload)) + payload
+        ch += struct.pack("<I", zlib.crc32(ch))
+        index.append((core, count, len(payload), offset))
+        body += ch
+        offset += len(ch)
+
+    index_offset = offset
+    idx = bytearray()
+    for core, count, plen, off in index:
+        idx += struct.pack("<IIIQ", core, count, plen, off)
+    idx += struct.pack("<I", zlib.crc32(bytes(idx)))
+
+    total = cores * per_core
+    fingerprint = fnv1a(name, seed, footprint)
+    fixed = MAGIC + struct.pack(
+        "<IIQQQQQQIIQII",
+        VERSION, cores, fingerprint, total, accesses, warmup, seed,
+        footprint, chunk_records, encoding, index_offset, len(chunks), len(nm),
+    )
+    assert len(fixed) == 88, len(fixed)
+    header = fixed + nm
+    header += struct.pack("<I", zlib.crc32(header))
+    assert len(header) == header_len
+    return bytes(header) + bytes(body) + bytes(idx), streams
+
+
+def fnv1a(name, seed, footprint):
+    h = 0xCBF29CE484222325
+    for b in name.encode() + struct.pack("<QQ", seed, footprint):
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def verify(blob, cores, per_core, chunk_records):
+    """Independent re-parse: the checks TraceReader::open + validate run."""
+    assert blob[:8] == MAGIC
+    (ver, ncores, _fp, total, acc, warm, _seed, _fpr, crec, _enc, ioff,
+     ccount, nlen) = struct.unpack_from("<IIQQQQQQIIQII", blob, 8)
+    assert ver == VERSION and ncores == cores and crec == chunk_records
+    assert total == cores * per_core and warm + acc == per_core and ioff != 0
+    hlen = 88 + nlen + 4
+    (hcrc,) = struct.unpack_from("<I", blob, hlen - 4)
+    assert zlib.crc32(blob[: hlen - 4]) == hcrc, "header CRC"
+    entries = blob[ioff : ioff + ccount * 20]
+    (icrc,) = struct.unpack_from("<I", blob, ioff + ccount * 20)
+    assert zlib.crc32(entries) == icrc, "index CRC"
+    per_core_seen = [0] * cores
+    for i in range(ccount):
+        core, count, plen, off = struct.unpack_from("<IIIQ", entries, i * 20)
+        assert 1 <= count <= chunk_records and hlen <= off and off + 12 + plen + 4 <= ioff
+        ch = blob[off : off + 12 + plen]
+        (ccrc,) = struct.unpack_from("<I", blob, off + 12 + plen)
+        assert zlib.crc32(ch) == ccrc, f"chunk {i} CRC"
+        per_core_seen[core] += count
+    assert all(n == per_core for n in per_core_seen)
+
+
+def main():
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    specs = [
+        # Raw encoding, exactly one chunk per core: the simplest well-formed
+        # file. Strided sweep with a periodic write.
+        dict(
+            name="corpus_seq_raw", cores=2, warmup=64, accesses=192, seed=7,
+            footprint=1 << 20, chunk_records=256, encoding=RAW,
+            gen=lambda c, i: (((c * 4096 + i * LINE) % (1 << 20)) // LINE * LINE,
+                              i % 7 == 3, i % 5),
+        ),
+        # Delta encoding across several chunks per core, with backward jumps
+        # (negative deltas) so the zigzag path is pinned.
+        dict(
+            name="corpus_stride_delta", cores=2, warmup=32, accesses=288,
+            seed=23, footprint=1 << 20, chunk_records=128, encoding=DELTA,
+            gen=lambda c, i: ((((i * 2879 + c * 131) % 8192) * LINE),
+                              i % 3 == 1, i % 9),
+        ),
+        # Single core, delta, ragged final chunk (100 + 100 + 56 records).
+        dict(
+            name="corpus_solo_delta", cores=1, warmup=16, accesses=240,
+            seed=99, footprint=1 << 19, chunk_records=100, encoding=DELTA,
+            gen=lambda c, i: ((((i * 7919) % 4096) * LINE), i % 4 == 0, i % 6),
+        ),
+    ]
+    for s in specs:
+        blob, _ = build(**s)
+        verify(blob, s["cores"], s["warmup"] + s["accesses"], s["chunk_records"])
+        path = OUT_DIR / f"{s['name']}.trimtrc"
+        path.write_bytes(blob)
+        print(f"{path.name}: {len(blob)} bytes, cores={s['cores']}, "
+              f"records/core={s['warmup'] + s['accesses']}")
+
+
+if __name__ == "__main__":
+    main()

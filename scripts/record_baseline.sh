@@ -12,15 +12,17 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 echo "==> recording BENCH_baseline.json (quick suite, tag 'baseline')"
-cargo run --release -- bench --quick --tag baseline --json BENCH_baseline.json --shards 2 --pipeline --decay --tenants --trace
+cargo run --release -- bench --quick --tag baseline --json BENCH_baseline.json --shards 2 --pipeline --decay --faults --tenants --trace
 
-echo "==> blessing rust/tests/golden/stats.json"
+echo "==> blessing rust/tests/golden/stats.json and trace_stats.json"
 TRIMMA_BLESS=1 cargo test -q --test golden
+TRIMMA_BLESS=1 cargo test -q --test trace_corpus
 
 echo "==> verifying the blessed snapshots are stable"
 cargo test -q --test golden
+cargo test -q --test trace_corpus
 
 echo
 echo "Done. Commit the refreshed files:"
-echo "  git add BENCH_baseline.json rust/tests/golden/stats.json"
-git status --short BENCH_baseline.json rust/tests/golden/stats.json
+echo "  git add BENCH_baseline.json rust/tests/golden/stats.json rust/tests/golden/trace_stats.json"
+git status --short BENCH_baseline.json rust/tests/golden/stats.json rust/tests/golden/trace_stats.json
