@@ -241,6 +241,42 @@ impl Default for FaultConfig {
     }
 }
 
+/// Knobs of the batched two-phase translate stage (DESIGN.md §15): with
+/// `prefetch` on, the remap engine's batched entry point walks each batch
+/// ahead of execution, issuing software prefetches for the remap-cache
+/// lanes and table words the upcoming probes will touch, keeping the walk
+/// `distance` accesses ahead of the executing access. Prefetching is
+/// semantically invisible — canonical stats are byte-identical on/off
+/// except for the `batch_prefetches` telemetry counter (locked by
+/// `rust/tests/prefetch_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Master switch; all presets default to `false` (prefetch off).
+    pub prefetch: bool,
+    /// Lookahead window of the phase-1 walk, in accesses: how far ahead of
+    /// the executing access the prefetch walk runs (must be >= 1 when
+    /// `prefetch` is enabled; a value >= the batch length degenerates to
+    /// prefetching the whole batch before the first access executes).
+    pub distance: u32,
+}
+
+impl BatchConfig {
+    /// Prefetch disabled, with a sane default window so flipping
+    /// `prefetch` alone yields a reasonable policy: 8 accesses of
+    /// lookahead (a quarter of the 64-access generation batch — far
+    /// enough to cover metadata-line miss latency, near enough that the
+    /// primed lines are still resident when their access executes).
+    pub const fn off() -> Self {
+        BatchConfig { prefetch: false, distance: 8 }
+    }
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig::off()
+    }
+}
+
 /// Contention scenario shaping the per-phase tenant schedule of a
 /// multi-tenant run (see [`TenantMixConfig`] and DESIGN.md §12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -479,6 +515,8 @@ pub struct HybridConfig {
     pub decay: DecayConfig,
     /// Deterministic fault injection knobs (see [`FaultConfig`]).
     pub fault: FaultConfig,
+    /// Batched-translate prefetch knobs (see [`BatchConfig`]).
+    pub batch: BatchConfig,
 }
 
 impl HybridConfig {
@@ -599,6 +637,13 @@ impl SystemConfig {
                         .into(),
                 );
             }
+        }
+        if h.batch.prefetch && h.batch.distance == 0 {
+            return Err(
+                "batch.distance must be >= 1 when batch.prefetch is enabled (a zero \
+                 lookahead window never issues a prefetch)"
+                    .into(),
+            );
         }
         let t = &self.tenant_mix;
         if t.enabled {
@@ -723,6 +768,28 @@ mod tests {
         // Disabled faults never block validation, whatever the knobs say.
         let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
         cfg.hybrid.fault.max_retries = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn batch_knobs_validate() {
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.batch.prefetch = true;
+        cfg.validate().unwrap();
+        cfg.hybrid.batch.distance = 0;
+        assert!(cfg.validate().is_err());
+        cfg.hybrid.batch.distance = 1;
+        cfg.validate().unwrap();
+        // Prefetch is purely a host-side hint: every design point accepts
+        // it (tag baselines and Ideal just never issue any).
+        for dp in DesignPoint::ALL {
+            let mut cfg = presets::hbm3_ddr5(*dp);
+            cfg.hybrid.batch.prefetch = true;
+            cfg.validate().unwrap_or_else(|e| panic!("{dp:?}: {e}"));
+        }
+        // Disabled prefetch never blocks validation, whatever the knobs say.
+        let mut cfg = presets::hbm3_ddr5(DesignPoint::TrimmaCache);
+        cfg.hybrid.batch.distance = 0;
         cfg.validate().unwrap();
     }
 

@@ -210,6 +210,7 @@ fn hybrid_for(dp: DesignPoint, fast_bytes: u64, slow_bytes: u64, block: u32) -> 
         verify: false,
         decay: DecayConfig::off(),
         fault: FaultConfig::off(),
+        batch: BatchConfig::off(),
     }
 }
 
@@ -235,6 +236,15 @@ pub fn with_decay(mut cfg: SystemConfig) -> SystemConfig {
 /// 64-cycle backoff.
 pub fn with_faults(mut cfg: SystemConfig) -> SystemConfig {
     cfg.hybrid.fault.enabled = true;
+    cfg
+}
+
+/// Enable batched-translate software prefetch with the default window
+/// ([`BatchConfig::off`]'s values with `prefetch = true`): the phase-1
+/// walk runs 8 accesses ahead of execution. Semantically invisible —
+/// canonical stats are unchanged except the `batch_prefetches` counter.
+pub fn with_prefetch(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.hybrid.batch.prefetch = true;
     cfg
 }
 

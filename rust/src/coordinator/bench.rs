@@ -561,6 +561,98 @@ pub fn run_tenant_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(u32, 
     out
 }
 
+/// The batched-prefetch comparison sweep, in two halves.
+///
+/// **Micro:** a 64-access batch pushed through the monomorphic engine
+/// session for each of [`SIM_DESIGNS`] — a remap-cache-heavy Trimma-C, a
+/// flat-iRT Trimma-F, and the linear-table baseline — with the two-phase
+/// prefetched walk off and on (`batched_probe_x64/<design>/{off,on}`).
+/// This isolates the translate stage itself: the only difference between
+/// the paired labels is the phase-1 `prefetch_targets` walk in
+/// [`RemapController::access_block`](crate::hybrid::remap::RemapController).
+///
+/// **Macro:** the full [`SIM_DESIGNS`] x [`SIM_WORKLOADS`] simulation
+/// sweep, sharded at `shards` workers, prefetch off vs on. Records one
+/// label per mode — `batched_probe/off` and `batched_probe/on` (the pair
+/// CI's `bench-check --require-labels` gates on) — with the aggregate
+/// throughput attached (M mem-steps/s), prints the prefetch-on throughput
+/// ratio over off, and returns the `(prefetch, msteps)` pairs.
+/// Construction stays outside the timed region for the same reason as in
+/// [`run_sharded_sweep`].
+pub fn run_prefetch_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(bool, f64)> {
+    // ---- micro: 64-access batched translate, prefetch off vs on ----
+    let mut i = 0u64;
+    let mut now = 0u64;
+    for dp in SIM_DESIGNS {
+        for prefetch in [false, true] {
+            let builder = EngineBuilder::new(*dp).prefetch(prefetch);
+            let mut session = builder.build_session().expect("sweep preset");
+            let f = session.layout().fast_per_set;
+            let span = session.layout().slow_per_set;
+            let mut batch = [Access::default(); 64];
+            let label = format!(
+                "batched_probe_x64/{}/{}",
+                dp.label(),
+                if prefetch { "on" } else { "off" }
+            );
+            b.iter(&label, || {
+                for slot in batch.iter_mut() {
+                    i = i.wrapping_add(104729);
+                    now += 40;
+                    *slot = Access {
+                        set: (i % 16) as u32,
+                        idx: f + i % span,
+                        line: 0,
+                        kind: AccessKind::Read,
+                        now,
+                    };
+                }
+                session.push_batch(&batch).latency
+            });
+        }
+    }
+
+    // ---- macro: the full sim sweep, prefetch off vs on ----
+    let (accesses, warmup) = if quick { (8_000u64, 1_000u64) } else { (40_000, 5_000) };
+    let n = shards.max(1);
+    let mut out = Vec::new();
+    for prefetch in [false, true] {
+        let mut sims: Vec<ShardedSimulation> = Vec::new();
+        let mut steps = 0.0;
+        for dp in SIM_DESIGNS {
+            for wl in SIM_WORKLOADS {
+                let builder = EngineBuilder::new(*dp)
+                    .workload(*wl)
+                    .shards(n)
+                    .prefetch(prefetch)
+                    .configure(move |cfg| {
+                        cfg.workload.accesses_per_core = accesses;
+                        cfg.workload.warmup_per_core = warmup;
+                    });
+                let cfg = builder.build_config().expect("sweep preset");
+                steps += cfg.workload.cores as f64 * (accesses + warmup) as f64;
+                let workload = by_name(wl, &cfg).unwrap_or_else(|e| panic!("{e}"));
+                let session = builder.build_sharded().expect("sharded session");
+                sims.push(ShardedSimulation::new(&cfg, workload, session));
+            }
+        }
+        let label = format!("batched_probe/{}", if prefetch { "on" } else { "off" });
+        let (_done, dt) = b.once(&label, move || {
+            for sim in sims {
+                sim.run();
+            }
+        });
+        let msteps = steps / 1e6 / dt.max(1e-9);
+        b.attach_throughput(msteps);
+        println!("  -> {msteps:.2} M mem-steps/s");
+        out.push((prefetch, msteps));
+    }
+    if let [(_, off), (_, on)] = out[..] {
+        println!("  batched prefetch on: {:.2}x throughput over off", on / off.max(1e-12));
+    }
+    out
+}
+
 /// Run the whole suite and package it as a schema-versioned report.
 /// `shards` feeds [`shard_counts`] for the sharded-session sweep;
 /// `pipeline` additionally runs [`run_pipeline_sweep`] (the
@@ -575,8 +667,11 @@ pub fn run_tenant_sweep(b: &mut Bench, quick: bool, shards: usize) -> Vec<(u32, 
 /// --tenants`, gated by CI's `bench-check --require-labels` pass).
 /// `trace` additionally runs [`run_trace_sweep`] (the
 /// `trace_replay/{buffered,readahead}` labels — `trimma bench --trace`,
+/// also gated by the same label pass). `prefetch` additionally runs
+/// [`run_prefetch_sweep`] (the `batched_probe/{off,on}` labels plus the
+/// per-design `batched_probe_x64/*` micros — `trimma bench --prefetch`,
 /// also gated by the same label pass).
-#[allow(clippy::fn_params_excessive_bools)]
+#[allow(clippy::fn_params_excessive_bools, clippy::too_many_arguments)]
 pub fn full_report(
     tag: &str,
     quick: bool,
@@ -586,6 +681,7 @@ pub fn full_report(
     faults: bool,
     tenants: bool,
     trace: bool,
+    prefetch: bool,
 ) -> BenchReport {
     let mut b = if quick {
         // Smoke scale: ~50 ms measurement budget per micro label.
@@ -610,6 +706,9 @@ pub fn full_report(
     }
     if trace {
         run_trace_sweep(&mut b, quick);
+    }
+    if prefetch {
+        run_prefetch_sweep(&mut b, quick, shards);
     }
     BenchReport {
         schema_version: SCHEMA_VERSION,

@@ -88,6 +88,7 @@ pub struct EngineBuilder {
     verify: bool,
     decay: bool,
     faults: bool,
+    prefetch: bool,
     tag_match: bool,
     shards: usize,
     pipeline: bool,
@@ -108,6 +109,7 @@ impl EngineBuilder {
             verify: false,
             decay: false,
             faults: false,
+            prefetch: false,
             tag_match: false,
             shards: 1,
             pipeline: false,
@@ -185,6 +187,22 @@ impl EngineBuilder {
     /// remap metadata.
     pub fn faults(mut self, faults: bool) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Enable the batched two-phase translate stage
+    /// ([`crate::hybrid::prefetch`], DESIGN.md §15): the remap engine's
+    /// batched entry point walks each batch ahead of execution, issuing
+    /// software prefetches for the metadata lines the upcoming probes
+    /// will touch. Semantically invisible — canonical stats are
+    /// byte-identical on/off modulo the `batch_prefetches` telemetry
+    /// counter. The lookahead window comes from the config's
+    /// [`BatchConfig`](crate::config::BatchConfig) defaults unless
+    /// overridden via [`EngineBuilder::configure`]. Inert on the Ideal
+    /// oracle and the tag-matching baselines, which carry no remap
+    /// metadata.
+    pub fn prefetch(mut self, prefetch: bool) -> Self {
+        self.prefetch = prefetch;
         self
     }
 
@@ -269,6 +287,7 @@ impl EngineBuilder {
         cfg.hybrid.verify |= self.verify;
         cfg.hybrid.decay.enabled |= self.decay;
         cfg.hybrid.fault.enabled |= self.faults;
+        cfg.hybrid.batch.prefetch |= self.prefetch;
         if let Some(mix) = self.tenant_mix {
             cfg.tenant_mix = mix;
             cfg.tenant_mix.enabled = true;
@@ -556,6 +575,38 @@ mod tests {
         // Off by default.
         let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
         assert!(!cfg.hybrid.fault.enabled);
+    }
+
+    #[test]
+    fn prefetch_toggle_enables_the_knob_and_stays_invisible() {
+        let on = EngineBuilder::new(DesignPoint::TrimmaCache).configure(shrink).prefetch(true);
+        assert!(on.build_config().unwrap().hybrid.batch.prefetch);
+        // The sharded path consumes everything through the batched entry
+        // point, so the phase-1 walk really runs there.
+        let rep_on = on.workload("adv_drift").run_sharded().unwrap();
+        assert!(rep_on.stats.mem_accesses > 0);
+        assert!(rep_on.stats.batch_prefetches > 0, "phase-1 walk never fired");
+        let rep_off = EngineBuilder::new(DesignPoint::TrimmaCache)
+            .configure(shrink)
+            .workload("adv_drift")
+            .run_sharded()
+            .unwrap();
+        assert_eq!(rep_off.stats.batch_prefetches, 0);
+        // Semantically invisible: only the telemetry counter moves.
+        let strip = |c: &str| {
+            c.split(';')
+                .filter(|p| !p.starts_with("batch_prefetches="))
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        assert_eq!(
+            strip(&rep_on.stats.canonical()),
+            strip(&rep_off.stats.canonical()),
+            "prefetch changed an observable stat"
+        );
+        // Off by default.
+        let cfg = EngineBuilder::new(DesignPoint::TrimmaCache).build_config().unwrap();
+        assert!(!cfg.hybrid.batch.prefetch);
     }
 
     #[test]

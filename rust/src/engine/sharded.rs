@@ -511,6 +511,14 @@ pub struct ShardedSession {
     plan: ShardPlan,
     full_layout: SetLayout,
     sessions: Vec<Session<AnyController>>,
+    /// Per-slice regrouping scratch for the inline batched path
+    /// ([`ShardedSession::push_batch`]): accesses are bucketed by slice so
+    /// each slice session consumes a whole sub-batch through its batched
+    /// entry point — the same per-slice batching the threaded FIFO path
+    /// performs, which is what lets the two-phase prefetch walk
+    /// (DESIGN.md §15) see real batches inline too. Pre-sized to
+    /// [`BATCH_ACCESSES`], so steady-state pushes never allocate.
+    bufs: Vec<Vec<Access>>,
     label: String,
     pushed: u64,
 }
@@ -523,7 +531,9 @@ impl ShardedSession {
         sessions: Vec<Session<AnyController>>,
     ) -> ShardedSession {
         assert_eq!(sessions.len(), plan.num_slices() as usize);
-        ShardedSession { plan, full_layout, sessions, label, pushed: 0 }
+        let bufs =
+            (0..plan.num_slices()).map(|_| Vec::with_capacity(BATCH_ACCESSES)).collect();
+        ShardedSession { plan, full_layout, sessions, bufs, label, pushed: 0 }
     }
 
     /// The set partition this session runs under.
@@ -555,11 +565,26 @@ impl ShardedSession {
     /// Feed a batch of global-set accesses inline (no threads), routing
     /// each to its slice in order. The serial reference the threaded
     /// [`ShardedSession::run_stream`] path is locked against.
+    ///
+    /// Accesses are regrouped per slice and each slice consumes its
+    /// sub-batch through [`Session::push_batch`] — one controller
+    /// dispatch per slice and a real batch for the two-phase prefetch
+    /// walk, exactly like the threaded workers' per-slice FIFO batches.
+    /// Byte-parity with per-access routing holds by construction: slices
+    /// share no state, the grouping preserves each slice's in-stream
+    /// order, and the summed demand latency is order-independent (locked
+    /// by `threaded_stream_matches_inline_routing` and the parity suites).
     pub fn push_batch(&mut self, batch: &[Access]) -> Completion {
         let mut latency: Cycle = 0;
         for a in batch {
             let (slice, local) = self.plan.route(*a);
-            latency += self.sessions[slice as usize].push(local);
+            self.bufs[slice as usize].push(local);
+        }
+        for (slice, buf) in self.bufs.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                latency += self.sessions[slice].push_batch(buf).latency;
+                buf.clear();
+            }
         }
         self.pushed += batch.len() as u64;
         Completion { accesses: batch.len() as u64, latency }

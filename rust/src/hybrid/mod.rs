@@ -16,6 +16,10 @@
 //! * [`fault`] — seeded deterministic fault injection (transient slow-tier
 //!   read failures, metadata bit flips, stuck sets) driving the remap
 //!   engine's recovery paths: bounded retry, scrub/rebuild, quarantine.
+//! * [`prefetch`] — the portable software-prefetch shim behind the
+//!   batched two-phase translate stage ([`Controller::access_block`] on
+//!   the remap engine walks each batch ahead of execution and primes the
+//!   metadata lines the probes will touch).
 //!
 //! All controllers implement [`Controller`]: the simulation engine feeds
 //! them LLC-miss accesses in `(set, per-set index)` physical form and gets
@@ -32,6 +36,7 @@ pub mod decay;
 pub mod fault;
 pub mod lohhill;
 pub mod mea;
+pub mod prefetch;
 pub mod remap;
 pub mod tagmatch;
 

@@ -34,6 +34,7 @@ use crate::config::{Mode, RemapCacheKind, ReplacementPolicy, SystemConfig};
 use crate::hybrid::decay::DecayState;
 use crate::hybrid::fault::FaultInjector;
 use crate::hybrid::mea::MeaTracker;
+use crate::hybrid::prefetch::prefetch_read;
 use crate::hybrid::{Access, Controller};
 use crate::mem::MemDevice;
 use crate::metadata::irc::{Irc, IrcProbe};
@@ -139,6 +140,12 @@ pub struct RemapController {
     ideal: bool,
     block_bytes: u32,
     rc_latency: Cycle,
+    /// Batched two-phase translate (DESIGN.md §15): walk each batch ahead
+    /// of execution and software-prefetch the metadata lines the probes
+    /// will touch. Forced off for the Ideal oracle (no metadata to probe).
+    prefetch_enabled: bool,
+    /// Lookahead window of the prefetch walk, in accesses (>= 1).
+    prefetch_distance: usize,
 }
 
 impl RemapController {
@@ -267,6 +274,10 @@ impl RemapController {
             ideal,
             block_bytes: h.block_bytes,
             rc_latency: h.remap_cache_latency,
+            // The Ideal oracle has no metadata to prefetch: the walk
+            // stays inert there, mirroring decay and fault injection.
+            prefetch_enabled: h.batch.prefetch && !ideal,
+            prefetch_distance: (h.batch.distance as usize).max(1),
         }
     }
 
@@ -867,6 +878,41 @@ impl RemapController {
         self.hot_buf = hot;
     }
 
+    // ---------------- batched translate: phase-1 prefetch walk ----------
+
+    /// Phase 1 of the batched two-phase translate (DESIGN.md §15): issue
+    /// software prefetches for every metadata address the upcoming
+    /// [`RemapController::lookup`] of `a` will touch — the remap-cache SoA
+    /// lanes of `a`'s set (both iRC components under Trimma) and the
+    /// packed table words (entry + leaf alloc bit for the iRT, the one
+    /// stride-indexed entry for the linear table). Strictly read-only:
+    /// the `prefetch_targets` hooks compute addresses without bumping the
+    /// LRU tick or any stat, the shim never dereferences, and the only
+    /// observable effect is the `batch_prefetches` telemetry counter —
+    /// which is exactly why reordering phase 2 is forbidden but phase 1
+    /// can run arbitrarily far ahead.
+    #[inline]
+    fn prefetch_access(&mut self, a: &Access) {
+        let key = self.layout.key(a.set, a.idx);
+        match &self.rc {
+            Rc::None => {}
+            Rc::Conventional(rc) => {
+                for p in rc.prefetch_targets(key) {
+                    prefetch_read(p);
+                }
+            }
+            Rc::Irc(irc) => {
+                for p in irc.prefetch_targets(key) {
+                    prefetch_read(p);
+                }
+            }
+        }
+        for p in self.table.prefetch_targets(a.set, a.idx) {
+            prefetch_read(p);
+        }
+        self.stats.batch_prefetches += 1;
+    }
+
     // ---------------- the demand access itself ----------------
 
     /// One demand access — the monomorphic body behind both
@@ -1245,10 +1291,33 @@ impl Controller for RemapController {
     /// Batched entry point: one dispatch, then a monomorphic loop over
     /// `Self::do_access` — stat-for-stat identical to `N` single
     /// `access` calls (locked by `rust/tests/perf_harness.rs`).
+    ///
+    /// With `batch.prefetch` enabled this becomes the two-phase,
+    /// memory-parallel translate stage of DESIGN.md §15: a read-only walk
+    /// primes the first `distance` accesses' metadata lines up front, and
+    /// execution then proceeds **in original order** — never reordered,
+    /// since `do_access` mutates tables, slots, and device bank state —
+    /// topping the window up so the walk stays `distance` accesses ahead.
+    /// Canonical stats are byte-identical on/off (modulo the
+    /// `batch_prefetches` telemetry counter; locked by
+    /// `rust/tests/prefetch_parity.rs`).
     fn access_block(&mut self, batch: &[Access]) -> Cycle {
         let mut total = 0;
-        for a in batch {
-            total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
+        if self.prefetch_enabled && !batch.is_empty() {
+            let d = self.prefetch_distance.min(batch.len());
+            for a in &batch[..d] {
+                self.prefetch_access(a);
+            }
+            for (i, a) in batch.iter().enumerate() {
+                if i + d < batch.len() {
+                    self.prefetch_access(&batch[i + d]);
+                }
+                total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
+            }
+        } else {
+            for a in batch {
+                total += self.do_access(a.set, a.idx, a.line, a.kind, a.now);
+            }
         }
         total
     }
@@ -1332,6 +1401,102 @@ mod tests {
         c.access(set, idx, 0, AccessKind::Read, 5000);
         assert_eq!(c.stats.metadata_cycles, 0);
         assert_eq!(c.stats.table_walks, 0);
+    }
+
+    /// `canon` with the one named `name=value` pair removed — the on/off
+    /// prefetch comparison legitimately differs only in `batch_prefetches`.
+    fn strip_counter(canon: &str, name: &str) -> String {
+        let prefix = format!("{name}=");
+        canon.split(';').filter(|p| !p.starts_with(&prefix)).collect::<Vec<_>>().join(";")
+    }
+
+    /// The two-phase walk is semantically invisible: the same batched
+    /// traffic with prefetch on and off yields byte-identical canonical
+    /// stats except the `batch_prefetches` telemetry counter, which counts
+    /// exactly the batched accesses (integration-scale coverage across
+    /// design points/shards/pipelining lives in tests/prefetch_parity.rs).
+    #[test]
+    fn batched_prefetch_walk_is_semantically_invisible() {
+        for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+            let cfg_off = small(dp);
+            let mut cfg_on = small(dp);
+            cfg_on.hybrid.batch.prefetch = true;
+            cfg_on.hybrid.batch.distance = 4;
+            let mut off = RemapController::new(&cfg_off, false);
+            let mut on = RemapController::new(&cfg_on, false);
+            let mut batch = [Access::default(); 16];
+            let mut now = 0u64;
+            let f = off.layout.fast_per_set;
+            for round in 0..40u64 {
+                for (j, slot) in batch.iter_mut().enumerate() {
+                    now += 500;
+                    *slot = Access {
+                        set: ((round + j as u64) % off.layout.num_sets as u64) as u32,
+                        idx: f + (round * 31 + j as u64 * 7) % 600,
+                        line: 0,
+                        kind: if j % 3 == 0 { AccessKind::Write } else { AccessKind::Read },
+                        now,
+                    };
+                }
+                off.access_block(&batch);
+                on.access_block(&batch);
+            }
+            off.finalize();
+            on.finalize();
+            assert_eq!(off.stats.batch_prefetches, 0, "{dp:?}: off run must never prefetch");
+            assert_eq!(
+                on.stats.batch_prefetches,
+                40 * 16,
+                "{dp:?}: every batched access gets exactly one phase-1 visit"
+            );
+            assert_eq!(
+                strip_counter(&off.stats.canonical(), "batch_prefetches"),
+                strip_counter(&on.stats.canonical(), "batch_prefetches"),
+                "{dp:?}: prefetch changed an observable stat"
+            );
+        }
+    }
+
+    /// Ideal has no metadata to probe: the walk stays inert even with the
+    /// knob on, mirroring decay and fault injection.
+    #[test]
+    fn ideal_forces_prefetch_inert() {
+        let mut cfg = small(DesignPoint::Ideal);
+        cfg.hybrid.batch.prefetch = true;
+        let mut c = RemapController::new(&cfg, true);
+        let (set, idx) = slow_idx(&c, 3);
+        let batch =
+            [Access { set, idx, line: 0, kind: AccessKind::Read, now: 0 }; 8];
+        c.access_block(&batch);
+        assert_eq!(c.stats.batch_prefetches, 0);
+    }
+
+    /// The lookahead window degenerates gracefully: distance >= batch len
+    /// prefetches everything up front; distance 1 interleaves one ahead;
+    /// both count every access exactly once and match the off-run stats.
+    #[test]
+    fn prefetch_distance_covers_the_batch_exactly_once() {
+        for distance in [1u32, 3, 8, 64, 1000] {
+            let mut cfg = small(DesignPoint::TrimmaCache);
+            cfg.hybrid.batch.prefetch = true;
+            cfg.hybrid.batch.distance = distance;
+            let mut c = RemapController::new(&cfg, false);
+            let f = c.layout.fast_per_set;
+            let mut batch = [Access::default(); 11];
+            for (j, slot) in batch.iter_mut().enumerate() {
+                *slot = Access {
+                    set: 0,
+                    idx: f + j as u64,
+                    line: 0,
+                    kind: AccessKind::Read,
+                    now: 500 * (j as u64 + 1),
+                };
+            }
+            c.access_block(&batch);
+            assert_eq!(c.stats.batch_prefetches, 11, "distance={distance}");
+            c.access_block(&[]);
+            assert_eq!(c.stats.batch_prefetches, 11, "empty batch must not walk");
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! trimma list                               available workloads / presets
 //! trimma run --design trimma-c --workload gap_pr [--mem ddr5+nvm]
 //!            [--accesses N] [--ideal] [--verify] [--decay] [--faults]
+//!            [--prefetch]                  batched-translate software
+//!                                          prefetch (DESIGN.md §15)
 //!            [--ratio R] [--block B]
 //!            [--shards N]                  N>0: open-loop sharded run
 //!                                          across N worker threads
@@ -23,6 +25,7 @@
 //!                                           header's run shape is adopted)
 //! trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N]
 //!              [--pipeline] [--decay] [--faults] [--tenants] [--trace]
+//!              [--prefetch]
 //!                                           hot-path + sim-sweep perf
 //!                                           report (EXPERIMENTS.md §Perf)
 //! trimma bench-check --report bench.json [--require-labels L1,L2,...]
@@ -48,6 +51,9 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
              [--accesses N] [--cores N] [--ideal] [--verify] [--decay]
              [--faults]     deterministic fault injection + recovery
                             (scrub/rebuild/quarantine; DESIGN.md §14)
+             [--prefetch]   batched-translate software prefetch: prime
+                            metadata lines one batch walk ahead of
+                            execution (DESIGN.md §15)
              [--ratio R] [--block B]
              [--shards N]   N>0: open-loop sharded run across N workers
              [--pipeline]   pipelined front end (needs --shards N, N>=1)
@@ -70,10 +76,10 @@ trimma — Trimma (PACT'24) hybrid-memory metadata simulator
                 [--readahead]  double-buffered read-ahead I/O thread
                                (default: buffered chunked reads)
                 [--shards N] [--pipeline] [--verify] [--decay] [--faults]
-                               replay a recorded trace; cores/accesses/
+                [--prefetch]   replay a recorded trace; cores/accesses/
                                warmup are adopted from the trace header
   trimma bench [--quick] [--tag T] [--json BENCH_<tag>.json] [--shards N] [--pipeline]
-               [--decay] [--faults] [--tenants] [--trace]
+               [--decay] [--faults] [--tenants] [--trace] [--prefetch]
   trimma bench-check --report bench.json [--require-labels L1,L2,...]
   trimma bench-compare --baseline B.json --new N.json [--warn-pct 10] [--fail-pct 30]
   trimma bench-dispatch --report bench.json dyn-vs-enum dispatch delta
@@ -175,6 +181,7 @@ fn run(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     cfg.hybrid.verify |= has("--verify");
     cfg.hybrid.decay.enabled |= has("--decay");
     cfg.hybrid.fault.enabled |= has("--faults");
+    cfg.hybrid.batch.prefetch |= has("--prefetch");
     let wl = get("--workload").unwrap_or_else(|| "gap_pr".into());
     let mut job = Job::new(format!("{}:{}", cfg.name, wl), cfg, &wl);
     job.ideal = has("--ideal");
@@ -378,6 +385,7 @@ fn replay(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     cfg.hybrid.verify |= has("--verify");
     cfg.hybrid.decay.enabled |= has("--decay");
     cfg.hybrid.fault.enabled |= has("--faults");
+    cfg.hybrid.batch.prefetch |= has("--prefetch");
     if has("--readahead") {
         cfg.trace.replay = TraceReplayMode::ReadAhead;
     }
@@ -432,8 +440,9 @@ fn bench(get: &dyn Fn(&str) -> Option<String>, has: &dyn Fn(&str) -> bool) {
     let faults = has("--faults");
     let tenants = has("--tenants");
     let trace = has("--trace");
+    let prefetch = has("--prefetch");
     let report = trimma::coordinator::bench::full_report(
-        &tag, quick, shards, pipeline, decay, faults, tenants, trace,
+        &tag, quick, shards, pipeline, decay, faults, tenants, trace, prefetch,
     );
     println!(
         "geomean sim throughput: {:.3} M mem-steps/s ({} records, tag '{}'{})",

@@ -67,6 +67,20 @@ impl Irc {
         (key / self.superblock_blocks, (key % self.superblock_blocks) as u32)
     }
 
+    /// The SoA lane addresses a [`Irc::probe`] of `key` will touch, in
+    /// both components: the NonIdCache set for `key` itself and the
+    /// hash-indexed IdCache set for `key`'s super-block (the same index
+    /// math the probe uses, see [`RemapCache::prefetch_targets`]).
+    /// Read-only with no LRU/stats side effects — batched translate
+    /// (DESIGN.md §15) only hands these to the prefetch shim.
+    #[inline]
+    pub fn prefetch_targets(&self, key: BlockId) -> [*const u8; 6] {
+        let [n0, n1, n2] = self.nonid.prefetch_targets(key);
+        let (sb, _) = self.superblock_of(key);
+        let [i0, i1, i2] = self.id.prefetch_targets(sb);
+        [n0, n1, n2, i0, i1, i2]
+    }
+
     /// Probe both components in parallel (single SRAM latency). Runs once
     /// per LLC miss on Trimma design points; both component probes are
     /// allocation-free scans over the SoA lanes of [`RemapCache`].

@@ -161,6 +161,24 @@ impl IrtTable {
         if e == IDENTITY { idx } else { e as u64 }
     }
 
+    /// The exact addresses a [`IrtTable::lookup`]/[`IrtTable::is_identity`]
+    /// of `(set, idx)` will touch: the packed 4 B entry word and the `u64`
+    /// word of the alloc bitset holding the covering leaf's allocation bit
+    /// (for a 1-level table there is no leaf shortcut, so both slots point
+    /// at the entry word). Read-only, no side effects — the batched
+    /// translate stage (DESIGN.md §15) only hands these to the prefetch
+    /// shim, which never dereferences them.
+    #[inline]
+    pub fn prefetch_targets(&self, set: u32, idx: u64) -> [*const u8; 2] {
+        let entry: *const u8 = self.entries[self.entry_index(set, idx)..].as_ptr().cast();
+        if self.levels > 1 {
+            let p = self.block_index(set, 0, idx / self.leaf_fanout);
+            [entry, self.alloc[(p >> 6) as usize..].as_ptr().cast()]
+        } else {
+            [entry, entry]
+        }
+    }
+
     /// Identity check with the leaf-allocation shortcut: an unallocated
     /// leaf implies identity for all 64 entries it covers, without touching
     /// the (large) entry array — the alloc bitset is tiny and stays in

@@ -43,6 +43,15 @@ impl LinearTable {
         (set as u64 * self.k + idx) as usize
     }
 
+    /// The address a [`LinearTable::lookup`] of `(set, idx)` will touch —
+    /// the one 4 B entry word at stride `set * k + idx`. Read-only, no
+    /// side effects; consumed by the batched translate stage's prefetch
+    /// walk (DESIGN.md §15), which never dereferences it.
+    #[inline]
+    pub fn prefetch_target(&self, set: u32, idx: u64) -> *const u8 {
+        self.entries[self.at(set, idx)..].as_ptr().cast()
+    }
+
     #[inline]
     pub fn lookup(&self, set: u32, idx: u64) -> u64 {
         let e = self.entries[self.at(set, idx)];

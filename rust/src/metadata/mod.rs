@@ -75,6 +75,21 @@ impl Table {
         }
     }
 
+    /// The addresses the next [`Table::lookup`]/[`Table::is_identity`] of
+    /// `(set, idx)` will touch (linear: the one stride-indexed entry word,
+    /// duplicated; iRT: entry word + leaf alloc-bitset word). Read-only
+    /// with no side effects — see the per-table hooks.
+    #[inline]
+    pub fn prefetch_targets(&self, set: u32, idx: u64) -> [*const u8; 2] {
+        match self {
+            Table::Linear(t) => {
+                let p = t.prefetch_target(set, idx);
+                [p, p]
+            }
+            Table::Irt(t) => t.prefetch_targets(set, idx),
+        }
+    }
+
     /// True if `idx` currently has an identity mapping (iRT short-circuits
     /// through its leaf-allocation bitmap).
     #[inline]

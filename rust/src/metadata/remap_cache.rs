@@ -120,6 +120,24 @@ impl RemapCache {
         k & (self.sets - 1)
     }
 
+    /// The exact SoA lane addresses a [`RemapCache::probe`] of `key` will
+    /// touch — the start of the key's set in the tag, timestamp, and value
+    /// lanes (a set's ways are contiguous in each lane, so one line per
+    /// lane covers the whole scan for realistic way counts). Read-only:
+    /// no LRU tick, no stats, no mutation — the batched translate stage
+    /// (DESIGN.md §15) feeds these to
+    /// [`prefetch_read`](crate::hybrid::prefetch::prefetch_read), which
+    /// never dereferences them.
+    #[inline]
+    pub fn prefetch_targets(&self, key: BlockId) -> [*const u8; 3] {
+        let base = (self.set_of(key) * self.ways as u64) as usize;
+        [
+            self.tags[base..].as_ptr().cast(),
+            self.last[base..].as_ptr().cast(),
+            self.vals[base..].as_ptr().cast(),
+        ]
+    }
+
     /// Look up `key`; LRU-refreshes on hit.
     #[inline]
     pub fn probe(&mut self, key: BlockId) -> Option<u32> {

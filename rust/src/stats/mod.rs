@@ -106,6 +106,14 @@ pub struct Stats {
     /// retry exhaustion).
     pub fault_quarantined: u64,
 
+    // ---- batched translate (DESIGN.md §15) ----
+    /// Accesses the phase-1 batch walk issued software prefetches for
+    /// (telemetry of the host-side prefetch stage; the only counter that
+    /// legitimately differs between prefetch-on and prefetch-off runs —
+    /// every other counter is locked byte-identical by
+    /// `rust/tests/prefetch_parity.rs`).
+    pub batch_prefetches: u64,
+
     // ---- metadata storage (sampled at end of run) ----
     /// Bytes of remap-table storage currently allocated in the fast tier.
     pub metadata_bytes_used: u64,
@@ -185,6 +193,7 @@ macro_rules! with_stat_counters {
             (fault_scrubbed, sum),
             (fault_rebuilt, sum),
             (fault_quarantined, sum),
+            (batch_prefetches, sum),
             (metadata_bytes_used, gauge),
             (metadata_bytes_reserved, gauge),
             (donated_slots, gauge),
@@ -357,11 +366,11 @@ mod tests {
 
     #[test]
     fn canonical_serializes_the_full_vector() {
-        // Every one of the 46 counters must appear — `cache_accesses` was
+        // Every one of the 47 counters must appear — `cache_accesses` was
         // historically omitted, leaving golden snapshots blind to it.
         let s = Stats { cache_accesses: 7, ..Default::default() };
         let c = s.canonical();
-        assert_eq!(c.matches('=').count(), 46);
+        assert_eq!(c.matches('=').count(), 47);
         assert!(c.ends_with("cache_accesses=7"), "{c}");
     }
 
@@ -373,7 +382,7 @@ mod tests {
         let c = Stats::default().canonical();
         assert_eq!(c.matches('=').count(), NUM_STAT_COUNTERS);
         assert_eq!(c.split(';').count(), NUM_STAT_COUNTERS);
-        assert_eq!(NUM_STAT_COUNTERS, 46);
+        assert_eq!(NUM_STAT_COUNTERS, 47);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use trimma::config::presets::{self, DesignPoint};
 use trimma::engine::AnyController;
-use trimma::hybrid::Controller;
+use trimma::hybrid::{Access, Controller};
 use trimma::types::{AccessKind, Rng64};
 
 static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
@@ -65,18 +65,45 @@ fn drive<C: Controller>(c: &mut C, rng: &mut Rng64, t: &mut u64, n: u64, span: u
     }
 }
 
+/// Same traffic shape as [`drive`], but pushed through the batched
+/// [`Controller::access_block`] entry point in 64-access blocks — the path
+/// the two-phase prefetched translate walk lives on. The batch is a stack
+/// array, so the walk itself is the only thing under test.
+fn drive_batch<C: Controller>(c: &mut C, rng: &mut Rng64, t: &mut u64, batches: u64, span: u64) {
+    let f = c.layout().fast_per_set;
+    let sets = c.layout().num_sets as u64;
+    let mut batch = [Access::default(); 64];
+    for _ in 0..batches {
+        for slot in batch.iter_mut() {
+            let set = rng.next_below(sets) as u32;
+            let idx = f + rng.next_below(span);
+            let kind = if rng.chance(0.3) { AccessKind::Write } else { AccessKind::Read };
+            *t += 700;
+            *slot = Access { set, idx, line: 0, kind, now: *t };
+        }
+        c.access_block(&batch);
+    }
+}
+
 #[test]
 fn translate_path_is_allocation_free_in_steady_state() {
     // Each design point runs plain and (where the remap table supports it)
     // with the decay sweep firing hard — epoch every 64 per-set accesses,
     // no pressure gate, one-epoch coldness — since the sweep shares the
-    // steady-state path and must live off preallocated scratch too.
-    for (dp, decay) in [
-        (DesignPoint::TrimmaCache, false),
-        (DesignPoint::TrimmaFlat, false),
-        (DesignPoint::LinearCache, false),
-        (DesignPoint::TrimmaCache, true),
-        (DesignPoint::TrimmaFlat, true),
+    // steady-state path and must live off preallocated scratch too. The
+    // prefetch variants additionally push batched traffic through
+    // `access_block` inside the measured window: the phase-1
+    // `prefetch_targets` walk must be allocation-free as well.
+    for (dp, decay, prefetch) in [
+        (DesignPoint::TrimmaCache, false, false),
+        (DesignPoint::TrimmaFlat, false, false),
+        (DesignPoint::LinearCache, false, false),
+        (DesignPoint::TrimmaCache, true, false),
+        (DesignPoint::TrimmaFlat, true, false),
+        (DesignPoint::TrimmaCache, false, true),
+        (DesignPoint::TrimmaFlat, false, true),
+        (DesignPoint::LinearCache, false, true),
+        (DesignPoint::TrimmaCache, true, true),
     ] {
         let mut cfg = presets::hbm3_ddr5(dp);
         cfg.hybrid.fast_bytes = 1 << 20;
@@ -89,6 +116,7 @@ fn translate_path_is_allocation_free_in_steady_state() {
             cfg.hybrid.decay.sweep_budget = 128;
             cfg.hybrid.decay.cold_epochs = 1;
         }
+        cfg.hybrid.batch.prefetch = prefetch;
         // The enum-dispatched engine path must stay allocation-free too.
         let mut c = AnyController::from_config(&cfg, false);
         let span = c.layout().slow_per_set.min(6000);
@@ -101,16 +129,28 @@ fn translate_path_is_allocation_free_in_steady_state() {
 
         let before = ALLOC_EVENTS.load(Ordering::Relaxed);
         drive(&mut c, &mut rng, &mut t, 20_000, span);
+        if prefetch {
+            // 312 x 64 = 19,968 batched accesses, each prefetched exactly
+            // once by the two-phase walk — all inside the counted window.
+            drive_batch(&mut c, &mut rng, &mut t, 312, span);
+        }
         let delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
         assert_eq!(
             delta, 0,
-            "{dp:?} (decay={decay}): {delta} heap allocation(s) on the \
-             steady-state translate path"
+            "{dp:?} (decay={decay}, prefetch={prefetch}): {delta} heap \
+             allocation(s) on the steady-state translate path"
         );
 
         // The controller still works and saw the traffic; the decay
-        // variants really exercised the sweep inside the measured window.
-        assert_eq!(c.stats().mem_accesses, 80_000);
+        // variants really exercised the sweep inside the measured window,
+        // and the prefetch variants really walked every batched access.
+        let expected = 80_000 + if prefetch { 19_968 } else { 0 };
+        assert_eq!(c.stats().mem_accesses, expected);
+        assert_eq!(
+            c.stats().batch_prefetches,
+            if prefetch { 19_968 } else { 0 },
+            "{dp:?}: two-phase walk must touch each batched access exactly once"
+        );
         if decay {
             assert!(
                 c.stats().decay_checked > 0,

@@ -1,0 +1,158 @@
+//! Batched-prefetch parity: the headline invariant of the two-phase
+//! prefetched translate stage (DESIGN.md §15) is that it is
+//! **semantically invisible** — phase 1 only walks read-only
+//! `prefetch_targets` addresses and issues `prefetch` hints, phase 2 runs
+//! the exact per-access loop the non-prefetched path runs, in the exact
+//! original order. So the merged canonical stat vector of a prefetch-on
+//! run must equal the prefetch-off run byte-for-byte once the
+//! `batch_prefetches` counter itself (the only counter the walk touches)
+//! is stripped; and with prefetch on on *both* sides, runs must stay
+//! byte-identical — `batch_prefetches` included — across shard counts and
+//! across the inline/pipelined front ends, because every access passes
+//! through `access_block` exactly once in the sharded model.
+
+mod common;
+
+use trimma::config::presets::{self, DesignPoint};
+use trimma::config::SystemConfig;
+use trimma::engine::EngineBuilder;
+use trimma::sim::SimReport;
+use trimma::workloads::adversarial::ADVERSARIAL;
+
+fn run(
+    dp: DesignPoint,
+    cfg: &SystemConfig,
+    wl: &str,
+    shards: usize,
+    pipeline: bool,
+    prefetch: bool,
+) -> SimReport {
+    EngineBuilder::from_config(cfg.clone())
+        .workload(wl)
+        .ideal(dp == DesignPoint::Ideal)
+        .shards(shards)
+        .pipeline(pipeline)
+        .prefetch(prefetch)
+        .run_sharded()
+        .unwrap_or_else(|e| panic!("{dp:?}/{wl} x{shards} prefetch={prefetch}: {e}"))
+}
+
+/// Drop one `name=value` pair from a canonical stat string — the on/off
+/// comparisons below strip `batch_prefetches`, which by design is the only
+/// counter allowed to differ between the two modes.
+fn strip(canon: &str, counter: &str) -> String {
+    let prefix = format!("{counter}=");
+    canon.split(';').filter(|p| !p.starts_with(&prefix)).collect::<Vec<_>>().join(";")
+}
+
+/// The full matrix: every design point x every adversarial scenario,
+/// prefetch off vs on. Everything except the `batch_prefetches` count must
+/// be byte-identical; the off run must never prefetch, and the on run must
+/// actually walk batches on every non-ideal design point.
+#[test]
+fn prefetch_never_changes_the_canonical_stats() {
+    for dp in DesignPoint::ALL {
+        let cfg = common::tiny(*dp);
+        for wl in ADVERSARIAL {
+            let off = run(*dp, &cfg, wl, 1, false, false);
+            assert!(off.stats.mem_accesses > 0, "{dp:?}/{wl}: nothing reached memory");
+            assert_eq!(off.stats.batch_prefetches, 0, "{dp:?}/{wl}: off run prefetched");
+            let on = run(*dp, &cfg, wl, 1, false, true);
+            // Only the remap-backed design points carry the two-phase
+            // walk; the tag-based controllers (Alloy, Loh-Hill) and the
+            // metadata-free Ideal oracle use the default per-access loop
+            // and must leave the counter at zero even with the knob on.
+            let walks = matches!(
+                *dp,
+                DesignPoint::TrimmaCache
+                    | DesignPoint::TrimmaFlat
+                    | DesignPoint::LinearCache
+                    | DesignPoint::MemPod
+            );
+            if walks {
+                assert!(
+                    on.stats.batch_prefetches > 0,
+                    "{dp:?}/{wl}: prefetch-on run never walked a batch"
+                );
+            } else {
+                assert_eq!(
+                    on.stats.batch_prefetches, 0,
+                    "{dp:?}/{wl}: a non-remap controller prefetched"
+                );
+            }
+            assert_eq!(
+                strip(&on.stats.canonical(), "batch_prefetches"),
+                strip(&off.stats.canonical(), "batch_prefetches"),
+                "{dp:?}/{wl}: the prefetched walk changed observable behavior"
+            );
+        }
+    }
+}
+
+/// With prefetch on on both sides, no stripping: the reference 1-shard
+/// inline run must be reproduced byte-for-byte — `batch_prefetches`
+/// included — at 1, 2, and 4 shards, inline and pipelined. Every access
+/// flows through `access_block` exactly once regardless of sharding, so
+/// even the prefetch count is invariant.
+#[test]
+fn prefetch_on_is_byte_identical_across_shards_and_pipeline() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+        let cfg = common::tiny(dp);
+        let base = run(dp, &cfg, "adv_set_thrash", 1, false, true);
+        assert!(base.stats.batch_prefetches > 0, "{dp:?}: reference run never prefetched");
+        let base_canon = base.stats.canonical();
+        for n in [1usize, 2, 4] {
+            for pipeline in [false, true] {
+                let got = run(dp, &cfg, "adv_set_thrash", n, pipeline, true).stats.canonical();
+                assert_eq!(
+                    got, base_canon,
+                    "{dp:?}: prefetch-on {n}-shard pipeline={pipeline} run diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The differential remap oracle composes with the prefetch knob: the
+/// checked controller wraps the real one behind the per-access `access`
+/// entry point (it carries no `access_block` override), so under `verify`
+/// the prefetched walk is simply never reached — the run must stay green
+/// and the counter must stay zero.
+#[test]
+fn prefetch_composes_with_the_differential_oracle() {
+    for dp in [DesignPoint::TrimmaCache, DesignPoint::TrimmaFlat, DesignPoint::LinearCache] {
+        let cfg = presets::with_verify(common::tiny(dp));
+        let rep = run(dp, &cfg, "adv_migration_storm", 2, true, true);
+        assert!(rep.stats.mem_accesses > 0, "{dp:?}");
+        assert_eq!(
+            rep.stats.batch_prefetches, 0,
+            "{dp:?}: the checked controller must keep the prefetched walk inert"
+        );
+    }
+}
+
+/// Prefetch composes with the other steady-state subsystems riding the
+/// same translate path: with decay and fault injection both firing, the
+/// on/off runs must still agree on everything but the prefetch counter.
+#[test]
+fn prefetch_composes_with_decay_and_faults() {
+    let cfg = common::tiny(DesignPoint::TrimmaCache);
+    let build = |prefetch: bool| {
+        EngineBuilder::from_config(cfg.clone())
+            .workload("adv_metadata_bloat")
+            .shards(2)
+            .decay(true)
+            .faults(true)
+            .prefetch(prefetch)
+            .run_sharded()
+            .unwrap_or_else(|e| panic!("decay+faults prefetch={prefetch}: {e}"))
+    };
+    let off = build(false);
+    let on = build(true);
+    assert!(on.stats.batch_prefetches > 0, "composed run never prefetched");
+    assert_eq!(
+        strip(&on.stats.canonical(), "batch_prefetches"),
+        strip(&off.stats.canonical(), "batch_prefetches"),
+        "prefetch changed behavior under decay + fault injection"
+    );
+}

@@ -12,7 +12,7 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 echo "==> recording BENCH_baseline.json (quick suite, tag 'baseline')"
-cargo run --release -- bench --quick --tag baseline --json BENCH_baseline.json --shards 2 --pipeline --decay --faults --tenants --trace
+cargo run --release -- bench --quick --tag baseline --json BENCH_baseline.json --shards 2 --pipeline --decay --faults --tenants --trace --prefetch
 
 echo "==> blessing rust/tests/golden/stats.json and trace_stats.json"
 TRIMMA_BLESS=1 cargo test -q --test golden
